@@ -1,0 +1,31 @@
+"""Paper Figure 6: beam-search inference tokens/s vs llama.cpp-style
+static split, widths 4–16, input 32 / output 64."""
+from benchmarks.common import emit, engine_for
+
+WIDTHS = [4, 8, 12, 16]
+
+
+def run(model: str = "mixtral-8x7b", envs=("env1", "env2"),
+        fast: bool = False):
+    widths = WIDTHS[:2] if fast else WIDTHS
+    summary = {}
+    for env in envs:
+        ratios = []
+        for w in widths:
+            res = {}
+            for policy in ("fiddler", "static_split"):
+                eng = engine_for(model, policy, env)
+                r = eng.simulate_generate(prompt_len=32, gen_len=64, batch=w)
+                res[policy] = r["tokens_per_s"]
+                emit(f"beam/{env}/{policy}/w{w}", r["itl"] * 1e6,
+                     f"tok_per_s={r['tokens_per_s']:.2f}")
+            ratios.append(res["fiddler"] / res["static_split"])
+        avg = sum(ratios) / len(ratios)
+        emit(f"beam/{env}/avg_speedup", 0.0,
+             f"{avg:.2f}x (paper: 11.57x avg vs llama.cpp)")
+        summary[env] = avg
+    return summary
+
+
+if __name__ == "__main__":
+    run()

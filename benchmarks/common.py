@@ -1,0 +1,48 @@
+"""Shared benchmark helpers.
+
+Benchmarks report two kinds of numbers:
+* REAL numerics / wall-clock of this container's kernels (microbench),
+* SIMULATED latencies at paper scale from the calibrated cost model —
+  the policies are real (the paper's Algorithm 1 vs baselines); only the
+  hardware clock is modelled, since this container has no GPU/TPU.
+"""
+import csv
+import io
+import sys
+import time
+from typing import Dict, Iterable, List
+
+from repro.configs import get_config
+from repro.core import FiddlerEngine, HardwareSpec
+
+ENVS = {
+    "env1": HardwareSpec.paper_env1(),   # Quadro RTX 6000 + Xeon Gold (paper)
+    "env2": HardwareSpec.paper_env2(),   # RTX 6000 Ada + Xeon Platinum (paper)
+    "tpuhost": HardwareSpec(),           # TPU v5e + host (this repo's target)
+}
+
+POLICIES = ("fiddler", "offload", "static_split")
+
+_rows: List[Dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV row in the required ``name,us_per_call,derived`` format."""
+    _rows.append({"name": name, "us_per_call": us_per_call,
+                  "derived": derived})
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def engine_for(model_name: str, policy: str, env: str, seed: int = 0,
+               dataset_seed: int = 0, **kw) -> FiddlerEngine:
+    cfg = get_config(model_name)
+    return FiddlerEngine(cfg, policy=policy, hw=ENVS[env], seed=seed, **kw)
+
+
+def timeit(fn, iters: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters

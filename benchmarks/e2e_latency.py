@@ -1,0 +1,45 @@
+"""Paper Figure 4 (+ Figures 11/12): end-to-end single-request tokens/s for
+15 input/output-length configurations, Fiddler vs baselines, both paper
+environments.  ``--breakdown`` adds the TTFT/ITL split (Fig. 11/12)."""
+import itertools
+
+from benchmarks.common import ENVS, POLICIES, emit, engine_for
+
+IN_LENS = [32, 64, 128, 256]
+OUT_LENS = [64, 128, 256, 512]
+# the paper uses 15 of the 16 combinations (drops 256/512)
+CONFIGS = [c for c in itertools.product(IN_LENS, OUT_LENS)
+           if c != (256, 512)]
+
+
+def run(model: str = "mixtral-8x7b", envs=("env1", "env2"),
+        breakdown: bool = False, fast: bool = False):
+    configs = CONFIGS[:4] if fast else CONFIGS
+    summary = {}
+    for env in envs:
+        per_policy = {p: [] for p in POLICIES}
+        for (n_in, n_out) in configs:
+            for policy in POLICIES:
+                eng = engine_for(model, policy, env)
+                r = eng.simulate_generate(prompt_len=n_in, gen_len=n_out)
+                per_policy[policy].append(r)
+                emit(f"e2e/{env}/{policy}/in{n_in}_out{n_out}",
+                     r["itl"] * 1e6, f"tok_per_s={r['tokens_per_s']:.2f}")
+                if breakdown:
+                    emit(f"ttft/{env}/{policy}/in{n_in}_out{n_out}",
+                         r["ttft"] * 1e6, "")
+                    emit(f"itl/{env}/{policy}/in{n_in}_out{n_out}",
+                         r["itl"] * 1e6, "")
+        means = {p: sum(x["tokens_per_s"] for x in rs) / len(rs)
+                 for p, rs in per_policy.items()}
+        best_baseline = max(means["offload"], means["static_split"])
+        speedup = means["fiddler"] / best_baseline
+        emit(f"e2e/{env}/avg_speedup_vs_best_baseline", 0.0,
+             f"{speedup:.2f}x (paper: 1.26x avg)")
+        summary[env] = (means, speedup)
+    return summary
+
+
+if __name__ == "__main__":
+    import sys
+    run(breakdown="--breakdown" in sys.argv)

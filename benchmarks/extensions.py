@@ -1,0 +1,48 @@
+"""Beyond-paper extensions benchmark: LRU expert cache
+(Mixtral-Offloading-style) on top of each policy, int8 slow tier, and
+adaptive placement under the App.-D distribution shift."""
+from benchmarks.common import ENVS, emit
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.core.popularity import synthetic_profile
+
+
+def run(env: str = "env1", fast: bool = False):
+    full = get_config("mixtral-8x7b")
+    gen = 48 if fast else 128
+    hw = ENVS[env]
+    results = {}
+    for name, kw in [
+        ("fiddler", {}),
+        ("fiddler+int8", {"quantize_slow": True}),
+        ("fiddler+lru64", {"lru_cache_experts": 64}),
+        ("offload", {"policy": "offload"}),
+        ("offload+lru64", {"policy": "offload", "lru_cache_experts": 64}),
+    ]:
+        policy = kw.pop("policy", "fiddler")
+        eng = FiddlerEngine(full, policy=policy, hw=hw, seed=0, **kw)
+        r = eng.simulate_generate(prompt_len=64, gen_len=gen)
+        results[name] = r["tokens_per_s"]
+        emit(f"ext/{env}/{name}", r["itl"] * 1e6,
+             f"tok_per_s={r['tokens_per_s']:.2f}")
+    assert results["fiddler+int8"] > results["fiddler"]
+    assert results["offload+lru64"] > results["offload"]
+
+    # adaptive placement under distribution shift (paper App. D regime)
+    serve = synthetic_profile(full.n_layers, full.moe.n_experts, seed=123,
+                              concentration=3.0)
+    prof = synthetic_profile(full.n_layers, full.moe.n_experts, seed=0)
+    for name, kw in [("static", {}), ("adaptive", {"adaptive": True})]:
+        eng = FiddlerEngine(full, policy="fiddler", hw=hw, seed=0,
+                            profile=prof, **kw)
+        eng.profile = serve
+        r = eng.simulate_generate(prompt_len=64, gen_len=max(gen, 256))
+        results[f"shift/{name}"] = r["tokens_per_s"]
+        emit(f"ext/{env}/shifted_{name}", r["itl"] * 1e6,
+             f"tok_per_s={r['tokens_per_s']:.2f}")
+    assert results["shift/adaptive"] > results["shift/static"]
+    return results
+
+
+if __name__ == "__main__":
+    run()

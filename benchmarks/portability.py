@@ -1,0 +1,22 @@
+"""Paper Appendix E: applicability beyond Mixtral-8x7B — Phi-3.5-MoE
+(vs the offloading baseline, the only one that supports it in the paper)."""
+from benchmarks.common import ENVS, emit, engine_for
+
+
+def run(env: str = "env1", fast: bool = False):
+    results = {}
+    for policy in ("fiddler", "offload"):
+        eng = engine_for("phi-3.5-moe", policy, env)
+        r = eng.simulate_generate(prompt_len=64, gen_len=32 if fast else 128)
+        results[policy] = r["tokens_per_s"]
+        emit(f"phi35/{env}/{policy}", r["itl"] * 1e6,
+             f"tok_per_s={r['tokens_per_s']:.2f}")
+    ratio = results["fiddler"] / results["offload"]
+    emit(f"phi35/{env}/speedup_vs_offload", 0.0,
+         f"{ratio:.2f}x (paper: 6.5x vs DeepSpeed-MII)")
+    assert ratio > 1.0
+    return ratio
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper Figure 5: Time-To-First-Token for long-context prefill
+(512–4096 input tokens), Fiddler vs baselines."""
+from benchmarks.common import POLICIES, emit, engine_for
+
+IN_LENS = [512, 1024, 2048, 4096]
+
+
+def run(model: str = "mixtral-8x7b", envs=("env1", "env2"),
+        fast: bool = False):
+    lens = IN_LENS[:2] if fast else IN_LENS
+    summary = {}
+    for env in envs:
+        ttfts = {p: [] for p in POLICIES}
+        for n_in in lens:
+            for policy in POLICIES:
+                eng = engine_for(model, policy, env)
+                t = eng.simulate_prefill(n_in)
+                ttfts[policy].append(t)
+                emit(f"prefill/{env}/{policy}/in{n_in}", t * 1e6,
+                     f"ttft_s={t:.3f}")
+        mean = {p: sum(v) / len(v) for p, v in ttfts.items()}
+        emit(f"prefill/{env}/fiddler_vs_offload", 0.0,
+             f"{mean['offload'] / mean['fiddler']:.2f}x (paper: 1.07x vs DS-MII)")
+        emit(f"prefill/{env}/fiddler_vs_static", 0.0,
+             f"{mean['static_split'] / mean['fiddler']:.2f}x")
+        summary[env] = mean
+    return summary
+
+
+if __name__ == "__main__":
+    run()

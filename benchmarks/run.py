@@ -1,0 +1,64 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus section headers on stderr).
+
+  Fig. 4 / 11 / 12  e2e_latency        Fig. 5   prefill_ttft
+  Fig. 6            beam_search        Fig. 7   microbench
+  Table 2           sparsity           Fig. 8 / App. C popularity
+  Fig. 9 (App. D)   dataset_sensitivity
+  App. E            portability (Phi-3.5-MoE)
+  Dry-run roofline  roofline (reads experiments/*.json)
+
+``python -m benchmarks.run [--full]`` — default is the fast subset so the
+whole harness completes in minutes on CPU; --full runs every paper
+configuration.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = "--full" not in sys.argv
+    from benchmarks import (
+        beam_search,
+        dataset_sensitivity,
+        e2e_latency,
+        extensions,
+        microbench,
+        popularity,
+        portability,
+        prefill_ttft,
+        roofline,
+        sparsity,
+    )
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("fig4_e2e_latency", lambda: e2e_latency.run(breakdown=True, fast=fast)),
+        ("fig5_prefill_ttft", lambda: prefill_ttft.run(fast=fast)),
+        ("fig6_beam_search", lambda: beam_search.run(fast=fast)),
+        ("fig7_microbench", lambda: microbench.run(fast=fast)),
+        ("table2_sparsity", lambda: sparsity.run(fast=fast)),
+        ("fig8_popularity", lambda: popularity.run(fast=fast)),
+        ("fig9_dataset_sensitivity", lambda: dataset_sensitivity.run(fast=fast)),
+        ("appE_portability", lambda: portability.run(fast=fast)),
+        ("beyond_paper_extensions", lambda: extensions.run(fast=fast)),
+        ("roofline", roofline.report),
+    ]
+    failures = []
+    for name, fn in sections:
+        print(f"# === {name} ===", file=sys.stderr)
+        try:
+            fn()
+        except FileNotFoundError as e:
+            print(f"# {name}: skipped ({e})", file=sys.stderr)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED sections: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

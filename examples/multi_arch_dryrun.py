@@ -1,0 +1,63 @@
+"""Example: select any assigned architecture with --arch and either run a
+reduced smoke step on CPU or lower the full config for the production mesh.
+
+    PYTHONPATH=src python examples/multi_arch_dryrun.py --arch gemma2-9b
+    PYTHONPATH=src python examples/multi_arch_dryrun.py --arch kimi-k2-1t-a32b \
+        --dryrun --shape decode_32k
+"""
+import argparse
+import subprocess
+import sys
+
+
+def smoke(arch: str):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import applicable_shapes, get_config
+    from repro.models import Model, lm_loss
+
+    cfg = get_config(arch)
+    print(f"{arch}: {cfg.arch_type} {cfg.n_layers}L d={cfg.d_model} "
+          f"{cfg.param_count()/1e9:.2f}B params "
+          f"({cfg.active_param_count()/1e9:.2f}B active)")
+    print(f"applicable shapes: {applicable_shapes(cfg)}")
+    r = cfg.reduced()
+    model = Model(r, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 3,
+                                r.vocab_size)
+    extra = None
+    if r.arch_type == "vlm":
+        extra = {"image_embeds": 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (2, 4, r.d_model))}
+    if r.arch_type == "audio":
+        extra = {"frames": 0.02 * jax.random.normal(
+            jax.random.PRNGKey(2), (2, r.encdec.n_audio_frames, r.d_model))}
+    hidden, _ = model.forward_train(params, tokens, extra, remat=False)
+    print(f"reduced smoke forward: hidden={hidden.shape} "
+          f"finite={bool(jnp.all(jnp.isfinite(hidden)))}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower the FULL config on the 256-chip mesh "
+                         "(subprocess with 512 host devices)")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    smoke(args.arch)
+    if args.dryrun:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        print(f"\nlowering full config: {' '.join(cmd)}")
+        sys.exit(subprocess.run(cmd).returncode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Config registry. Importing this package registers all architectures."""
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    applicable_shapes,
+    get_config,
+    list_archs,
+)
+
+# Register all architectures (import side effects).
+from repro.configs import (  # noqa: F401
+    gemma2_9b,
+    internvl2_76b,
+    kimi_k2_1t_a32b,
+    mamba2_2p7b,
+    mixtral_8x22b,
+    mixtral_8x7b,
+    phi35_moe,
+    qwen3_0p6b,
+    qwen3_4b,
+    recurrentgemma_2b,
+    stablelm_3b,
+    whisper_large_v3,
+)
+
+ASSIGNED_ARCHS = [
+    "kimi-k2-1t-a32b",
+    "mixtral-8x22b",
+    "mamba2-2.7b",
+    "whisper-large-v3",
+    "internvl2-76b",
+    "stablelm-3b",
+    "qwen3-4b",
+    "recurrentgemma-2b",
+    "gemma2-9b",
+    "qwen3-0.6b",
+]

@@ -1,0 +1,295 @@
+"""Config system for the repro framework.
+
+Every architecture is described by a :class:`ModelConfig` dataclass.  Configs
+are registered in a global registry keyed by their public ``--arch`` id, and
+each registered config cites its source (paper / model card).
+
+Input shapes (the four assigned workload shapes) are described by
+:class:`InputShape` and registered in ``INPUT_SHAPES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts settings for routed FFN layers."""
+
+    n_experts: int
+    top_k: int
+    # capacity factor used by the capacity-bucketed dispatch.
+    capacity_factor: float = 1.25
+    # number of shared (always-on) experts, DeepSeek/Kimi style.
+    n_shared_experts: int = 0
+    # router type: "softmax" (Mixtral) or "sigmoid" (Kimi/DeepSeek-V3 style)
+    router_type: str = "softmax"
+    # router logits jitter/aux-loss coefficient for training.
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) settings."""
+
+    state_dim: int = 128
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk_size: int = 256
+    expand: int = 2
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style hybrid (RG-LRU + local attention) settings."""
+
+    lru_width: int = 2560
+    # pattern period: 1 attention layer per `period` layers (1:2 → period 3
+    # in the paper is 2 recurrent + 1 local-attn; RG uses (R,R,A) repeating)
+    attn_period: int = 3
+    window: int = 2048
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    """Encoder-decoder (Whisper) settings. Frontend is stubbed: the encoder
+    consumes precomputed frame embeddings of shape (n_frames, d_model)."""
+
+    n_encoder_layers: int = 32
+    n_audio_frames: int = 1500  # 30s of audio after conv frontend (stubbed)
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    """VLM (InternVL2) settings. Vision tower is stubbed: ``input_specs``
+    provides projected patch embeddings interleaved with text tokens."""
+
+    n_image_tokens: int = 256  # tokens per image tile after pixel-shuffle
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    # --- attention variants -------------------------------------------------
+    qk_norm: bool = False
+    # sliding window size; None → full attention. "alternating" archs set
+    # window and attn_pattern.
+    window: Optional[int] = None
+    # attention pattern: "full" | "sliding" | "alternating" (local/global,
+    # gemma2) — alternating means even layers local (window), odd global.
+    attn_pattern: str = "full"
+    logit_softcap: Optional[float] = None  # gemma2 final-logit softcap
+    attn_softcap: Optional[float] = None  # gemma2 attention softcap
+    rope_theta: float = 10000.0
+    # --- sub-configs ---------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # --- misc ----------------------------------------------------------------
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # gemma-family sqrt(d) embedding scale
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    citation: str = ""
+    # dtype for parameters in dry-run / deployment
+    param_dtype: str = "bfloat16"
+    # sliding-window variant opt-in for long-context decode on dense archs
+    # (beyond-paper option; see DESIGN.md §5). None → arch default.
+    long_context_window: Optional[int] = None
+
+    # ---------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    # ---- derived quantities ----------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.arch_type == "ssm"
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic total parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d
+        head = 0 if self.tie_embeddings else v * d
+        if self.arch_type == "ssm":
+            assert self.ssm is not None
+            inner = self.ssm.expand * d
+            n_heads = inner // self.ssm.head_dim
+            # in/out projections + conv + SSM params (A, D, dt) + norm
+            per_layer = (
+                d * (2 * inner + 2 * self.ssm.n_groups * self.ssm.state_dim + n_heads)
+                + inner * d
+                + self.ssm.conv_width * (inner + 2 * self.ssm.n_groups * self.ssm.state_dim)
+                + 3 * n_heads
+                + 2 * d
+            )
+            return emb + head + self.n_layers * per_layer + d
+
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.moe is not None:
+            dense_ff = 3 * d * f * (self.moe.n_experts + self.moe.n_shared_experts)
+            router = d * self.moe.n_experts
+            ffn = dense_ff + router
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d  # two RMSNorms
+        total = emb + head + self.n_layers * per_layer + d  # final norm
+        if self.arch_type == "audio" and self.encdec is not None:
+            # encoder blocks (dense, self-attn only) + cross-attn in decoder
+            enc_per_layer = attn + 3 * d * f + 2 * d
+            total += self.encdec.n_encoder_layers * enc_per_layer
+            total += self.n_layers * (attn + d)  # cross-attention + norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full = self.param_count()
+        all_experts = 3 * d * f * self.moe.n_experts * self.n_layers
+        active = 3 * d * f * (self.moe.top_k + self.moe.n_shared_experts) * self.n_layers
+        return full - all_experts + active
+
+    def supports_long_context(self) -> bool:
+        """True if the arch can decode at 500k+ context sub-quadratically
+        (SSM / hybrid / sliding-window, or dense w/ the window variant)."""
+        if self.arch_type == "ssm" or self.arch_type == "hybrid":
+            return True
+        if self.window is not None or self.attn_pattern in ("sliding", "alternating"):
+            return True
+        return self.long_context_window is not None
+
+    def supports_decode(self) -> bool:
+        return True  # all assigned archs have a decoder stream
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256, max_experts: int = 4) -> "ModelConfig":
+        """A smoke-test variant of the same family: ≤2 layers, d_model≤512,
+        ≤4 experts, tiny vocab — runs a real fwd/train step on CPU."""
+        d = min(d_model, 512)
+        n_heads = max(2, min(self.n_heads, 4))
+        head_dim = max(32, d // n_heads)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        kwargs = dict(
+            name=self.name + "-smoke",
+            n_layers=min(n_layers, self.n_layers),
+            d_model=d,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=max(64, d * 2) if self.d_ff else 0,
+            vocab_size=512,
+        )
+        if self.moe is not None:
+            kwargs["moe"] = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, max_experts),
+                top_k=min(self.moe.top_k, 2),
+                n_shared_experts=min(self.moe.n_shared_experts, 1),
+            )
+        if self.ssm is not None:
+            kwargs["ssm"] = dataclasses.replace(
+                self.ssm, state_dim=32, head_dim=32, chunk_size=32
+            )
+        if self.hybrid is not None:
+            kwargs["hybrid"] = dataclasses.replace(
+                self.hybrid, lru_width=d, window=64
+            )
+            # one full (R, R, A) period so the smoke test covers both kinds
+            kwargs["n_layers"] = min(self.hybrid.attn_period, self.n_layers)
+        if self.encdec is not None:
+            kwargs["encdec"] = dataclasses.replace(
+                self.encdec, n_encoder_layers=2, n_audio_frames=16
+            )
+        if self.window is not None:
+            kwargs["window"] = min(self.window, 64)
+        return dataclasses.replace(self, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        # import side effects: all config modules register on import
+        from repro import configs as _c  # noqa: F401
+
+    if arch_id not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> List[str]:
+    from repro import configs as _c  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[str]:
+    """Which of the four assigned input shapes apply to this arch
+    (DESIGN.md §5 skip rules)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context():
+        shapes.append("long_500k")
+    return shapes

@@ -1,0 +1,30 @@
+"""Gemma2-9B [arXiv:2408.00118] — local+global alternating, logit softcap.
+
+42L d_model=3584 16H (GQA kv=8) d_ff=14336 vocab=256000.
+Even layers: sliding window 4096; odd layers: global. Softcaps: attn 50,
+final logits 30.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("gemma2-9b")
+def gemma2_9b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        arch_type="dense",
+        n_layers=42,
+        d_model=3584,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        window=4096,
+        attn_pattern="alternating",
+        logit_softcap=30.0,
+        attn_softcap=50.0,
+        act="gelu",
+        tie_embeddings=True,
+        scale_embeddings=True,
+        citation="[arXiv:2408.00118] Gemma 2",
+    )

@@ -1,0 +1,25 @@
+"""InternVL2-76B [arXiv:2404.16821] — InternViT + InternLM2; ViT STUBBED.
+
+Language backbone: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+The vision encoder + MLP projector are stubs — input_specs() provides
+projected patch embeddings interleaved with the text stream.
+"""
+from repro.configs.base import ModelConfig, VLMConfig, register
+
+
+@register("internvl2-76b")
+def internvl2_76b() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        arch_type="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        rope_theta=500000.0,
+        vlm=VLMConfig(n_image_tokens=256),
+        citation="[arXiv:2404.16821] InternVL2 (InternViT + InternLM2)",
+    )

@@ -1,0 +1,31 @@
+"""Kimi K2 — trillion-parameter MoE (paper-table) [arXiv:2501.kimi2].
+
+61L d_model=7168 64H (GQA kv=8) d_ff=2048 (per-expert) vocab=163840,
+MoE 384 experts top-8 (+1 shared expert, DeepSeek-V3 lineage),
+sigmoid router.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("kimi-k2-1t-a32b")
+def kimi_k2_1t_a32b() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        arch_type="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=2048,
+        vocab_size=163840,
+        moe=MoEConfig(
+            n_experts=384,
+            top_k=8,
+            n_shared_experts=1,
+            router_type="sigmoid",
+            capacity_factor=1.25,
+        ),
+        rope_theta=50000.0,
+        citation="[arXiv:2501.kimi2] Kimi K2 — trillion-param MoE",
+    )

@@ -1,0 +1,23 @@
+"""Mamba2-2.7B [arXiv:2405.21060] — SSD (state-space duality), attn-free.
+
+64L d_model=2560 (attention-free) d_ff=0 vocab=50280, ssm_state=128.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+
+@register("mamba2-2.7b")
+def mamba2_2p7b() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        arch_type="ssm",
+        n_layers=64,
+        d_model=2560,
+        n_heads=0,
+        n_kv_heads=0,
+        head_dim=64,
+        d_ff=0,
+        vocab_size=50280,
+        ssm=SSMConfig(state_dim=128, head_dim=64, n_groups=1, conv_width=4,
+                      chunk_size=256, expand=2),
+        citation="[arXiv:2405.21060] Transformers are SSMs (Mamba-2 / SSD)",
+    )

@@ -1,0 +1,25 @@
+"""Mixtral-8x22B [arXiv:2401.04088] — 8 experts top-2, sliding-window attn.
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8e top-2.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("mixtral-8x22b")
+def mixtral_8x22b() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b",
+        arch_type="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=32768,
+        window=4096,
+        attn_pattern="sliding",
+        moe=MoEConfig(n_experts=8, top_k=2, router_type="softmax"),
+        rope_theta=1000000.0,
+        citation="[arXiv:2401.04088] Mixtral of Experts",
+    )

@@ -1,0 +1,26 @@
+"""Mixtral-8x7B [arXiv:2401.04088] — the paper's own evaluation model.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8e top-2,
+SWA 4096. 46.7B total / 12.9B active. Used by benchmarks/e2e_latency.py etc.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("mixtral-8x7b")
+def mixtral_8x7b() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        arch_type="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32000,
+        window=4096,
+        attn_pattern="sliding",
+        moe=MoEConfig(n_experts=8, top_k=2, router_type="softmax"),
+        rope_theta=1000000.0,
+        citation="[arXiv:2401.04088] Mixtral of Experts (paper's eval model)",
+    )

@@ -1,0 +1,25 @@
+"""Phi-3.5-MoE [arXiv:2404.14219] — paper Appendix E portability model.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400, MoE 16 experts top-2,
+vocab 32064.  (Not part of the assigned pool — used by the App. E
+benchmark to show model-agnosticism, like the paper does.)
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+@register("phi-3.5-moe")
+def phi35_moe() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3.5-moe",
+        arch_type="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=6400,
+        vocab_size=32064,
+        moe=MoEConfig(n_experts=16, top_k=2, router_type="softmax"),
+        rope_theta=10000.0,
+        citation="[arXiv:2404.14219] Phi-3.5-MoE (paper App. E)",
+    )

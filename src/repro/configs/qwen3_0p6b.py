@@ -1,0 +1,24 @@
+"""Qwen3-0.6B [hf:Qwen/Qwen3-8B family] — dense, qk_norm, GQA.
+
+28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen3-0.6b")
+def qwen3_0p6b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-0.6b",
+        arch_type="dense",
+        n_layers=28,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=3072,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1000000.0,
+        long_context_window=8192,
+        citation="[hf:Qwen/Qwen3-8B] Qwen3",
+    )

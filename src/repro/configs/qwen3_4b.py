@@ -1,0 +1,24 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family] — dense, qk_norm, GQA.
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen3-4b")
+def qwen3_4b() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        arch_type="dense",
+        n_layers=36,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1000000.0,
+        long_context_window=8192,
+        citation="[hf:Qwen/Qwen3-8B] Qwen3",
+    )

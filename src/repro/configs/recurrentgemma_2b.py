@@ -1,0 +1,26 @@
+"""RecurrentGemma-2B [arXiv:2402.19427] — RG-LRU + local attention, 1:2.
+
+26L d_model=2560 10H (GQA kv=1, MQA) d_ff=7680 vocab=256000.
+Layer pattern repeats (recurrent, recurrent, local-attention).
+"""
+from repro.configs.base import HybridConfig, ModelConfig, register
+
+
+@register("recurrentgemma-2b")
+def recurrentgemma_2b() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        arch_type="hybrid",
+        n_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=7680,
+        vocab_size=256000,
+        act="gelu",
+        hybrid=HybridConfig(lru_width=2560, attn_period=3, window=2048),
+        tie_embeddings=True,
+        scale_embeddings=True,
+        citation="[arXiv:2402.19427] Griffin / RecurrentGemma (RG-LRU)",
+    )

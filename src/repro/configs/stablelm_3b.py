@@ -1,0 +1,23 @@
+"""StableLM-3B [hf:stabilityai/stablelm-2-1_6b family] — dense.
+
+32L d_model=2560 32H (GQA kv=32, i.e. MHA) d_ff=6912 vocab=50304.
+long_500k runs only via the sliding-window variant (beyond-paper opt-in).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("stablelm-3b")
+def stablelm_3b() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-3b",
+        arch_type="dense",
+        n_layers=32,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=80,
+        d_ff=6912,
+        vocab_size=50304,
+        long_context_window=8192,
+        citation="[hf:stabilityai/stablelm-2-1_6b] StableLM",
+    )

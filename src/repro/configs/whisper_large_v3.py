@@ -1,0 +1,26 @@
+"""Whisper large-v3 [arXiv:2212.04356] — enc-dec, conv frontend STUBBED.
+
+Decoder backbone: 32L d_model=1280 20H (kv=20, MHA) d_ff=5120 vocab=51866.
+Encoder: 32L same width; the mel-spectrogram + conv feature extractor is a
+stub — input_specs() provides precomputed frame embeddings (1500, d_model).
+"""
+from repro.configs.base import EncDecConfig, ModelConfig, register
+
+
+@register("whisper-large-v3")
+def whisper_large_v3() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        arch_type="audio",
+        n_layers=32,
+        d_model=1280,
+        n_heads=20,
+        n_kv_heads=20,
+        head_dim=64,
+        d_ff=5120,
+        vocab_size=51866,
+        act="gelu",
+        encdec=EncDecConfig(n_encoder_layers=32, n_audio_frames=1500),
+        tie_embeddings=True,
+        citation="[arXiv:2212.04356] Robust Speech Recognition (Whisper)",
+    )

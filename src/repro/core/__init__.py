@@ -1,0 +1,15 @@
+"""Fiddler's contribution: cost model, placement, planner, orchestrator."""
+from repro.core.cost_model import HardwareSpec, LatencyModel  # noqa: F401
+from repro.core.orchestrator import FiddlerEngine, Ledger  # noqa: F401
+from repro.core.placement import (  # noqa: F401
+    Placement,
+    PlacementReport,
+    fast_tier_expert_budget,
+    hit_rate,
+    place_by_popularity,
+    place_random,
+    place_static_split,
+    place_worst,
+)
+from repro.core.planner import Decision, LayerPlan, plan_layer  # noqa: F401
+from repro.core.popularity import ExpertProfile, synthetic_profile  # noqa: F401

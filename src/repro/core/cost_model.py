@@ -1,0 +1,186 @@
+"""Fiddler's latency model (paper §3.3, Appendix A).
+
+The paper models, per expert and per MoE layer:
+
+* ``gpu_lat(s)``      — fast-tier execution: ~constant in the input size
+  ``s`` because one expert's GEMMs are memory-bandwidth-bound until ``s``
+  reaches MXU saturation (the paper observes the same on GPUs).
+* ``cpu_lat(s)``      — slow-tier execution: ~linear in ``s`` (compute
+  bound).
+* ``transfer_lat()``  — streaming one expert's weights over the host link:
+  constant (weight bytes / link bandwidth).
+* activation transfer — negligible (<1% of a single-input latency, paper
+  App. A), modelled as a small linear term for completeness.
+
+Constants come from either (a) TPU-v5e-flavoured hardware specs (the
+``derive`` constructor — the napkin-math defaults used by benchmarks), or
+(b) runtime measurement of the actual kernels (``calibrate`` — mirrors the
+paper's initialization-phase microbenchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Hardware description (TPU v5e + host, per DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e-host"
+    fast_flops: float = 197e12        # bf16 peak per chip
+    fast_mem_bw: float = 819e9        # HBM GB/s
+    slow_flops: float = 3.3e12        # host CPU bf16 GEMM (AVX512-class, all cores)
+    slow_mem_bw: float = 150e9        # host DRAM
+    link_bw: float = 32e9             # host↔device DMA per host (PCIe-class)
+    ici_bw: float = 50e9              # inter-chip link (roofline collective term)
+    fast_capacity: float = 16e9       # HBM bytes per chip
+    slow_capacity: float = 256e9      # host DRAM bytes
+
+    @staticmethod
+    def paper_env1() -> "HardwareSpec":
+        """Quadro RTX 6000 + Xeon Gold 6126 (paper Table 1), for replaying
+        the paper's setting in benchmarks."""
+        return HardwareSpec(
+            name="paper-env1", fast_flops=16.3e12, fast_mem_bw=672e9,
+            slow_flops=1.3e12, slow_mem_bw=100e9, link_bw=32e9, ici_bw=0.0,
+            fast_capacity=24.576e9, slow_capacity=192e9)
+
+    @staticmethod
+    def paper_env2() -> "HardwareSpec":
+        """RTX 6000 Ada + Xeon Platinum 8480+ (paper Table 1)."""
+        return HardwareSpec(
+            name="paper-env2", fast_flops=91.1e12, fast_mem_bw=960e9,
+            slow_flops=3.8e12, slow_mem_bw=300e9, link_bw=64e9, ici_bw=0.0,
+            fast_capacity=49.140e9, slow_capacity=512e9)
+
+
+# ---------------------------------------------------------------------------
+# Expert geometry
+# ---------------------------------------------------------------------------
+
+
+def expert_weight_bytes(cfg: ModelConfig, bytes_per_param: int = 2) -> int:
+    """3 matrices of (d_model, d_ff) per expert (gate/up/down)."""
+    return 3 * cfg.d_model * cfg.d_ff * bytes_per_param
+
+
+def expert_flops_per_token(cfg: ModelConfig) -> float:
+    return 2.0 * 3 * cfg.d_model * cfg.d_ff
+
+
+def activation_bytes(cfg: ModelConfig, s: int, bytes_per_el: int = 2) -> int:
+    return s * cfg.d_model * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# Latency model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LatencyModel:
+    """cpu_lat(s) = cpu_base + cpu_per_token·s         (linear — paper)
+    gpu_lat(s) = gpu_const (+ tiny gpu_per_token·s)    (~constant — paper)
+    transfer_lat() = weight bytes / link bw            (constant)
+    act_transfer(s) = activation bytes / link bw       (negligible)"""
+
+    gpu_const: float
+    gpu_per_token: float
+    cpu_base: float
+    cpu_per_token: float
+    weight_transfer: float
+    act_per_token: float
+
+    def gpu_lat(self, s) -> np.ndarray:
+        s = np.asarray(s, np.float64)
+        return np.where(s > 0, self.gpu_const + self.gpu_per_token * s, 0.0)
+
+    def cpu_lat(self, s) -> np.ndarray:
+        s = np.asarray(s, np.float64)
+        return np.where(s > 0, self.cpu_base + self.cpu_per_token * s
+                        + self.act_per_token * s, 0.0)
+
+    def transfer_lat(self) -> float:
+        return self.weight_transfer
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def derive(cfg: ModelConfig, hw: HardwareSpec = HardwareSpec()
+               ) -> "LatencyModel":
+        """Napkin-math latencies from hardware specs (paper App. A shape)."""
+        wb = expert_weight_bytes(cfg)
+        fl = expert_flops_per_token(cfg)
+        return LatencyModel(
+            # one expert on the fast tier: HBM-bound weight read
+            gpu_const=wb / hw.fast_mem_bw,
+            # MXU time per extra token (tiny until s saturates the MXU)
+            gpu_per_token=fl / hw.fast_flops,
+            # slow tier: DRAM-bound weight read floor (the expert's 3
+            # matrices stream from host memory once per call — this is why
+            # per-beam unbatched execution is catastrophic, paper §2.2)
+            # + compute-bound per-token term
+            cpu_base=wb / hw.slow_mem_bw,
+            cpu_per_token=fl / hw.slow_flops,
+            weight_transfer=wb / hw.link_bw,
+            act_per_token=2 * activation_bytes(cfg, 1) / hw.link_bw,
+        )
+
+    @staticmethod
+    def calibrate(fast_fn: Callable[[int], float],
+                  slow_fn: Callable[[int], float],
+                  transfer_fn: Callable[[], float],
+                  sizes=(1, 2, 4, 8, 16, 32)) -> "LatencyModel":
+        """Fit the model from measured (wall-clock) kernel runs — the
+        paper's initialization-phase measurement.  ``fast_fn(s)``/
+        ``slow_fn(s)`` return seconds for one expert on input size s."""
+        sizes = np.asarray(sizes, np.float64)
+        fast = np.asarray([fast_fn(int(s)) for s in sizes])
+        slow = np.asarray([slow_fn(int(s)) for s in sizes])
+        # linear fits
+        fa = np.polyfit(sizes, fast, 1)
+        sa = np.polyfit(sizes, slow, 1)
+        return LatencyModel(
+            gpu_const=max(float(fa[1]), 1e-9),
+            gpu_per_token=max(float(fa[0]), 0.0),
+            cpu_base=max(float(sa[1]), 0.0),
+            cpu_per_token=max(float(sa[0]), 1e-12),
+            weight_transfer=max(float(transfer_fn()), 1e-9),
+            act_per_token=0.0,
+        )
+
+    # -- the paper's decision rule -------------------------------------------
+    def prefer_cpu(self, s) -> np.ndarray:
+        """Algorithm 1 line 12 (inverted): True → execute on CPU."""
+        return self.cpu_lat(s) <= self.gpu_lat(s) + self.transfer_lat()
+
+    def crossover(self, max_s: int = 1 << 20) -> int:
+        """Input size above which streaming weights beats CPU execution."""
+        lo, hi = 1, max_s
+        if self.prefer_cpu(hi):
+            return max_s
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self.prefer_cpu(mid):
+                lo = mid + 1
+            else:
+                hi = mid
+        return int(lo)
+
+
+def measure(fn: Callable[[], None], iters: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters

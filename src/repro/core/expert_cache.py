@@ -1,0 +1,168 @@
+"""Beyond-paper orchestrator extensions.
+
+1. :class:`LRUExpertCache` — Mixtral-Offloading (Eliseev & Mazur 2023)
+   keeps an LRU cache of recently-streamed experts in spare fast-tier
+   memory.  Fiddler's placement is static; adding the cache on top of
+   Algorithm 1 is strictly complementary: a FAST_STREAM decision inserts
+   the expert, future hits skip both the transfer and the slow path.
+
+2. :class:`AdaptivePlacement` — the paper profiles popularity offline and
+   fixes the placement (§3.4, "popularity is almost universal across
+   domains").  For workloads where that fails (App. D's distribution
+   shift), we maintain an EMA of observed routing and periodically
+   re-place; the swap cost is charged to the simulated clock.
+
+3. int8 expert storage (``quantize=True`` on HostExpert streams /
+   :func:`quantize_expert`) — the paper calls compression orthogonal
+   (§2.2); per-channel symmetric int8 halves stream bytes and doubles
+   the fast-tier expert budget at ~1e-2 relative error.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.placement import Placement
+from repro.core.popularity import ExpertProfile
+
+
+# ---------------------------------------------------------------------------
+# LRU cache of streamed experts
+# ---------------------------------------------------------------------------
+
+
+class LRUExpertCache:
+    """Tracks which streamed experts currently sit in spare fast memory.
+
+    Keys are (layer, expert).  Capacity is in experts (the orchestrator
+    converts spare bytes / expert bytes)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = max(0, int(capacity))
+        self._slots: "OrderedDict[Tuple[int, int], bool]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __contains__(self, key: Tuple[int, int]) -> bool:
+        return key in self._slots
+
+    def lookup(self, layer: int, expert: int) -> bool:
+        key = (layer, expert)
+        if self.capacity and key in self._slots:
+            self._slots.move_to_end(key)
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def insert(self, layer: int, expert: int) -> Optional[Tuple[int, int]]:
+        """Insert after a stream; returns the evicted key (if any)."""
+        if not self.capacity:
+            return None
+        key = (layer, expert)
+        self._slots[key] = True
+        self._slots.move_to_end(key)
+        if len(self._slots) > self.capacity:
+            return self._slots.popitem(last=False)[0]
+        return None
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._slots)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive placement
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AdaptivePlacement:
+    """EMA popularity tracker + periodic greedy re-placement."""
+
+    budget: int
+    decay: float = 0.98
+    refresh_every: int = 256  # layer-steps between re-placements
+
+    def __post_init__(self):
+        self._ema: Optional[np.ndarray] = None
+        self._steps = 0
+        self.replacements = 0
+        self.swapped_experts = 0
+
+    def observe(self, layer: int, counts: np.ndarray, n_layers: int) -> None:
+        if self._ema is None:
+            self._ema = np.zeros((n_layers, counts.shape[0]))
+        self._ema[layer] = self.decay * self._ema[layer] + \
+            (1 - self.decay) * counts
+        self._steps += 1
+
+    def maybe_replace(self, current: Placement) -> Tuple[Placement, int]:
+        """Returns (placement, n_swapped).  n_swapped experts must be
+        streamed in (cost charged by the caller)."""
+        if self._ema is None or self._steps % self.refresh_every != 0:
+            return current, 0
+        from repro.core.placement import place_by_popularity
+
+        prof = ExpertProfile(self._ema + 1e-9)
+        new = place_by_popularity(prof, self.budget)
+        swapped = int((new.on_fast & ~current.on_fast).sum())
+        if swapped == 0:
+            return current, 0
+        self.replacements += 1
+        self.swapped_experts += swapped
+        return new, swapped
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization (per-output-channel symmetric)
+# ---------------------------------------------------------------------------
+
+
+def quantize_expert(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """w: (in, out) fp32 → (int8 (in, out), scale (out,))."""
+    scale = np.abs(w).max(axis=0) / 127.0
+    scale = np.maximum(scale, 1e-12)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+def dequantize_expert(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+class QuantizedHostExpert:
+    """int8 slow-tier expert: half the stream bytes, half the DRAM reads."""
+
+    __slots__ = ("q_gate", "s_gate", "q_up", "s_up", "q_down", "s_down",
+                 "block_f")
+
+    def __init__(self, w_gate, w_up, w_down, block_f: int = 1024):
+        self.q_gate, self.s_gate = quantize_expert(np.asarray(w_gate, np.float32))
+        self.q_up, self.s_up = quantize_expert(np.asarray(w_up, np.float32))
+        self.q_down, self.s_down = quantize_expert(np.asarray(w_down, np.float32))
+        self.block_f = block_f
+
+    def nbytes(self) -> int:
+        return (self.q_gate.size + self.q_up.size + self.q_down.size
+                + 4 * (self.s_gate.size + self.s_up.size + self.s_down.size))
+
+    def weights(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return (dequantize_expert(self.q_gate, self.s_gate),
+                dequantize_expert(self.q_up, self.s_up),
+                dequantize_expert(self.q_down, self.s_down))
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, np.float32)
+        f = self.q_gate.shape[1]
+        out = np.zeros((x.shape[0], self.q_down.shape[1]), np.float32)
+        for j0 in range(0, f, self.block_f):
+            j1 = min(j0 + self.block_f, f)
+            g = (x @ self.q_gate[:, j0:j1].astype(np.float32)) * self.s_gate[j0:j1]
+            u = (x @ self.q_up[:, j0:j1].astype(np.float32)) * self.s_up[j0:j1]
+            h = g / (1.0 + np.exp(-g)) * u
+            out += (h @ self.q_down[j0:j1].astype(np.float32))
+        return out * self.s_down

@@ -1,0 +1,121 @@
+"""Fiddler's execution planner — Algorithm 1 of the paper.
+
+Given the router's per-expert input sizes for one MoE layer, decide for each
+activated expert whether to execute it
+
+* ``FAST_RESIDENT`` — weights already on the fast tier → execute there;
+* ``FAST_STREAM``   — stream weights slow→fast, execute on the fast tier
+  (what offloading systems always do);
+* ``SLOW``          — ship activations to the slow tier and execute there
+  (what llama.cpp effectively does for host layers).
+
+The rule (paper Alg. 1 line 12): stream iff
+``cpu_lat(s) > gpu_lat(s) + transfer_lat()``.
+
+Both a numpy planner (used by the serving orchestrator, where decisions are
+data-dependent python control flow — the paper's system is eager too) and a
+jnp planner (for property tests / potential on-device planning) are
+provided, plus a brute-force optimal baseline used by the hypothesis tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from enum import IntEnum
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost_model import LatencyModel
+
+
+class Decision(IntEnum):
+    SKIP = -1           # expert received no tokens
+    FAST_RESIDENT = 0   # paper Fig. 3 (a)
+    FAST_STREAM = 1     # paper Fig. 3 (b)
+    SLOW = 2            # paper Fig. 3 (c)
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    decisions: np.ndarray        # (E,) Decision values
+    est_fast_time: float         # est. serial time of fast-tier work (s)
+    est_slow_time: float         # est. serial time of slow-tier work (s)
+    est_stream_time: float       # est. weight-streaming time (s)
+
+    @property
+    def est_total(self) -> float:
+        """Non-overlapped estimate (paper's conservative model)."""
+        return self.est_fast_time + self.est_slow_time + self.est_stream_time
+
+    @property
+    def est_overlapped(self) -> float:
+        """Fast tier and slow tier run concurrently (beyond-paper overlap
+        model; streaming serialises with fast-tier compute)."""
+        return max(self.est_fast_time + self.est_stream_time,
+                   self.est_slow_time)
+
+
+def plan_layer(input_sizes: np.ndarray, on_fast: np.ndarray,
+               lat: LatencyModel) -> LayerPlan:
+    """Algorithm 1, vectorised over the experts of one layer.
+
+    input_sizes: (E,) tokens routed to each expert (s in the paper).
+    on_fast:     (E,) bool — is_at_gpu(i, j).
+    """
+    s = np.asarray(input_sizes, np.int64)
+    on_fast = np.asarray(on_fast, bool)
+    E = s.shape[0]
+    dec = np.full(E, int(Decision.SKIP), np.int64)
+
+    active = s > 0
+    # line 10: resident experts always execute on the fast tier
+    dec[active & on_fast] = int(Decision.FAST_RESIDENT)
+    # line 12: cpu_lat(s) > gpu_lat(s) + transfer_lat() → stream to fast
+    missing = active & ~on_fast
+    stream_better = lat.cpu_lat(s) > (lat.gpu_lat(s) + lat.transfer_lat())
+    dec[missing & stream_better] = int(Decision.FAST_STREAM)
+    dec[missing & ~stream_better] = int(Decision.SLOW)
+
+    fast_mask = dec == int(Decision.FAST_RESIDENT)
+    stream_mask = dec == int(Decision.FAST_STREAM)
+    slow_mask = dec == int(Decision.SLOW)
+    est_fast = float(lat.gpu_lat(s)[fast_mask | stream_mask].sum())
+    est_stream = float(stream_mask.sum()) * lat.transfer_lat()
+    est_slow = float(lat.cpu_lat(s)[slow_mask].sum())
+    return LayerPlan(dec, est_fast, est_slow, est_stream)
+
+
+def plan_layer_jnp(input_sizes, on_fast, lat: LatencyModel):
+    """jit-friendly version of Algorithm 1 (same semantics)."""
+    import jax.numpy as jnp
+
+    s = input_sizes.astype(jnp.float32)
+    cpu = jnp.where(s > 0, lat.cpu_base + (lat.cpu_per_token + lat.act_per_token) * s, 0.0)
+    gpu = jnp.where(s > 0, lat.gpu_const + lat.gpu_per_token * s, 0.0)
+    stream_better = cpu > gpu + lat.weight_transfer
+    dec = jnp.where(
+        s <= 0, int(Decision.SKIP),
+        jnp.where(on_fast, int(Decision.FAST_RESIDENT),
+                  jnp.where(stream_better, int(Decision.FAST_STREAM),
+                            int(Decision.SLOW))))
+    return dec
+
+
+def brute_force_plan(input_sizes: np.ndarray, on_fast: np.ndarray,
+                     lat: LatencyModel) -> np.ndarray:
+    """Per-expert exhaustive minimisation of the paper's cost model —
+    the oracle the hypothesis tests compare Algorithm 1 against."""
+    s = np.asarray(input_sizes, np.int64)
+    E = s.shape[0]
+    out = np.full(E, int(Decision.SKIP), np.int64)
+    for j in range(E):
+        if s[j] == 0:
+            continue
+        if on_fast[j]:
+            out[j] = int(Decision.FAST_RESIDENT)
+            continue
+        cost_stream = float(lat.gpu_lat(s[j])) + lat.transfer_lat()
+        cost_slow = float(lat.cpu_lat(s[j]))
+        out[j] = int(Decision.FAST_STREAM) if cost_slow > cost_stream else int(Decision.SLOW)
+    return out

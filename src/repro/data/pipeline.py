@@ -1,0 +1,114 @@
+"""Data pipeline: synthetic ShareGPT-like conversations + batching.
+
+The paper evaluates on ShareGPT (human–chatbot conversations) and
+LMSYS-Chat-1M.  Offline, we generate statistically-similar synthetic
+corpora: Zipf-distributed "word" tokens composed into turns with
+role markers, which (a) exercise the tokenizer/batcher exactly like real
+text and (b) give the popularity profiler a realistic skewed token
+distribution.  ``dataset="lmsys"`` changes the Zipf exponent/seed —
+used by the paper's Appendix D sensitivity study.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import BOS_ID, EOS_ID, ByteTokenizer
+
+_WORDS = [
+    "the", "of", "and", "to", "in", "model", "expert", "token", "layer",
+    "what", "how", "why", "is", "a", "can", "you", "explain", "write",
+    "code", "python", "data", "system", "memory", "fast", "slow", "please",
+    "gpu", "cpu", "batch", "time", "use", "run", "serve", "infer", "train",
+]
+
+
+def _zipf_text(rng: np.random.Generator, n_words: int, alpha: float) -> str:
+    ranks = np.arange(1, len(_WORDS) + 1, dtype=np.float64)
+    p = ranks ** (-alpha)
+    p /= p.sum()
+    return " ".join(rng.choice(_WORDS, size=n_words, p=p))
+
+
+def synthetic_conversations(n: int, seed: int = 0, dataset: str = "sharegpt"
+                            ) -> Iterator[Dict[str, str]]:
+    alpha = 1.1 if dataset == "sharegpt" else 1.4
+    rng = np.random.default_rng(seed + (0 if dataset == "sharegpt" else 777))
+    for i in range(n):
+        n_turns = int(rng.integers(1, 4))
+        turns = []
+        for t in range(n_turns):
+            q = _zipf_text(rng, int(rng.integers(8, 64)), alpha)
+            a = _zipf_text(rng, int(rng.integers(16, 128)), alpha)
+            turns.append(f"USER: {q}\nASSISTANT: {a}\n")
+        yield {"id": f"{dataset}-{i}", "text": "".join(turns)}
+
+
+class TokenStream:
+    """Packs tokenized conversations into fixed-length LM training batches
+    {tokens, labels} (labels = next token, -100 on padding)."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, batch: int,
+                 seed: int = 0, dataset: str = "sharegpt"):
+        self.tok = ByteTokenizer(cfg.vocab_size)
+        self.seq_len = seq_len
+        self.batch = batch
+        self.cfg = cfg
+        self._convs = synthetic_conversations(1 << 30, seed, dataset)
+        self._buf: list = []
+
+    def _fill(self, n_tokens: int) -> None:
+        while len(self._buf) < n_tokens:
+            conv = next(self._convs)
+            self._buf.extend(self.tok.encode(conv["text"]) + [EOS_ID])
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        need = self.batch * (self.seq_len + 1)
+        self._fill(need)
+        flat = np.asarray(self._buf[:need], np.int32)
+        self._buf = self._buf[need:]
+        arr = flat.reshape(self.batch, self.seq_len + 1)
+        return {"tokens": arr[:, :-1].copy(), "labels": arr[:, 1:].copy()}
+
+
+def make_batch_iter(cfg: ModelConfig, seq_len: int, batch: int, seed: int = 0,
+                    dataset: str = "sharegpt", extra_dtype=np.float32
+                    ) -> Iterator[Dict[str, np.ndarray]]:
+    """Training iterator; adds stubbed modality inputs for vlm/audio."""
+    stream = TokenStream(cfg, seq_len, batch, seed, dataset)
+    rng = np.random.default_rng(seed + 1)
+    for b in stream:
+        if cfg.arch_type == "vlm":
+            b["image_embeds"] = rng.standard_normal(
+                (batch, cfg.vlm.n_image_tokens, cfg.d_model)).astype(extra_dtype) * 0.02
+            b["labels"] = np.concatenate(
+                [np.full((batch, cfg.vlm.n_image_tokens), -100, np.int32),
+                 b["labels"]], axis=1)
+        if cfg.arch_type == "audio":
+            b["frames"] = rng.standard_normal(
+                (batch, cfg.encdec.n_audio_frames, cfg.d_model)).astype(extra_dtype) * 0.02
+        yield b
+
+
+def sample_prompts(cfg: ModelConfig, n: int, min_tokens: int, seed: int = 0,
+                   dataset: str = "sharegpt") -> np.ndarray:
+    """Paper §4.1: random ShareGPT samples with ≥ N prompt tokens; take the
+    first N.  Returns (n, min_tokens) int32."""
+    tok = ByteTokenizer(cfg.vocab_size)
+    out = []
+    for conv in synthetic_conversations(1 << 30, seed, dataset):
+        ids = tok.encode(conv["text"])
+        while len(ids) < min_tokens:
+            ids = ids + tok.encode(next(iter(
+                synthetic_conversations(1, seed + len(out), dataset)))["text"],
+                bos=False)
+        out.append(ids[:min_tokens])
+        if len(out) == n:
+            break
+    return np.asarray(out, np.int32)

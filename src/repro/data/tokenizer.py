@@ -1,0 +1,29 @@
+"""Byte-level toy tokenizer (offline container — no external vocab files).
+
+Maps UTF-8 bytes into the model vocabulary with a small reserved-id block,
+hashing bytes upward so any ``vocab_size`` works.  Deterministic, reversible
+for ids < 256 + n_reserved.
+"""
+from __future__ import annotations
+
+from typing import List
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+N_RESERVED = 3
+
+
+class ByteTokenizer:
+    def __init__(self, vocab_size: int):
+        assert vocab_size > 256 + N_RESERVED
+        self.vocab_size = vocab_size
+
+    def encode(self, text: str, bos: bool = True) -> List[int]:
+        ids = [b + N_RESERVED for b in text.encode("utf-8")]
+        return ([BOS_ID] if bos else []) + ids
+
+    def decode(self, ids) -> str:
+        bs = bytes(int(i) - N_RESERVED for i in ids
+                   if N_RESERVED <= int(i) < 256 + N_RESERVED)
+        return bs.decode("utf-8", errors="replace")

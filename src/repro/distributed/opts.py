@@ -1,0 +1,44 @@
+"""Beyond-paper distribution optimization knobs (EXPERIMENTS.md §Perf).
+
+Defaults are the paper-faithful / first-working baseline; the perf pass
+flips them per experiment and records before/after.  Env override:
+``REPRO_OPTS=fsdp_experts,seq_shard_acts,split_ssm_proj``.
+"""
+import os
+
+# FSDP-style expert weights: shard the per-expert d_ff (ep mode) or d_model
+# (tp mode) dimension over the data axes in addition to the expert/model
+# sharding; all-gather one layer's experts inside the shard_map body.
+# Cuts resident expert bytes by the data-axis size (kimi decode:
+# 125 GB/dev → ~8 GB/dev) at the cost of a per-layer all-gather.
+FSDP_EXPERTS = False
+
+# Megatron-style sequence parallelism for the residual stream: activations
+# (and the scan's layer-input remat carries) are sharded over `model` on
+# the sequence axis between blocks.  Cuts train activation memory by the
+# model-axis size; SPMD inserts gather/reduce-scatter pairs around qkv.
+SEQ_SHARD_ACTS = False
+
+# Store the Mamba2 input projection as three separate matrices (z / xBC /
+# dt) instead of one fused (d, 2·inner+2·g·st+nh) matrix whose column
+# split straddles shard boundaries and forces resharding collectives.
+SPLIT_SSM_PROJ = False
+
+
+# Keep K/V tiles and the post-softmax probabilities of chunked attention
+# in bf16 (fp32 max/sum statistics and accumulator are kept): roughly
+# halves the dominant (…, kv_chunk) HBM traffic of the train/prefill
+# shapes at bf16-level numerics.
+BF16_ATTN_SCORES = False
+
+
+def apply_env() -> None:
+    opts = os.environ.get("REPRO_OPTS", "")
+    g = globals()
+    for name in opts.split(","):
+        name = name.strip().upper()
+        if name and name in g:
+            g[name] = True
+
+
+apply_env()

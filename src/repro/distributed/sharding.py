@@ -1,0 +1,253 @@
+"""Sharding rules: parameter / batch / cache pytrees → PartitionSpecs.
+
+Axis layout (DESIGN.md §6):
+  * ``model`` — tensor/expert parallel: vocab, attention heads, d_ff,
+    experts (when divisible), KV-cache window (sequence-parallel decode).
+  * ``data`` (+ ``pod``) — batch parallel; optimizer state is additionally
+    ZeRO-shardable over these axes (perf knob).
+
+Rules are name-based over the pytree paths produced by models/model.py.
+Stacked layer parameters (leading n_periods axis from the scan) are
+detected by rank and get a ``None`` prepended.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import moe_mode
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+# name → (base_rank, spec_tail) where spec_tail applies to the LAST
+# len(spec_tail) dims; leading dims (stacking) are replicated.
+def _param_rules(cfg: ModelConfig, model_axis: str, ep: bool) -> Dict[str, Tuple[int, Tuple]]:
+    M = model_axis
+    rules: Dict[str, Tuple[int, Tuple]] = {
+        "embed": (2, (M, None)),
+        "lm_head": (2, (None, M)),
+        "wq": (2, (None, M)),
+        "wk": (2, (None, M)),
+        "wv": (2, (None, M)),
+        "wo": (2, (M, None)),
+        "w1": (2, (None, M)),
+        "w2": (2, (M, None)),
+        # ssm / rglru
+        "in_proj": (2, (None, M)),
+        "w_z": (2, (None, M)),
+        "w_xbc": (2, (None, M)),
+        "w_dt": (2, (None, M)),
+        "out_proj": (2, (M, None)),
+        "w_x": (2, (None, M)),
+        "w_a": (2, (None, M)),
+        "w_i": (2, (None, M)),
+        "b_a": (1, (M,)),
+        "b_i": (1, (M,)),
+        "lam": (1, (M,)),
+        "w_out": (2, (M, None)),
+        "conv_w": (2, (None, M)),
+        "conv_b": (1, (M,)),
+        "A_log": (1, (None,)),
+        "D": (1, (None,)),
+        "dt_bias": (1, (None,)),
+        "router": (2, (None, None)),
+    }
+    return rules
+
+
+def _moe_expert_rules(cfg: ModelConfig, model_axis: str, model_size: int,
+                      data_axes: Tuple[str, ...]
+                      ) -> Dict[str, Tuple[int, Tuple]]:
+    """Single source of truth: repro.models.moe.moe_param_specs (so the
+    dry-run in_shardings always match the shard_map in_specs), including
+    the FSDP_EXPERTS storage layout."""
+    from repro.distributed import opts
+    from repro.models.moe import moe_param_specs
+
+    specs = moe_param_specs(
+        cfg, model_axis, model_size,
+        fsdp_axes=data_axes if opts.FSDP_EXPERTS else None,
+        fsdp_size=_axes_size(data_axes))
+    return {k: (3, tuple(specs[k])) for k in ("w_gate", "w_up", "w_down")}
+
+
+_AXIS_SIZES: Dict[str, int] = {"pod": 2, "data": 16, "model": 16}
+
+
+def set_axis_sizes(mesh_shape: Dict[str, int]) -> None:
+    """Record the current mesh axis sizes (used for divisibility checks in
+    the name-based rules; defaults match the production mesh)."""
+    _AXIS_SIZES.update(mesh_shape)
+
+
+def _axes_size(axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, (tuple, list)) else [axes]):
+        n *= _AXIS_SIZES.get(a, 1)
+    return n
+
+
+def _tail_spec(leaf, base_rank: int, tail: Tuple) -> P:
+    lead = leaf.ndim - len(tail)
+    assert lead >= 0, (leaf.shape, tail)
+    return P(*((None,) * lead + tuple(tail)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(f"[{p.idx}]")
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def _validate_spec(spec: P, leaf, axis_sizes: Dict[str, int]) -> P:
+    """Drop (replicate) any sharded dim that the axis size doesn't divide."""
+    out = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= axis_sizes.get(a, 1)
+        out.append(entry if leaf.shape[dim] % size == 0 else None)
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape, model_axis: str = "model",
+                 model_size: int = 16,
+                 data_axes: Tuple[str, ...] = ("data",)) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (from eval_shape)."""
+    ep = cfg.moe is not None and moe_mode(cfg, model_size) == "ep"
+    rules = _param_rules(cfg, model_axis, ep)
+    moe_rules = (_moe_expert_rules(cfg, model_axis, model_size, data_axes)
+                 if cfg.moe is not None else {})
+    M = model_axis
+    vocab_ok = cfg.vocab_size % model_size == 0
+    if not vocab_ok:
+        # vocab not divisible (mamba2 50280, whisper 51866): shard d_model
+        # instead; logits become partial sums that SPMD all-reduces.
+        rules["embed"] = (2, (None, M))
+        rules["lm_head"] = (2, (M, None))
+
+    def spec_for(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1]
+        in_moe = "moe" in names
+        in_shared = "shared" in names
+        if in_shared:  # shared expert: plain tensor-parallel gated MLP
+            tails = {"w_gate": (None, M), "w_up": (None, M), "w_down": (M, None)}
+            return _tail_spec(leaf, 2, tails[name])
+        if in_moe and name in moe_rules:
+            base, tail = moe_rules[name]
+            return _tail_spec(leaf, base, tail)
+        if not in_moe and name in ("w_gate", "w_up"):
+            return _tail_spec(leaf, 2, (None, M))
+        if not in_moe and name == "w_down":
+            return _tail_spec(leaf, 2, (M, None))
+        if name in rules:
+            base, tail = rules[name]
+            return _tail_spec(leaf, base, tail)
+        if name in ("scale", "bias"):  # norms
+            return _tail_spec(leaf, 1, (None,))
+        # default: replicate
+        return P(*((None,) * leaf.ndim))
+
+    axis_sizes = {model_axis: model_size}
+
+    def spec_checked(path, leaf) -> P:
+        return _validate_spec(spec_for(path, leaf), leaf, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec_checked, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 mesh_shape: Optional[Dict[str, int]] = None) -> Any:
+    def spec_for(path, leaf):
+        name = _path_names(path)[-1]
+        if name in ("tokens", "labels"):
+            spec = P(data_axes, None)
+        elif name in ("image_embeds", "frames"):
+            spec = P(data_axes, None, None)
+        elif leaf.ndim == 0:
+            return P()
+        else:
+            spec = P(data_axes, *((None,) * (leaf.ndim - 1)))
+        return _validate_spec(spec, leaf, dict(mesh_shape or {}))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shape, global_batch: int,
+                 data_axes: Tuple[str, ...] = ("data",),
+                 model_axis: str = "model",
+                 mesh_shape: Optional[Dict[str, int]] = None) -> Any:
+    """Cache sharding.  The KV window axis is sequence-parallel over
+    ``model`` (GQA kv-heads are usually < model axis size, so head-sharding
+    can't absorb it; softmax reductions over the sharded axis are handled
+    by SPMD).  When the batch doesn't cover the data axes (long_500k B=1),
+    the batch axis is left unsharded and the window takes all axes."""
+    data_size = 1
+    if mesh_shape:
+        for ax in data_axes:
+            data_size *= mesh_shape[ax]
+    batch_ok = data_size > 1 and global_batch % data_size == 0
+
+    b_axes = data_axes if batch_ok else None
+    w_axes = model_axis if batch_ok else tuple(data_axes) + (model_axis,)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        # cross_kv leaves are unnamed tuple members under "cross_kv":
+        # (n_periods, B, Se, n_kv, head_dim)
+        if "cross_kv" in names:
+            full = (None, b_axes, None, None, None)
+            return P(*full[5 - leaf.ndim:])
+        lead = ()
+        nd = leaf.ndim
+        if name in ("k", "v"):
+            base = (b_axes, w_axes, None, None)
+        elif name == "pos":
+            base = (b_axes, w_axes)
+        elif name == "ssm_state":
+            base = (b_axes, model_axis, None, None)
+        elif name == "conv_state":
+            base = (b_axes, None, model_axis)
+        elif name == "h":
+            base = (b_axes, model_axis)
+        else:
+            return P(*((None,) * nd))
+        lead_n = nd - len(base)
+        return P(*((None,) * lead_n + base))
+
+    axis_sizes = dict(mesh_shape or {})
+
+    def spec_checked(path, leaf):
+        return _validate_spec(spec_for(path, leaf), leaf, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(spec_checked, cache_shape)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

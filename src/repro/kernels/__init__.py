@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots + the host
+(slow-tier) kernel.  See DESIGN.md §7 for the GPU→TPU rethinking.
+
+  expert_mlp       fused gated-SiLU expert MLP (VMEM-tiled) — the TPU
+                   analogue of the paper's AVX512_BF16 CPU kernel
+  moe_gmm          grouped per-expert matmul with count-guarded tiles
+  flash_attention  causal/windowed flash attention (VMEM-resident scores)
+  host_expert      the slow-tier bf16 kernel (numpy; paper Fig. 3c path)
+  ops              jit'd wrappers;  ref — pure-jnp oracles
+"""
+from repro.kernels.host_expert import HostExpert, host_expert_mlp  # noqa: F401
+from repro.kernels.ops import expert_mlp_op, moe_gmm_op  # noqa: F401

@@ -1,0 +1,156 @@
+"""Pallas TPU kernel: causal/windowed flash attention.
+
+The §Roofline analysis shows the pure-JAX chunked attention writes its
+(…, kv_chunk) score/probability blocks through HBM every scan step — the
+dominant HBM term for the train/prefill shapes.  This kernel keeps the
+online-softmax state and score tiles resident in VMEM (the standard
+flash-attention structure, tiled for the MXU):
+
+  grid = (B·H, Sq/block_q, Skv/block_k); the kv axis is the sequential
+  inner loop so the (block_q, d)/fp32 (m, l, acc) scratch stays live.
+  Causal/window masking is positional, so fully-masked kv tiles are
+  skipped via ``pl.when`` (no MXU work for the upper triangle / outside
+  the sliding window).
+
+Validated in interpret mode against ref.flash_attention_ref; on a real
+TPU runtime it replaces chunked_attention for train/prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pragma: no cover
+    from jax.experimental.pallas import tpu as pltpu
+    _HAS_PLTPU = True
+except Exception:  # pragma: no cover
+    _HAS_PLTPU = False
+
+NEG_INF = -1e30
+
+
+def _scratch(shape):
+    if _HAS_PLTPU:
+        return pltpu.VMEM(shape, jnp.float32)
+    raise RuntimeError("pallas TPU backend unavailable")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, softcap):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # tile-level skip: no work if the whole kv tile is masked out
+    tile_relevant = True
+    if causal:
+        tile_relevant = k_start <= q_start + block_q - 1
+    if window is not None:
+        # newest q in tile attends back `window`; skip tiles fully older
+        tile_relevant = jnp.logical_and(
+            tile_relevant, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(tile_relevant)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev)
+                       - m_safe)
+        corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, corr)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jnp.dot(p, v, preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "attn_softcap",
+                              "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    attn_softcap: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (B, S, H, hd) (same head count — broadcast GQA outside).
+
+    Returns (B, S, H, hd).  Sq must equal Skv (self-attention).
+    """
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    pad = max(pad_q, pad_k)
+    # use one padded length so q and kv grids stay aligned
+    Sp = S + ((-S) % max(block_q, block_k)) if pad else S
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+
+    # (B, S, H, hd) → (B·H, S, hd)
+    def to_bh(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+
+    qb, kb, vb = to_bh(q), to_bh(k), to_bh(v)
+    grid = (B * H, Sp // block_q, Sp // block_k)
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, softcap=attn_softcap)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, iq, ik: (b, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, iq, ik: (b, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
+        scratch_shapes=[
+            _scratch((block_q, 1)),   # m
+            _scratch((block_q, 1)),   # l
+            _scratch((block_q, hd)),  # acc
+        ],
+        interpret=interpret,
+    )(qb, kb, vb)
+    out = out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)
+    return out[:, :S]

@@ -1,0 +1,68 @@
+"""Slow-tier (host CPU) expert kernel — the TPU-deployment analogue of the
+paper's AVX512_BF16 kernel (§3.4).
+
+On a TPU VM the slow tier is the host CPU; the paper's insight — stock
+framework CPU paths lack a good bf16 GEMM, so hand-tile one — maps to a
+numpy kernel that (a) emulates bf16 storage (weights/activations are rounded
+to bf16 before the fp32-accumulating GEMM, matching AVX512_BF16's
+dot-product semantics) and (b) blocks over d_ff so the working set stays in
+LLC.  numpy dispatches to the platform BLAS, which is exactly the "use the
+CPU's wide-vector GEMM" role the AVX512 kernel plays in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def to_bf16(a: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even fp32 → bf16, kept in a fp32 container."""
+    u = a.astype(np.float32).view(np.uint32)
+    rounded = ((u + 0x7FFF + ((u >> 16) & 1)) & 0xFFFF0000).astype(np.uint32)
+    return rounded.view(np.float32)
+
+
+def _silu(x: np.ndarray) -> np.ndarray:
+    return x / (1.0 + np.exp(-x))
+
+
+class HostExpert:
+    """One expert's weights pinned in host memory, bf16-emulated by default
+    (``precision="fp32"`` disables the rounding — used by the equivalence
+    tests to compare bit-for-bit against the monolithic jit path)."""
+
+    __slots__ = ("w_gate", "w_up", "w_down", "block_f", "precision")
+
+    def __init__(self, w_gate: np.ndarray, w_up: np.ndarray,
+                 w_down: np.ndarray, block_f: int = 1024,
+                 precision: str = "bf16"):
+        self.precision = precision
+        rnd = to_bf16 if precision == "bf16" else (lambda a: a)
+        self.w_gate = rnd(np.ascontiguousarray(w_gate, np.float32))
+        self.w_up = rnd(np.ascontiguousarray(w_up, np.float32))
+        self.w_down = rnd(np.ascontiguousarray(w_down, np.float32))
+        self.block_f = block_f
+
+    def nbytes(self) -> int:
+        # logical bf16 storage
+        return (self.w_gate.size + self.w_up.size + self.w_down.size) * 2
+
+    def __call__(self, x: np.ndarray) -> np.ndarray:
+        """x: (s, d) → (s, d).  Blocked over d_ff; fp32 accumulation."""
+        rnd = to_bf16 if self.precision == "bf16" else (lambda a: a)
+        x = rnd(np.asarray(x, np.float32))
+        s, d = x.shape
+        f = self.w_gate.shape[1]
+        out = np.zeros((s, d), np.float32)
+        for j0 in range(0, f, self.block_f):
+            j1 = min(j0 + self.block_f, f)
+            g = x @ self.w_gate[:, j0:j1]
+            u = x @ self.w_up[:, j0:j1]
+            h = rnd(_silu(g) * u)
+            out += h @ self.w_down[j0:j1]
+        return out
+
+
+def host_expert_mlp(x: np.ndarray, w_gate: np.ndarray, w_up: np.ndarray,
+                    w_down: np.ndarray, block_f: int = 1024) -> np.ndarray:
+    """Functional form of :class:`HostExpert` (used by kernel tests)."""
+    return HostExpert(w_gate, w_up, w_down, block_f)(x)

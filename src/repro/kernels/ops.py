@@ -1,0 +1,56 @@
+"""jit'd public wrappers around the kernels.
+
+``expert_mlp_op`` picks the Pallas kernel when it is profitable/available
+and falls back to the jnp reference otherwise; both share the oracle
+semantics in ref.py.  The Fiddler orchestrator calls these for fast-tier
+expert execution; ``host_expert.HostExpert`` is the slow-tier path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.expert_mlp import expert_mlp
+from repro.kernels.moe_gmm import moe_gmm
+
+# On this container Pallas runs in interpret mode (Python) — correct but
+# slow, so the jitted reference is the default execution path and the
+# Pallas kernels are exercised by tests/benchmarks.  On a TPU runtime flip
+# USE_PALLAS=True / INTERPRET=False.
+USE_PALLAS = False
+INTERPRET = True
+
+
+@jax.jit
+def _expert_mlp_jnp(x, w_gate, w_up, w_down):
+    return ref.expert_mlp_ref(x, w_gate, w_up, w_down)
+
+
+def expert_mlp_op(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                  w_down: jnp.ndarray, *, use_pallas: Optional[bool] = None
+                  ) -> jnp.ndarray:
+    """Fast-tier single-expert gated MLP. x: (s, d) → (s, d)."""
+    if use_pallas is None:
+        use_pallas = USE_PALLAS
+    if use_pallas:
+        return expert_mlp(x, w_gate, w_up, w_down, interpret=INTERPRET)
+    return _expert_mlp_jnp(x, w_gate, w_up, w_down)
+
+
+@jax.jit
+def _moe_gmm_jnp(xs, ws, counts):
+    return ref.moe_gmm_ref(xs, ws, counts)
+
+
+def moe_gmm_op(xs: jnp.ndarray, ws: jnp.ndarray, counts: jnp.ndarray, *,
+               use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Grouped per-expert matmul over capacity buckets."""
+    if use_pallas is None:
+        use_pallas = USE_PALLAS
+    if use_pallas:
+        return moe_gmm(xs, ws, counts, interpret=INTERPRET)
+    return _moe_gmm_jnp(xs, ws, counts)

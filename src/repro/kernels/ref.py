@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the single source of truth for kernel semantics; Pallas kernels
+(interpret=True on CPU) and the host (numpy) kernel are asserted allclose
+against these in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_mlp_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                   w_down: jnp.ndarray) -> jnp.ndarray:
+    """Gated SiLU MLP of one expert: (silu(xWg) ⊙ xWu) Wd.
+
+    x: (s, d); w_gate/w_up: (d, f); w_down: (f, d).  fp32 accumulation.
+    """
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(xf @ w_gate.astype(jnp.float32))
+    h = h * (xf @ w_up.astype(jnp.float32))
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_gmm_ref(xs: jnp.ndarray, ws: jnp.ndarray,
+                counts: jnp.ndarray) -> jnp.ndarray:
+    """Grouped matmul: out[e] = xs[e] @ ws[e], rows ≥ counts[e] zeroed.
+
+    xs: (E, C, d); ws: (E, d, f); counts: (E,) int32 → (E, C, f).
+    """
+    out = jnp.einsum("ecd,edf->ecf", xs.astype(jnp.float32),
+                     ws.astype(jnp.float32))
+    mask = jnp.arange(xs.shape[1])[None, :, None] < counts[:, None, None]
+    return jnp.where(mask, out, 0.0).astype(xs.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: int | None = None,
+                        attn_softcap: float | None = None) -> jnp.ndarray:
+    """Reference multi-head attention. q/k/v: (B, S, H, hd) (same H)."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if attn_softcap is not None:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    iq = jnp.arange(S)[:, None]
+    ik = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,159 @@
+"""Compiled-artifact analysis: roofline terms from the dry-run.
+
+No wall-clock measurement happens here (the container is CPU-only; TPU v5e
+is the *target*).  The three roofline terms are derived from the compiled
+executable:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per device)
+  memory     = HLO_bytes / HBM_bw                (per device)
+  collective = collective_bytes / ICI link bw    (per device)
+
+``cost_analysis()`` provides flops/bytes of the partitioned per-device
+module; collective bytes are NOT in cost_analysis, so we parse the
+optimized HLO and sum result-shape bytes of every collective op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# hardware constants given by the assignment (TPU v5e-class)
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one result shape, e.g. f32[16,128]{1,0} or bf16[]
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result = SHAPE op-name(...)    (also tuple results)
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?.*?\)?)\s+([\w\-]+)", stripped)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(shapes_str))
+        out[kind] += float(total)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float                  # per-device HLO flops
+    hbm_bytes: float              # per-device HLO bytes accessed
+    coll_bytes: float             # per-device collective bytes
+    coll_breakdown: Dict[str, float] = field(default_factory=dict)
+    peak_memory: Optional[float] = None  # bytes per device (memory_analysis)
+    model_flops: float = 0.0      # 6·N_active·D analytic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per-device model share) — catches
+        remat/dispatch waste; >1 means XLA did less than the analytic
+        count (e.g. skipped work), <1 means redundancy."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "peak_memory_GiB": (self.peak_memory or 0) / 2**30,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze_compiled(compiled, arch: str, shape: str, mesh_name: str,
+                     n_devices: int, model_flops_total: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):  # some jax versions return [dict]
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = (getattr(ma, "temp_size_in_bytes", 0)
+               + getattr(ma, "argument_size_in_bytes", 0)
+               + getattr(ma, "output_size_in_bytes", 0)
+               - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops=flops, hbm_bytes=hbm,
+        coll_bytes=coll["total"], coll_breakdown=coll,
+        peak_memory=mem,
+        model_flops=model_flops_total / n_devices,
+    )
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D for
+    inference forward (decode counts one new token per sequence)."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if shape_kind == "train" else 2.0
+    return mult * n_active * n_tokens

@@ -1,0 +1,229 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — before any jax import — so the host
+# platform exposes 512 placeholder devices for the production meshes.
+# (Set here ONLY: smoke tests and benches must see 1 device.)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+for the production meshes and record memory/cost/roofline terms.
+
+For each combination this lowers the REAL step function —
+
+  train_4k    → train_step   (fwd + bwd + AdamW update)
+  prefill_32k → prefill_step (prompt → logits + KV cache)
+  decode_*    → serve_step   (ONE token against a seq_len KV cache)
+
+— with ShapeDtypeStruct inputs (no allocation), compiles it, and prints
+``compiled.memory_analysis()`` / ``cost_analysis()``.  A sharding mismatch,
+compile-time OOM or unsupported collective here is a bug in the system.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, applicable_shapes, get_config
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    set_axis_sizes,
+    to_named,
+)
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.specs import input_specs, prefill_specs, train_batch_specs
+from repro.models.model import Model, ParallelContext
+from repro.training.optimizer import init_opt_state
+from repro.training.train_loop import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+                  unroll: bool = False):
+    """Lower the step function for one (arch, shape, mesh)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    data_axes, model_axis = mesh_axes(mesh)
+    model_size = mesh.shape[model_axis]
+    pctx = ParallelContext(mesh=mesh, data_axes=data_axes,
+                           model_axis=model_axis)
+    model = Model(cfg, pctx, unroll_scan=unroll)
+
+    set_axis_sizes(dict(mesh.shape))
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(cfg, params_shape, model_axis, model_size,
+                           data_axes)
+    p_shardings = _named(mesh, p_specs)
+    mesh_shape = dict(mesh.shape)
+
+    if shape.kind == "train":
+        batch_sds = train_batch_specs(cfg, shape)
+        b_specs = batch_pspecs(cfg, batch_sds, data_axes, dict(mesh.shape))
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        o_specs = param_pspecs(cfg, opt_shape["m"], model_axis, model_size,
+                               data_axes)
+        opt_specs = {"m": o_specs, "v": o_specs, "step": P()}
+        step = make_train_step(model)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shardings, _named(mesh, opt_specs),
+                          _named(mesh, b_specs)),
+            out_shardings=(p_shardings, _named(mesh, opt_specs), None),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = fn.lower(params_shape, opt_shape, batch_sds)
+
+    elif shape.kind == "prefill":
+        batch_sds = prefill_specs(cfg, shape)
+        b_specs = batch_pspecs(cfg, batch_sds, data_axes, dict(mesh.shape))
+        max_seq = shape.seq_len
+
+        def prefill_step(params, batch):
+            extra = {k: v for k, v in batch.items() if k != "tokens"}
+            return model.prefill(params, batch["tokens"], max_seq,
+                                 extra or None)
+
+        cache_shape = jax.eval_shape(
+            lambda p, b: prefill_step(p, b)[1], params_shape, batch_sds)
+        c_specs = cache_pspecs(cfg, cache_shape, shape.global_batch,
+                               data_axes, model_axis, mesh_shape)
+        logits_spec = P(None, None)
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(p_shardings, _named(mesh, b_specs)),
+            out_shardings=(NamedSharding(mesh, logits_spec),
+                           _named(mesh, c_specs)),
+        )
+        with mesh:
+            lowered = fn.lower(params_shape, batch_sds)
+
+    else:  # decode
+        max_seq = shape.seq_len
+        B = shape.global_batch
+
+        def serve_step(params, cache, tokens, pos):
+            return model.decode_step(params, cache, tokens, pos, max_seq)
+
+        cache_shape = jax.eval_shape(
+            lambda: model.make_cache(
+                B, max_seq,
+                enc_frames=(cfg.encdec.n_audio_frames
+                            if cfg.arch_type == "audio" else None)))
+        c_specs = cache_pspecs(cfg, cache_shape, B, data_axes, model_axis,
+                               mesh_shape)
+        c_shardings = _named(mesh, c_specs)
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(p_shardings, c_shardings,
+                          NamedSharding(mesh, P(None, None)),
+                          NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, P(None, None)), c_shardings),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = fn.lower(params_shape, cache_shape,
+                               SDS((B, 1), jnp.int32), SDS((), jnp.int32))
+    return lowered, cfg, shape
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, verbose: bool = True,
+               unroll: bool = False) -> Dict[str, Any]:
+    t0 = time.time()
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    try:
+        lowered, cfg, shape = build_lowered(arch, shape_name, mesh,
+                                            verbose=verbose, unroll=unroll)
+        compiled = lowered.compile()
+    except Exception as e:  # a failure here is a bug in the system
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "ok": False, "error": f"{type(e).__name__}: {e}"}
+
+    n_dev = mesh.size
+    n_tokens = (shape.global_batch * shape.seq_len
+                if shape.kind != "decode" else shape.global_batch)
+    mf = analysis.model_flops(cfg, shape.kind, n_tokens)
+    roof = analysis.analyze_compiled(compiled, arch, shape_name, mesh_name,
+                                     n_dev, mf)
+    row = roof.row()
+    row.update({"ok": True, "compile_s": time.time() - t0,
+                "coll_breakdown": roof.coll_breakdown})
+    if verbose:
+        ma = None
+        try:
+            ma = compiled.memory_analysis()
+        except Exception:
+            pass
+        print(f"[{arch} × {shape_name} × {mesh_name}] ok "
+              f"({row['compile_s']:.1f}s compile)")
+        if ma is not None:
+            print(f"  memory_analysis: {ma}")
+        print(f"  flops/dev={roof.flops:.3e}  hbm/dev={roof.hbm_bytes:.3e}  "
+              f"coll/dev={roof.coll_bytes:.3e}")
+        print(f"  roofline: compute={roof.t_compute*1e3:.2f}ms "
+              f"memory={roof.t_memory*1e3:.2f}ms "
+              f"collective={roof.t_collective*1e3:.2f}ms "
+              f"→ {roof.bottleneck}-bound; useful={roof.useful_flops_ratio:.2f}")
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.configs import ASSIGNED_ARCHS
+
+    combos = []
+    archs = ASSIGNED_ARCHS if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        cfg = get_config(a)
+        shapes = applicable_shapes(cfg) if args.shape is None else [args.shape]
+        for s in shapes:
+            combos.append((a, s))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for a, s in combos:
+            rows.append(dryrun_one(a, s, mesh=mesh))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    n_fail = sum(1 for r in rows if not r.get("ok"))
+    print(f"\n{len(rows) - n_fail}/{len(rows)} combinations lowered+compiled")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

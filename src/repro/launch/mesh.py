@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to get placeholder devices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e-256).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_debug_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
+    """(data_axes, model_axis) for a production or debug mesh."""
+    names = mesh.axis_names
+    model_axis = "model"
+    data_axes = tuple(n for n in names if n != model_axis)
+    return data_axes, model_axis

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape_name)`` returns the exact pytree the corresponding
+step function is lowered with.  Modality frontends are stubbed per the
+assignment: audio provides (B, n_frames, d) frame embeddings, VLM provides
+(B, n_image_tokens, d) projected patch embeddings; text token counts are
+reduced so the TOTAL sequence length matches the assigned shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text-token count so that text + modality tokens == seq_len."""
+    if cfg.arch_type == "vlm":
+        return seq_len - cfg.vlm.n_image_tokens
+    return seq_len
+
+
+def modality_extras(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                    ) -> Dict[str, Any]:
+    if cfg.arch_type == "vlm":
+        return {"image_embeds": SDS((batch, cfg.vlm.n_image_tokens,
+                                     cfg.d_model), dtype)}
+    if cfg.arch_type == "audio":
+        return {"frames": SDS((batch, cfg.encdec.n_audio_frames,
+                               cfg.d_model), dtype)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    st = text_len(cfg, S)
+    # labels cover the FULL decoder stream (image-prefix positions are
+    # -100-masked by the data pipeline), tokens only the text part.
+    label_len = S if cfg.arch_type == "vlm" else st
+    batch = {"tokens": SDS((B, st), jnp.int32),
+             "labels": SDS((B, label_len), jnp.int32)}
+    batch.update(modality_extras(cfg, B, dtype))
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape,
+                  dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {"tokens": SDS((B, text_len(cfg, S)), jnp.int32)}
+    specs.update(modality_extras(cfg, B, dtype))
+    return specs
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "pos": SDS((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_token_specs(cfg, shape)

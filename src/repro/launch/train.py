@@ -1,0 +1,80 @@
+"""Distributed training launcher.
+
+Builds a mesh over the available devices (data × model), shards parameters
+and optimizer state by the production rules, and runs the pjit'd train
+step over the synthetic data pipeline.  On a real TPU slice this is the
+entry point per host; on this container it runs with a trivial mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduced --steps 50 --batch 4 --seq 128
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data.pipeline import make_batch_iter
+from repro.distributed.sharding import batch_pspecs, param_pspecs
+from repro.launch.mesh import make_debug_mesh, mesh_axes
+from repro.models.model import Model, ParallelContext
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    n_dev = len(jax.devices())
+    mp = min(args.model_parallel, n_dev)
+    mesh = make_debug_mesh(model=mp, data=n_dev // mp)
+    data_axes, model_axis = mesh_axes(mesh)
+    pctx = ParallelContext(mesh=mesh, data_axes=data_axes,
+                           model_axis=model_axis)
+    model = Model(cfg, pctx, param_dtype=jnp.float32)
+    print(f"arch={cfg.name} mesh={dict(mesh.shape)} "
+          f"params≈{cfg.param_count()/1e6:.1f}M")
+
+    params = model.init(jax.random.PRNGKey(0))
+    p_specs = param_pspecs(cfg, jax.eval_shape(lambda: params),
+                           model_axis, mesh.shape[model_axis])
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+    params = jax.device_put(params, p_sh)
+    opt_state = init_opt_state(params)
+
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(lr=args.lr)))
+    data = make_batch_iter(cfg, seq_len=args.seq, batch=args.batch)
+    t0 = time.time()
+    for step, batch in enumerate(data):
+        if step >= args.steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"({time.time()-t0:.1f}s)")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt_state, step=args.steps)
+        print(f"checkpoint → {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

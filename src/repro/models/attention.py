@@ -1,0 +1,298 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, sliding windows, softcap.
+
+Two execution paths share one mask convention:
+
+* ``chunked_attention`` — training / prefill.  A lax.scan over KV chunks
+  with an online-softmax accumulator (flash-attention recurrence in pure
+  JAX), so the (Sq, Skv) score matrix is never materialised.  This is what
+  the multi-pod dry-run lowers; the Pallas kernel in
+  ``repro.kernels.flash_attention`` is the TPU-optimised equivalent and is
+  validated against the same reference.
+
+* ``decode_attention`` — single-query decode against a (ring-buffer) KV
+  cache.  Direct einsum; memory is O(B·H·W) which is small for Sq == 1, and
+  the KV-sequence axis can be sharded (sequence-parallel decode — XLA SPMD
+  partitions the softmax reductions).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import kv_cache as kvc
+from repro.models.layers import Params, apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
+
+NEG_INF = -1e30
+
+# Default KV chunk for the online-softmax scan.  The roofline analysis mode
+# raises this to a single trip so XLA's cost_analysis (which counts a while
+# body once) sees the exact FLOPs/bytes; production lowering keeps chunks
+# small for activation memory.
+KV_CHUNK_DEFAULT = 1024
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (cfg.d_model, cfg.n_heads * cfg.head_dim), 0, dtype),
+        "wk": dense_init(k2, (cfg.d_model, cfg.n_kv_heads * cfg.head_dim), 0, dtype),
+        "wv": dense_init(k3, (cfg.d_model, cfg.n_kv_heads * cfg.head_dim), 0, dtype),
+        "wo": dense_init(k4, (cfg.n_heads * cfg.head_dim, cfg.d_model), 0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(cfg.head_dim, dtype)
+    return p
+
+
+def qkv_proj(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+             positions: jnp.ndarray, rope: bool = True
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → q (B,S,H,hd), k/v (B,S,KV,hd) with RoPE + qk-norm."""
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = (x @ params["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ params["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — train / prefill
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jnp.ndarray,               # (B, Sq, H, hd)
+    k: jnp.ndarray,               # (B, Skv, KV, hd)
+    v: jnp.ndarray,               # (B, Skv, KV, hd)
+    q_positions: jnp.ndarray,     # (B, Sq)
+    kv_positions: jnp.ndarray,    # (B, Skv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    kv_chunk: Optional[int] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks; never builds (Sq, Skv)."""
+    if kv_chunk is None:
+        kv_chunk = KV_CHUNK_DEFAULT
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (Skv + pad) // kv_chunk
+
+    from repro.distributed import opts
+
+    io_dtype = jnp.bfloat16 if opts.BF16_ATTN_SCORES else jnp.float32
+    qf = q.astype(io_dtype).reshape(B, Sq, KV, G, hd)
+    kc = k.astype(io_dtype).reshape(B, n_chunks, kv_chunk, KV, hd)
+    vc = v.astype(io_dtype).reshape(B, n_chunks, kv_chunk, KV, hd)
+    pc = kv_positions.reshape(B, n_chunks, kv_chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, p_i = inp  # (B, C, KV, hd), (B, C, KV, hd), (B, C)
+        # scores: (B, Sq, KV, G, C) — fp32 statistics regardless of io dtype
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qf, k_i,
+                       preferred_element_type=jnp.float32) * scale
+        if attn_softcap is not None:
+            s = softcap(s, attn_softcap)
+        valid = p_i[:, None, :] >= 0  # (B, 1, C)
+        mask = valid
+        if causal:
+            mask = mask & (p_i[:, None, :] <= q_positions[:, :, None])
+        if window is not None:
+            mask = mask & (p_i[:, None, :] > q_positions[:, :, None] - window)
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_i = jnp.max(s, axis=-1)  # (B, Sq, KV, G)
+        m_new = jnp.maximum(m, m_i)
+        # guard fully-masked rows (m_new == NEG_INF)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(io_dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, KV, G, hd), jnp.float32)
+    # remat per KV chunk: the (…, C) score/probability blocks are
+    # recomputed in the backward instead of being saved for every chunk —
+    # the flash-attention memory property, in pure JAX.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), (m0, l0, acc0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1)),
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention — single query vs KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (B, 1, H, hd)
+    cache: Dict[str, jnp.ndarray],
+    q_positions: jnp.ndarray,    # (B, 1)
+    *,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    from repro.distributed import opts
+
+    B, Sq, H, hd = q.shape
+    KV = cache["k"].shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    io_dtype = jnp.bfloat16 if opts.BF16_ATTN_SCORES else jnp.float32
+    qf = q.astype(io_dtype).reshape(B, Sq, KV, G, hd)
+    kf = cache["k"].astype(io_dtype)
+    vf = cache["v"].astype(io_dtype)
+    # scores in fp32 (stable softmax stats) from io-dtype operands
+    s = jnp.einsum("bqkgh,bwkh->bqkgw", qf, kf,
+                   preferred_element_type=jnp.float32) * scale
+    if attn_softcap is not None:
+        s = softcap(s, attn_softcap)
+    pos = cache["pos"]  # (B, W)
+    mask = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_positions[:, :, None])
+    if window is not None:
+        mask = mask & (pos[:, None, :] > q_positions[:, :, None] - window)
+    s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgw,bwkh->bqkgh", p.astype(io_dtype), vf,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block ops used by model.py
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    params: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    layer_idx: int,
+    *,
+    mode: str = "train",            # "train" | "prefill" | "decode"
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    max_seq: Optional[int] = None,
+    causal: bool = True,
+    rope: bool = True,
+    kv_chunk: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Self-attention with optional cache. Returns (out, new_cache).
+
+    * train   → pure forward, no cache.
+    * prefill → fresh prompt at positions 0..S-1, writes the ring buffer.
+    * decode  → one token; ``positions`` is (B, 1) with identical scalar
+                value per row (static-batched decode).
+    """
+    B, S, _ = x.shape
+    window = None
+    eff_max = max_seq if max_seq is not None else S
+    w = kvc.layer_window(cfg, layer_idx, eff_max)
+    if w < eff_max:
+        window = w
+
+    q, k, v = qkv_proj(params, x, cfg, positions, rope=rope)
+
+    if mode == "train":
+        out = chunked_attention(
+            q, k, v, positions, positions, causal=causal, window=window,
+            attn_softcap=cfg.attn_softcap, kv_chunk=kv_chunk)
+        new_cache = None
+    elif mode == "prefill":
+        assert cache is not None
+        new_cache = kvc.write_prefill(cache, k, v)
+        out = chunked_attention(
+            q, k, v, positions, positions, causal=causal, window=window,
+            attn_softcap=cfg.attn_softcap, kv_chunk=kv_chunk)
+    elif mode == "decode":
+        assert cache is not None and S == 1
+        new_cache = kvc.write_decode(cache, k, v, positions[0, 0])
+        out = decode_attention(
+            q, new_cache, positions, window=window,
+            attn_softcap=cfg.attn_softcap)
+    elif mode == "decode_multi":
+        # continuous batching: every row at its own position
+        assert cache is not None and S == 1
+        new_cache = kvc.write_decode_multi(cache, k, v, positions[:, 0])
+        out = decode_attention(
+            q, new_cache, positions, window=window,
+            attn_softcap=cfg.attn_softcap)
+    else:
+        raise ValueError(mode)
+    y = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_block(
+    params: Params,
+    x: jnp.ndarray,                 # (B, S, d) decoder stream
+    enc_kv: Tuple[jnp.ndarray, jnp.ndarray],  # precomputed (k, v): (B, Se, KV, hd)
+    cfg: ModelConfig,
+) -> jnp.ndarray:
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    k, v = enc_kv
+    Se = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos_kv = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    out = chunked_attention(q, k, v, pos_q, pos_kv, causal=False,
+                            attn_softcap=cfg.attn_softcap)
+    return out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["wo"]
+
+
+def encode_cross_kv(params: Params, enc_out: jnp.ndarray, cfg: ModelConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Project encoder output once into cross-attention K/V."""
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ params["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v

@@ -1,0 +1,706 @@
+"""Model factory: config → init / forward / prefill / decode.
+
+Layers are grouped into *periods* (the repeating layer pattern — e.g. gemma2
+alternates local/global attention with period 2, RecurrentGemma repeats
+(recurrent, recurrent, local-attn) with period 3) and parameters for each
+position-in-period are stacked over periods so the whole stack lowers as a
+single ``lax.scan``.  This keeps HLO size (and dry-run compile time) flat in
+depth — essential for the 61–80 layer assigned architectures.  Layers that
+don't fit a whole period form an explicitly-unrolled ``tail``.
+
+All functions are pure; sharding is injected through a ``ParallelContext``
+(``with_sharding_constraint`` + shard_map for MoE) so the same code runs on
+one CPU device (smoke tests, Fiddler serving) and on the 512-chip mesh
+(dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import kv_cache as kvc
+from repro.models.attention import (
+    attention_block,
+    cross_attention_block,
+    encode_cross_kv,
+    init_attention,
+    init_cross_attention,
+)
+from repro.models.layers import (
+    Params,
+    dense_init,
+    embed_init,
+    gated_mlp,
+    init_gated_mlp,
+    init_layernorm,
+    init_rmsnorm,
+    layernorm,
+    rmsnorm,
+    softcap,
+)
+from repro.models.moe import init_moe, moe_block_ref, moe_block_sharded
+from repro.models.rglru import init_rglru_block, rglru_block
+from repro.models.ssm import init_ssm_block, ssm_block
+
+
+# ---------------------------------------------------------------------------
+# Parallel context
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    mesh: Any = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def data_size(self) -> int:
+        if not self.active:
+            return 1
+        n = 1
+        for ax in self.data_axes:
+            n *= self.mesh.shape[ax]
+        return n
+
+    def shard(self, x: jnp.ndarray, spec: P) -> jnp.ndarray:
+        if not self.active:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    def batch_axes(self, batch: int):
+        """data axes if the batch is shardable over them, else None."""
+        return self.data_axes if (self.data_size > 1
+                                  and batch % self.data_size == 0) else None
+
+    def shard_act(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Activations: batch over data axes, features replicated.
+
+        With opts.SEQ_SHARD_ACTS (§Perf), the residual stream between
+        blocks is additionally sharded over ``model`` on the sequence
+        axis (Megatron-style sequence parallelism): the scan's layer-input
+        remat carries shrink by the model-axis size, and SPMD inserts the
+        gather/reduce-scatter pairs around attention/MLP."""
+        if not self.active:
+            return x
+        from repro.distributed import opts
+
+        seq = None
+        if (opts.SEQ_SHARD_ACTS and x.ndim == 3 and x.shape[1] > 1
+                and x.shape[1] % self.mesh.shape[self.model_axis] == 0):
+            seq = self.model_axis
+        spec = P(self.batch_axes(x.shape[0]), seq,
+                 *((None,) * (x.ndim - 2)))
+        return self.shard(x, spec)
+
+    def shard_logits(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Logits: batch over data, vocab over model (when divisible)."""
+        if not self.active:
+            return x
+        vocab = x.shape[-1]
+        m = self.model_axis if vocab % self.mesh.shape[self.model_axis] == 0 else None
+        spec = P(self.batch_axes(x.shape[0]),
+                 *((None,) * (x.ndim - 2)), m)
+        return self.shard(x, spec)
+
+
+NO_PARALLEL = ParallelContext()
+
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+
+def period_of(cfg: ModelConfig) -> int:
+    if cfg.arch_type == "hybrid":
+        return cfg.hybrid.attn_period
+    if cfg.attn_pattern == "alternating":
+        return 2
+    return 1
+
+
+def sublayer_kind(cfg: ModelConfig, j: int) -> str:
+    """Kind of the j-th sub-layer within a period."""
+    if cfg.arch_type == "ssm":
+        return "ssm"
+    if cfg.arch_type == "hybrid":
+        return "recurrent" if j < cfg.hybrid.attn_period - 1 else "attention"
+    return "attention"
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, int, List[int]]:
+    """Returns (period, n_periods, tail_positions)."""
+    p = period_of(cfg)
+    n_periods = cfg.n_layers // p
+    tail = list(range(cfg.n_layers - n_periods * p))
+    return p, n_periods, tail
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(cfg: ModelConfig, d: int, dtype):
+    return init_layernorm(d, dtype) if cfg.arch_type == "audio" else init_rmsnorm(d, dtype)
+
+
+def _norm(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.arch_type == "audio":
+        return layernorm(p, x, 1e-5)
+    return rmsnorm(p, x, cfg.norm_eps)
+
+
+def init_plain_mlp(key, d: int, f: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, (d, f), 0, dtype),
+            "w2": dense_init(k2, (f, d), 0, dtype)}
+
+
+def plain_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ p["w1"], approximate=True) @ p["w2"]
+
+
+def init_sublayer(key, cfg: ModelConfig, j: int, dtype) -> Params:
+    kind = sublayer_kind(cfg, j)
+    keys = jax.random.split(key, 6)
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"norm1": _norm_init(cfg, d, dtype),
+                "mixer": init_ssm_block(keys[0], cfg, dtype)}
+    if kind == "recurrent":
+        return {"norm1": _norm_init(cfg, d, dtype),
+                "temporal": init_rglru_block(keys[0], cfg, dtype),
+                "norm2": _norm_init(cfg, d, dtype),
+                "mlp": init_gated_mlp(keys[1], d, cfg.d_ff, dtype)}
+    # attention-based
+    p: Params = {"norm1": _norm_init(cfg, d, dtype),
+                 "attn": init_attention(keys[0], cfg, dtype),
+                 "norm2": _norm_init(cfg, d, dtype)}
+    if cfg.arch_type == "audio":
+        p["cross"] = init_cross_attention(keys[1], cfg, dtype)
+        p["norm3"] = _norm_init(cfg, d, dtype)
+        p["mlp"] = init_plain_mlp(keys[2], d, cfg.d_ff, dtype)
+    elif cfg.moe is not None:
+        p["moe"] = init_moe(keys[1], cfg, dtype)
+    else:
+        p["mlp"] = init_gated_mlp(keys[1], d, cfg.d_ff, dtype)
+    return p
+
+
+def apply_sublayer(
+    p: Params,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    j: int,
+    layer_idx_for_window: int,
+    pctx: ParallelContext,
+    *,
+    mode: str,
+    cache: Optional[Params],
+    max_seq: Optional[int],
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    rope: bool = True,
+    causal: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """One (norm → mixer → residual [→ norm → ffn → residual]) sub-layer.
+
+    Returns (x, new_cache, aux_loss).
+    """
+    kind = sublayer_kind(cfg, j)
+    aux = jnp.float32(0.0)
+    if kind == "ssm":
+        h, new_cache = ssm_block(p["mixer"], _norm(cfg, p["norm1"], x), cfg,
+                                 cache=cache)
+        x = x + h
+        return pctx.shard_act(x), new_cache, aux
+
+    if kind == "recurrent":
+        h, new_cache = rglru_block(p["temporal"], _norm(cfg, p["norm1"], x),
+                                   cfg, cache=cache)
+        x = x + h
+        x = x + gated_mlp(p["mlp"], _norm(cfg, p["norm2"], x), cfg.act)
+        return pctx.shard_act(x), new_cache, aux
+
+    # ---- attention sub-layer ---------------------------------------------
+    if cfg.arch_type == "audio":
+        rope = False  # whisper: absolute positions added at the embedding
+    h, new_cache = attention_block(
+        p["attn"], _norm(cfg, p["norm1"], x), positions, cfg,
+        layer_idx_for_window, mode=mode, cache=cache, max_seq=max_seq,
+        rope=rope, causal=causal)
+    x = x + h
+    x = pctx.shard_act(x)
+
+    if cfg.arch_type == "audio" and cross_kv is not None:
+        x = x + cross_attention_block(p["cross"], _norm(cfg, p["norm3"], x),
+                                      cross_kv, cfg)
+
+    if "moe" in p:
+        kind_str = {"train": "train", "prefill": "prefill",
+                    "decode": "decode", "decode_multi": "decode"}[mode]
+        if pctx.active:
+            h, stats = moe_block_sharded(
+                p["moe"], _norm(cfg, p["norm2"], x), cfg, pctx.mesh,
+                pctx.data_axes, pctx.model_axis, kind=kind_str)
+        else:
+            h, stats = moe_block_ref(p["moe"], _norm(cfg, p["norm2"], x), cfg,
+                                     kind=kind_str)
+        aux = aux + stats["aux_loss"]
+        x = x + h
+    elif cfg.arch_type == "audio":
+        x = x + plain_mlp(p["mlp"], _norm(cfg, p["norm2"], x))
+    else:
+        x = x + gated_mlp(p["mlp"], _norm(cfg, p["norm2"], x), cfg.act)
+    return pctx.shard_act(x), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer cache init
+# ---------------------------------------------------------------------------
+
+
+def init_sublayer_cache(cfg: ModelConfig, j: int, layer_idx: int, batch: int,
+                        max_seq: int, dtype=jnp.bfloat16) -> Optional[Params]:
+    kind = sublayer_kind(cfg, j)
+    if kind == "ssm":
+        return kvc.init_ssm_cache(cfg, batch)
+    if kind == "recurrent":
+        return kvc.init_lru_cache(cfg, batch)
+    return kvc.init_attn_cache(cfg, layer_idx, batch, max_seq, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def init_encoder(key, cfg: ModelConfig, dtype) -> Params:
+    n = cfg.encdec.n_encoder_layers
+    keys = jax.random.split(key, n + 1)
+    blocks = [
+        {"norm1": _norm_init(cfg, cfg.d_model, dtype),
+         "attn": init_attention(keys[i], cfg, dtype),
+         "norm2": _norm_init(cfg, cfg.d_model, dtype),
+         "mlp": init_plain_mlp(jax.random.fold_in(keys[i], 7), cfg.d_model,
+                               cfg.d_ff, dtype)}
+        for i in range(n)
+    ]
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *blocks)
+    return {"blocks": stacked, "final_norm": _norm_init(cfg, cfg.d_model, dtype)}
+
+
+def sinusoid_pos(n: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoid_pos_at(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal embedding for a single traced scalar position."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def run_encoder(params: Params, frames: jnp.ndarray, cfg: ModelConfig,
+                pctx: ParallelContext) -> jnp.ndarray:
+    """frames: (B, F, d) stubbed conv-frontend output → encoder states."""
+    B, F, d = frames.shape
+    x = frames + sinusoid_pos(F, d)[None].astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(carry, p):
+        x = carry
+        h, _ = attention_block(p["attn"], _norm(cfg, p["norm1"], x), positions,
+                               cfg, 1, mode="train", rope=False, causal=False)
+        x = x + h
+        x = x + plain_mlp(p["mlp"], _norm(cfg, p["norm2"], x))
+        return pctx.shard_act(x), None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return _norm(cfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Bound (config, parallel-context) model functions."""
+
+    def __init__(self, cfg: ModelConfig, pctx: ParallelContext = NO_PARALLEL,
+                 param_dtype=None, unroll_scan: bool = False):
+        self.cfg = cfg
+        self.pctx = pctx
+        self.param_dtype = param_dtype or jnp.dtype(cfg.param_dtype)
+        self.period, self.n_periods, self.tail = layer_plan(cfg)
+        # unroll the layer scan into a python loop — used by the roofline
+        # analysis (XLA cost_analysis counts a while body once, so scanned
+        # stacks under-report FLOPs/bytes; unrolled small-depth variants
+        # give exact per-layer costs for extrapolation)
+        self.unroll_scan = unroll_scan
+
+    # ---- init -------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg, dtype = self.cfg, self.param_dtype
+        k_embed, k_blocks, k_tail, k_head, k_enc = jax.random.split(key, 5)
+        params: Params = {
+            "embed": embed_init(k_embed, (cfg.vocab_size, cfg.d_model), dtype),
+            "final_norm": _norm_init(cfg, cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                           0, dtype)
+        blocks = []
+        if self.n_periods:
+            for j in range(self.period):
+                per = [init_sublayer(
+                    jax.random.fold_in(k_blocks, i * self.period + j), cfg, j,
+                    dtype) for i in range(self.n_periods)]
+                blocks.append(jax.tree.map(lambda *a: jnp.stack(a), *per))
+        params["blocks"] = blocks
+        params["tail"] = [init_sublayer(jax.random.fold_in(k_tail, j), cfg, j, dtype)
+                          for j in self.tail]
+        if cfg.arch_type == "audio":
+            params["encoder"] = init_encoder(k_enc, cfg, dtype)
+        return params
+
+    # ---- embedding / head --------------------------------------------------
+    def embed(self, params: Params, tokens: jnp.ndarray,
+              pos_offset: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        x = params["embed"][tokens]
+        if self.cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(self.cfg.d_model), x.dtype)
+        if self.cfg.arch_type == "audio":
+            # whisper decoder: absolute (sinusoidal stand-in) positions
+            S = tokens.shape[1]
+            table = sinusoid_pos(S if pos_offset is None else 1, self.cfg.d_model)
+            if pos_offset is not None:
+                angle = sinusoid_pos_at(pos_offset, self.cfg.d_model)
+                x = x + angle[None, None, :].astype(x.dtype)
+            else:
+                x = x + table[None].astype(x.dtype)
+        return x
+
+    def logits(self, params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
+        h = _norm(self.cfg, params["final_norm"], hidden)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        out = h @ w
+        out = softcap(out.astype(jnp.float32), self.cfg.logit_softcap)
+        return self.pctx.shard_logits(out)
+
+    # ---- caches -------------------------------------------------------------
+    def make_cache(self, batch: int, max_seq: int,
+                   enc_frames: Optional[int] = None,
+                   dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        cache: Params = {"blocks": [], "tail": []}
+        if self.n_periods:
+            for j in range(self.period):
+                per = [init_sublayer_cache(cfg, j, i * self.period + j, batch,
+                                           max_seq, dtype)
+                       for i in range(self.n_periods)]
+                cache["blocks"].append(jax.tree.map(lambda *a: jnp.stack(a), *per))
+        for j in self.tail:
+            cache["tail"].append(
+                init_sublayer_cache(cfg, j, self.n_periods * self.period + j,
+                                    batch, max_seq, dtype))
+        if cfg.arch_type == "audio":
+            f = enc_frames if enc_frames is not None else cfg.encdec.n_audio_frames
+            cache["cross_kv"] = (
+                jnp.zeros((self.n_periods, batch, f, cfg.n_kv_heads,
+                           cfg.head_dim), dtype),
+                jnp.zeros((self.n_periods, batch, f, cfg.n_kv_heads,
+                           cfg.head_dim), dtype),
+            )
+        return cache
+
+    def reorder_cache(self, cache: Params, idx) -> Params:
+        """Reorder the batch dimension of a cache (beam-search reshuffle).
+        Block caches are scan-stacked (n_periods, B, …) → batch is axis 1;
+        tail caches are per-layer (B, …) → axis 0; cross_kv is stacked."""
+        idx = jnp.asarray(idx)
+        out = dict(cache)
+        out["blocks"] = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
+                                     cache["blocks"])
+        out["tail"] = jax.tree.map(lambda a: jnp.take(a, idx, axis=0),
+                                   cache["tail"])
+        if "cross_kv" in cache:
+            out["cross_kv"] = jax.tree.map(
+                lambda a: jnp.take(a, idx, axis=1), cache["cross_kv"])
+        return out
+
+    # ---- backbone -----------------------------------------------------------
+    def _backbone(self, params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                  *, mode: str, cache: Optional[Params], max_seq: Optional[int],
+                  cross_kv_stacked=None, remat: bool = False
+                  ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+        cfg, pctx = self.cfg, self.pctx
+        period = self.period
+
+        def period_body(carry, xs):
+            x, aux = carry
+            block_params, block_cache, cross_kv = xs
+            new_caches = []
+            for j in range(period):
+                c_j = None if block_cache is None else block_cache[j]
+                x, nc, a = apply_sublayer(
+                    block_params[j], x, positions, cfg, j, j, pctx,
+                    mode=mode, cache=c_j, max_seq=max_seq, cross_kv=cross_kv)
+                new_caches.append(nc)
+                aux = aux + a
+            ys = tuple(new_caches) if block_cache is not None else None
+            return (x, aux), ys
+
+        body = period_body
+        if remat:
+            body = jax.checkpoint(period_body, prevent_cse=False)
+
+        if self.n_periods:
+            blocks_xs = tuple(params["blocks"])
+            cache_xs = tuple(cache["blocks"]) if cache is not None else None
+            cross_xs = cache.get("cross_kv") if (cache is not None and
+                                                 cfg.arch_type == "audio") else None
+            xs = (blocks_xs, cache_xs, cross_xs)
+            if self.unroll_scan:
+                carry = (x, jnp.float32(0.0))
+                ys = []
+                for i in range(self.n_periods):
+                    xs_i = jax.tree.map(lambda a: a[i], xs)
+                    carry, y = body(carry, xs_i)
+                    ys.append(y)
+                (x, aux) = carry
+                if ys and ys[0] is not None:
+                    new_block_caches = jax.tree.map(
+                        lambda *a: jnp.stack(a), *ys)
+                else:
+                    new_block_caches = ()
+            else:
+                (x, aux), new_block_caches = jax.lax.scan(
+                    body, (x, jnp.float32(0.0)), xs, length=self.n_periods)
+        else:
+            aux = jnp.float32(0.0)
+            new_block_caches = ()
+
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["blocks"] = list(new_block_caches)
+            new_tail = []
+        for t, j in enumerate(self.tail):
+            c_t = cache["tail"][t] if cache is not None else None
+            layer_idx = self.n_periods * period + j
+            x, nc, a = apply_sublayer(
+                params["tail"][t], x, positions, cfg, j, layer_idx, pctx,
+                mode=mode, cache=c_t, max_seq=max_seq)
+            aux = aux + a
+            if cache is not None:
+                new_tail.append(nc)
+        if cache is not None:
+            new_cache["tail"] = new_tail
+        return x, new_cache, aux
+
+    # ---- public entry points -------------------------------------------------
+    def forward_train(self, params: Params, tokens: jnp.ndarray,
+                      extra: Optional[Dict[str, jnp.ndarray]] = None,
+                      remat: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Training forward. tokens: (B, S_text). Returns (hidden, aux_loss).
+
+        VLM: extra["image_embeds"] (B, n_img, d) is prepended.
+        Audio: extra["frames"] (B, F, d) runs the encoder; decoder
+        cross-attends (computed per layer from encoder states).
+        """
+        cfg, pctx = self.cfg, self.pctx
+        x = self.embed(params, tokens)
+        if cfg.arch_type == "vlm" and extra is not None:
+            img = extra["image_embeds"].astype(x.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        x = pctx.shard_act(x)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        cross = None
+        if cfg.arch_type == "audio":
+            enc_out = run_encoder(params["encoder"], extra["frames"], cfg, pctx)
+            # training path: build a pseudo-cache holding stacked cross K/V
+            cross = self._stack_cross_kv(params, enc_out)
+
+        if cross is not None:
+            cache = {"blocks": [None] * self.period, "tail": [],
+                     "cross_kv": cross}
+            x, _, aux = self._backbone_train_with_cross(
+                params, x, positions, cross, remat=remat)
+        else:
+            x, _, aux = self._backbone(params, x, positions, mode="train",
+                                       cache=None, max_seq=S, remat=remat)
+        return x, aux
+
+    def _stack_cross_kv(self, params: Params, enc_out: jnp.ndarray):
+        cfg = self.cfg
+
+        def per_block(p):
+            return encode_cross_kv(p["cross"], enc_out, cfg)
+
+        ks, vs = jax.vmap(per_block, in_axes=(0,))(params["blocks"][0])
+        return (ks, vs)
+
+    def _backbone_train_with_cross(self, params, x, positions, cross,
+                                   remat: bool):
+        cfg, pctx = self.cfg, self.pctx
+
+        def body(carry, xs):
+            x, aux = carry
+            bp, ckv = xs
+            x, _, a = apply_sublayer(bp, x, positions, cfg, 0, 0, pctx,
+                                     mode="train", cache=None, max_seq=None,
+                                     cross_kv=ckv)
+            return (x, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                   (params["blocks"][0], cross))
+        return x, None, aux
+
+    def prefill(self, params: Params, tokens: jnp.ndarray, max_seq: int,
+                extra: Optional[Dict[str, jnp.ndarray]] = None,
+                cache_dtype=jnp.bfloat16) -> Tuple[jnp.ndarray, Params]:
+        """Process a fresh prompt; returns (last-position logits, cache)."""
+        cfg, pctx = self.cfg, self.pctx
+        x = self.embed(params, tokens)
+        if cfg.arch_type == "vlm" and extra is not None:
+            x = jnp.concatenate([extra["image_embeds"].astype(x.dtype), x], axis=1)
+        x = pctx.shard_act(x)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        cache = self.make_cache(
+            B, max_seq,
+            enc_frames=(extra["frames"].shape[1] if cfg.arch_type == "audio"
+                        and extra is not None else None),
+            dtype=cache_dtype)
+        if cfg.arch_type == "audio":
+            enc_out = run_encoder(params["encoder"], extra["frames"], cfg, pctx)
+            cache["cross_kv"] = jax.tree.map(
+                lambda a: a.astype(cache_dtype), self._stack_cross_kv(params, enc_out))
+        x, cache, _ = self._backbone(params, x, positions, mode="prefill",
+                                     cache=cache, max_seq=max_seq)
+        logits = self.logits(params, x[:, -1:])
+        return logits[:, 0], cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jnp.ndarray,
+                    pos: jnp.ndarray, max_seq: int
+                    ) -> Tuple[jnp.ndarray, Params]:
+        """One decode step. tokens: (B, 1); pos: () scalar int32 (shared
+        across the static batch). Returns (logits (B, V), new cache)."""
+        cfg, pctx = self.cfg, self.pctx
+        x = self.embed(params, tokens,
+                       pos_offset=pos if cfg.arch_type == "audio" else None)
+        x = pctx.shard_act(x)
+        B = x.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        x, cache, _ = self._backbone(params, x, positions, mode="decode",
+                                     cache=cache, max_seq=max_seq)
+        logits = self.logits(params, x)
+        return logits[:, 0], cache
+
+    def decode_step_multi(self, params: Params, cache: Params,
+                          tokens: jnp.ndarray, pos: jnp.ndarray,
+                          max_seq: int) -> Tuple[jnp.ndarray, Params]:
+        """Continuous-batching decode: ``pos`` is (B,) int32 — every slot
+        decodes at its own position (single-host serving path)."""
+        cfg, pctx = self.cfg, self.pctx
+        x = self.embed(params, tokens)
+        B = x.shape[0]
+        positions = pos[:, None].astype(jnp.int32)
+        x, cache, _ = self._backbone(params, x, positions,
+                                     mode="decode_multi", cache=cache,
+                                     max_seq=max_seq)
+        logits = self.logits(params, x)
+        return logits[:, 0], cache
+
+    def write_slot(self, cache: Params, slot_cache: Params,
+                   slot: int) -> Params:
+        """Copy a freshly-prefilled single-request cache (batch 1) into
+        slot ``slot`` of a multi-slot cache (continuous batching join).
+        Structure-aware: blocks are scan-stacked (batch axis 1), tail
+        caches are per-layer (batch axis 0)."""
+        out = dict(cache)
+        out["blocks"] = jax.tree.map(
+            lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
+            cache["blocks"], slot_cache["blocks"])
+        out["tail"] = jax.tree.map(
+            lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
+            cache["tail"], slot_cache["tail"])
+        if "cross_kv" in cache:
+            out["cross_kv"] = jax.tree.map(
+                lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)),
+                cache["cross_kv"], slot_cache["cross_kv"])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy — never materialises (B, S, V) in fp32)
+# ---------------------------------------------------------------------------
+
+
+LOSS_CHUNK_DEFAULT = 512
+
+
+def lm_loss(model: Model, params: Params, hidden: jnp.ndarray,
+            labels: jnp.ndarray, chunk: Optional[int] = None) -> jnp.ndarray:
+    """hidden: (B, S, d); labels: (B, S) int32, -100 = ignore."""
+    if chunk is None:
+        chunk = LOSS_CHUNK_DEFAULT
+    cfg, pctx = model.cfg, model.pctx
+    B, S, d = hidden.shape
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    n_chunks = (S + pad) // chunk
+    hc = hidden.reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    final_norm = params["final_norm"]
+
+    def body(carry, inp):
+        tot, cnt = carry
+        h, lab = inp
+        h = _norm(cfg, final_norm, h)
+        logits = h @ w
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = pctx.shard_logits(logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = lab >= 0
+        safe = jnp.where(mask, lab, 0)
+        tgt = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mask, lse - tgt, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+    # remat per chunk: (B, chunk, V) logits are recomputed in the backward
+    # instead of being saved for every chunk.
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                 (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,375 @@
+"""Mixture-of-Experts layer: router, capacity dispatch, expert execution.
+
+Two equivalent execution paths (tested against each other):
+
+* ``moe_block_ref``     — pure jnp, single device.  The oracle, and the path
+  the Fiddler orchestrator decomposes at serving time.
+* ``moe_block_sharded`` — shard_map over the mesh.  Tokens are sharded over
+  the (pod, data) axes, experts over the model axis:
+    - ``ep`` mode (n_experts % model_size == 0): each model shard owns
+      E/model experts; every shard routes its (model-replicated) local
+      tokens, keeps only assignments that hit its own experts, computes,
+      and the per-token outputs are combined with a psum over ``model``.
+      No all-to-all is needed because activations are model-replicated in
+      the surrounding tensor-parallel layout.
+    - ``tp`` mode (otherwise, e.g. Mixtral's 8 experts on a 16-way axis):
+      every shard holds all experts but only d_ff/model of each; partial
+      down-projections are psum-combined.
+
+Dispatch is capacity-bucketed: tokens are ranked within their expert via an
+argsort (O(Tk log Tk), jit-friendly) and scattered into an (E, C, d) buffer,
+so compiled FLOPs stay proportional to the real expert compute (no dense
+(T, E, C) one-hot einsums).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import Params, activation, dense_init
+
+try:  # jax >= 0.8
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    assert cfg.moe is not None
+    m = cfg.moe
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E, d, f = m.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(k_r, (d, E), 0, jnp.float32),  # router in fp32
+        "w_gate": dense_init(k_g, (E, d, f), 1, dtype),
+        "w_up": dense_init(k_u, (E, d, f), 1, dtype),
+        "w_down": dense_init(k_d, (E, f, d), 1, dtype),
+    }
+    if m.n_shared_experts:
+        fs = f * m.n_shared_experts
+        ks1, ks2, ks3 = jax.random.split(k_s, 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks1, (d, fs), 0, dtype),
+            "w_up": dense_init(ks2, (d, fs), 0, dtype),
+            "w_down": dense_init(ks3, (fs, d), 0, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Router
+# ---------------------------------------------------------------------------
+
+
+def route(router_w: jnp.ndarray, x_flat: jnp.ndarray, m: MoEConfig
+          ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (gates (T,k), expert_idx (T,k), stats)."""
+    logits = x_flat.astype(jnp.float32) @ router_w  # (T, E)
+    if m.router_type == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(scores, m.top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = router_w.shape[1]
+    me = jnp.mean(probs, axis=0)  # (E,)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (T, k, E)
+    ce = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # fraction routed per expert
+    aux = E * jnp.sum(me * ce) * m.aux_loss_coef
+    stats = {"aux_loss": aux, "expert_counts": jnp.sum(onehot, axis=(0, 1))}
+    return gates, idx, stats
+
+
+# ---------------------------------------------------------------------------
+# Capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+def expert_ranks(expert_idx_flat: jnp.ndarray) -> jnp.ndarray:
+    """rank[i] = number of earlier assignments with the same expert id.
+
+    argsort-based: O(n log n), no (T, E) one-hot materialisation.
+    """
+    n = expert_idx_flat.shape[0]
+    order = jnp.argsort(expert_idx_flat, stable=True)
+    sorted_e = expert_idx_flat[order]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, iota, 0))
+    ranks_sorted = iota - seg_start
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)
+    return ranks
+
+
+def capacity_for(n_tokens: int, m: MoEConfig, kind: str, n_experts: int) -> int:
+    """Static per-expert capacity.
+
+    * tiny decode batches (≤256 assignments): C = T·k — strictly drop-free;
+    * larger decode batches: 8× the expected per-expert load (Poisson tail
+      P(load > 8·mean) ≈ 0 at these sizes) — §Perf P1 iter. 4: sizing C to
+      min(T·k, 4096) made the dispatch buffers dominate decode HBM traffic;
+    * train/prefill: the capacity factor.
+    """
+    tk = n_tokens * m.top_k
+    if kind == "decode" or tk <= 4096:
+        if tk <= 256:
+            return max(1, tk)
+        c = min(tk, max(16, 8 * (-(-tk // n_experts))))
+        return -(-c // 8) * 8
+    c = int(m.capacity_factor * tk / n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def dispatch_compute_combine(
+    x_flat: jnp.ndarray,        # (T, d)
+    gates: jnp.ndarray,         # (T, k)
+    idx: jnp.ndarray,           # (T, k)
+    w_gate: jnp.ndarray,        # (E_loc, d, f_loc)
+    w_up: jnp.ndarray,
+    w_down: jnp.ndarray,        # (E_loc, f_loc, d)
+    *,
+    capacity: int,
+    e_offset: jnp.ndarray,      # scalar int: first expert id owned locally
+    act: str = "silu",
+) -> jnp.ndarray:
+    """Scatter→grouped-matmul→gather for the locally-owned expert slice.
+
+    Returns the partial output (T, d): tokens whose experts live elsewhere
+    contribute zero (combined by the caller's psum in sharded mode).
+    """
+    T, d = x_flat.shape
+    E_loc = w_gate.shape[0]
+    k = idx.shape[1]
+    a = activation(act)
+
+    e_flat = idx.reshape(-1)                       # (T·k,) global ids
+    ranks = expert_ranks(e_flat)                   # (T·k,)
+    local_e = e_flat - e_offset
+    in_range = (local_e >= 0) & (local_e < E_loc)
+    keep = in_range & (ranks < capacity)
+    # clamp dropped/remote assignments into a scratch row
+    slot_e = jnp.where(keep, local_e, E_loc)       # scratch expert row
+    slot_c = jnp.where(keep, ranks, 0)
+
+    tok_ids = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    buf = jnp.zeros((E_loc + 1, capacity, d), x_flat.dtype)
+    buf = buf.at[slot_e, slot_c].set(x_flat[tok_ids], mode="drop")
+    xb = buf[:E_loc]                               # (E_loc, C, d)
+
+    h = a(jnp.einsum("ecd,edf->ecf", xb, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", xb, w_up)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)      # (E_loc, C, d)
+
+    y = jnp.concatenate([y, jnp.zeros((1, capacity, d), y.dtype)], axis=0)
+    gathered = y[slot_e, slot_c]                   # (T·k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weighted = gathered * gates.reshape(-1)[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, d), x_flat.dtype).at[tok_ids].add(weighted)
+    return out
+
+
+def _shared_expert(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    a = activation(act)
+    h = a(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Reference (single-device) block
+# ---------------------------------------------------------------------------
+
+
+def moe_block_ref(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  kind: str = "train") -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """x: (B, S, d) → (B, S, d), stats. Pure jnp, all experts local."""
+    m = cfg.moe
+    B, S, d = x.shape
+    x_flat = x.reshape(-1, d)
+    gates, idx, stats = route(params["router"], x_flat, m)
+    C = capacity_for(x_flat.shape[0], m, kind, m.n_experts)
+    out = dispatch_compute_combine(
+        x_flat, gates, idx, params["w_gate"], params["w_up"],
+        params["w_down"], capacity=C, e_offset=jnp.int32(0), act=cfg.act)
+    if m.n_shared_experts:
+        out = out + _shared_expert(params["shared"], x_flat, cfg.act)
+    return out.reshape(B, S, d), stats
+
+
+# ---------------------------------------------------------------------------
+# Sharded block (shard_map over the production mesh)
+# ---------------------------------------------------------------------------
+
+
+def moe_mode(cfg: ModelConfig, model_size: int) -> str:
+    assert cfg.moe is not None
+    return "ep" if cfg.moe.n_experts % model_size == 0 else "tp"
+
+
+def fsdp_applicable(cfg: ModelConfig, mode: str, fsdp_size: int) -> bool:
+    """FSDP shards d_ff (ep) / d_model (tp) over the data axes — only when
+    divisible.  Used by both the spec builder and the shard_map body so
+    storage layout and gather logic never diverge."""
+    if fsdp_size <= 1:
+        return False
+    if mode == "ep":
+        return cfg.d_ff % fsdp_size == 0
+    return cfg.d_model % fsdp_size == 0
+
+
+def moe_param_specs(cfg: ModelConfig, model_axis: str, model_size: int,
+                    fsdp_axes: Optional[Tuple[str, ...]] = None,
+                    fsdp_size: int = 0) -> Dict[str, Any]:
+    """Expert-weight PartitionSpecs.  With ``fsdp_axes`` (§Perf
+    FSDP_EXPERTS), a second dimension of every expert matrix is sharded
+    over the data axes and all-gathered per layer inside the body."""
+    mode = moe_mode(cfg, model_size)
+    fa = fsdp_axes if fsdp_axes else None
+    if fa is not None and fsdp_size and not fsdp_applicable(cfg, mode, fsdp_size):
+        fa = None
+    if mode == "ep":
+        specs = {
+            "router": P(None, None),
+            "w_gate": P(model_axis, None, fa),
+            "w_up": P(model_axis, None, fa),
+            "w_down": P(model_axis, fa, None),
+        }
+    else:
+        specs = {
+            "router": P(None, None),
+            "w_gate": P(None, fa, model_axis),
+            "w_up": P(None, fa, model_axis),
+            "w_down": P(None, model_axis, fa),
+        }
+    if cfg.moe.n_shared_experts:
+        specs["shared"] = {
+            "w_gate": P(None, model_axis),
+            "w_up": P(None, model_axis),
+            "w_down": P(model_axis, None),
+        }
+    return specs
+
+
+def _fsdp_gather_axes(mode: str) -> Dict[str, int]:
+    """Which dim of each expert matrix the FSDP all-gather restores."""
+    if mode == "ep":
+        return {"w_gate": 2, "w_up": 2, "w_down": 1}
+    return {"w_gate": 1, "w_up": 1, "w_down": 2}
+
+
+def moe_block_sharded(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+                      mesh, data_axes: Tuple[str, ...], model_axis: str,
+                      kind: str = "train",
+                      fsdp: Optional[bool] = None
+                      ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """shard_map MoE. x: (B, S, d) with B sharded over data_axes and the
+    feature/model axis replicated (tensor-parallel activation layout)."""
+    from repro.distributed import opts
+
+    if fsdp is None:
+        fsdp = opts.FSDP_EXPERTS
+    m = cfg.moe
+    model_size = mesh.shape[model_axis]
+    mode = moe_mode(cfg, model_size)
+    E = m.n_experts
+    E_loc = E // model_size if mode == "ep" else E
+
+    B, S, d = x.shape
+    store_axes = data_axes  # weight-storage axes (FSDP), batch-independent
+    data_size = 1
+    for ax in data_axes:
+        data_size *= mesh.shape[ax]
+    store_size = data_size
+    if B % data_size != 0:
+        # batch not shardable (e.g. long_500k B=1): replicate tokens over
+        # the data axes; the model axis still splits experts/d_ff.
+        data_axes = ()
+        data_size = 1
+    T_loc = (B // data_size) * S
+    C = capacity_for(T_loc, m, kind, E)
+
+    # FSDP expert storage only when the second dim divides the data axes
+    fsdp = fsdp and fsdp_applicable(cfg, mode, store_size)
+    p_specs = moe_param_specs(cfg, model_axis, model_size,
+                              fsdp_axes=store_axes if fsdp else None)
+    x_spec = P(data_axes if data_axes else None, None, None)
+    gather_dims = _fsdp_gather_axes(mode)
+
+    token_gather = fsdp and mode == "ep"
+    C_body = (capacity_for(T_loc * store_size, m, kind, E)
+              if (token_gather and data_axes) else C)
+
+    def body(p, xb):
+        if fsdp and not token_gather:
+            # tp mode: restore full expert matrices for this layer
+            # (ZeRO-3 style); backward of all_gather = reduce-scatter.
+            p = dict(p)
+            for k, ax in gather_dims.items():
+                p[k] = jax.lax.all_gather(p[k], store_axes, axis=ax,
+                                          tiled=True)
+        Bl, Sl, dl = xb.shape
+        x_flat = xb.reshape(-1, dl)
+        x_own = x_flat
+        if token_gather and data_axes:
+            # ep+FSDP (§Perf P1 iteration 2): weights stay put (f sharded
+            # over data); gather the TOKENS over data instead (KBs, not
+            # GBs), compute the local (expert, d_ff)-slice for all tokens,
+            # and let the final psum over (model, data) both sum the
+            # partial d_ff products and combine expert ownership.
+            T_own = x_flat.shape[0]
+            x_flat = jax.lax.all_gather(x_flat, data_axes, axis=0,
+                                        tiled=True)
+        gates, idx, stats = route(p["router"], x_flat, m)
+        if mode == "ep":
+            e_off = jax.lax.axis_index(model_axis) * E_loc
+        else:
+            e_off = jnp.int32(0)
+        out = dispatch_compute_combine(
+            x_flat, gates, idx, p["w_gate"], p["w_up"], p["w_down"],
+            capacity=C_body, e_offset=e_off, act=cfg.act)
+        if token_gather and data_axes:
+            # routed outputs: sum partial-d_ff products over data AND
+            # expert ownership over model, then take back our token block
+            out = jax.lax.psum(out, (model_axis,) + tuple(data_axes))
+            didx = jax.lax.axis_index(data_axes[0]) if len(data_axes) == 1 \
+                else (jax.lax.axis_index(data_axes[0]) * mesh.shape[data_axes[1]]
+                      + jax.lax.axis_index(data_axes[1]))
+            out = jax.lax.dynamic_slice_in_dim(out, didx * T_own, T_own,
+                                               axis=0)
+            if m.n_shared_experts:
+                # shared expert is data-replicated: own tokens, model psum
+                out = out + jax.lax.psum(
+                    _shared_expert(p["shared"], x_own, cfg.act), model_axis)
+        else:
+            if m.n_shared_experts:
+                out = out + _shared_expert(p["shared"], x_flat, cfg.act)
+            out = jax.lax.psum(out, model_axis)
+        stats = {
+            # identical on every model shard; averaged over token shards
+            "aux_loss": (jax.lax.pmean(stats["aux_loss"], data_axes)
+                         if data_axes else stats["aux_loss"]),
+            "expert_counts": (jax.lax.psum(stats["expert_counts"], data_axes)
+                              if data_axes and not token_gather
+                              else stats["expert_counts"]),
+        }
+        return out.reshape(Bl, Sl, dl), stats
+
+    out, stats = shard_map(
+        body, mesh=mesh,
+        in_specs=(p_specs, x_spec),
+        out_specs=(x_spec, {"aux_loss": P(), "expert_counts": P()}),
+        check_vma=False,
+    )(params, x)
+    return out, stats

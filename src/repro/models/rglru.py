@@ -1,0 +1,116 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU + conv), pure JAX.
+
+The temporal mixer is: x-branch (linear → causal conv(4) → RG-LRU) gated by
+a GeLU branch, then an output projection.  Train/prefill evaluate the linear
+recurrence h_t = a_t ⊙ h_{t-1} + b_t with an associative scan; decode is the
+single-step update.  Reference: arXiv:2402.19427 (Griffin / RecurrentGemma).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init
+
+_C_RGLRU = 8.0  # fixed scalar from the paper
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    h = cfg.hybrid
+    d, w = cfg.d_model, h.lru_width
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(k1, (d, w), 0, dtype),
+        "w_gate": dense_init(k2, (d, w), 0, dtype),
+        "conv_w": dense_init(k3, (4, w), 0, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(k4, (w, w), 0, dtype),     # recurrence gate
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(k5, (w, w), 0, dtype),     # input gate
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a^c is in (0.9, 0.999) at r=1 — paper's init range
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w).astype(jnp.float32)) / _C_RGLRU)),
+        "w_out": dense_init(k6, (w, d), 0, dtype),
+    }
+
+
+def _causal_conv4(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray]) -> jnp.ndarray:
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    return sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(W)) + b
+
+
+def _rglru_scan(x: jnp.ndarray, a_gate: jnp.ndarray, i_gate: jnp.ndarray,
+                lam: jnp.ndarray, h0: Optional[jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x, a_gate, i_gate: (B, S, W) fp32. Returns (h_seq, h_last)."""
+    log_a = -_C_RGLRU * jax.nn.softplus(lam) * a_gate       # (B,S,W) ≤ 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically-stable form
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_gate * x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if h0 is not None:
+        h = a_s * h0[:, None, :] + b_s
+    else:
+        h = b_s
+    return h, h[:, -1]
+
+
+def rglru_block(params: Params, u: jnp.ndarray, cfg: ModelConfig,
+                cache: Optional[Dict[str, jnp.ndarray]] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """u: (B, S, d) → (B, S, d). cache = {"h", "conv_state"} for decode."""
+    B, S, _ = u.shape
+    x = u @ params["w_x"]
+    gate = jax.nn.gelu(u @ params["w_gate"], approximate=True)
+
+    if cache is not None and S == 1:
+        conv_in = jnp.concatenate(
+            [cache["conv_state"].astype(x.dtype), x], axis=1)  # (B, 4, W)
+        w = params["conv_w"]
+        xc = sum(conv_in[:, i: i + 1] * w[i] for i in range(w.shape[0])) + params["conv_b"]
+        new_conv = conv_in[:, 1:]
+        xf = xc.astype(jnp.float32)[:, 0]
+        a_gate = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+        i_gate = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+        log_a = -_C_RGLRU * jax.nn.softplus(params["lam"]) * a_gate
+        a = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * cache["h"] + mult * (i_gate * xf)
+        y = h[:, None, :].astype(u.dtype)
+        new_cache = {"h": h, "conv_state": new_conv}
+    else:
+        x_raw = x
+        xc = _causal_conv4(x, params["conv_w"], params["conv_b"],
+                           None if cache is None else cache["conv_state"])
+        xf = xc.astype(jnp.float32)
+        a_gate = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+        i_gate = jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32) + params["b_i"])
+        h0 = None if cache is None else cache["h"]
+        h_seq, h_last = _rglru_scan(xf, a_gate, i_gate, params["lam"], h0)
+        y = h_seq.astype(u.dtype)
+        if cache is None:
+            new_cache = None
+        else:
+            hist = jnp.concatenate(
+                [cache["conv_state"].astype(x_raw.dtype), x_raw], axis=1)
+            new_cache = {"h": h_last, "conv_state": hist[:, -3:].astype(jnp.float32)}
+
+    out = (y * gate) @ params["w_out"]
+    return out, new_cache

@@ -1,0 +1,217 @@
+"""Mamba2 (SSD — state-space duality) block, pure JAX.
+
+Train/prefill use the chunked SSD algorithm (lax.scan over chunks carrying
+the (B, nh, hd, d_state) inter-chunk state); decode is the O(1) recurrent
+update.  Reference: Dao & Gu, "Transformers are SSMs" (arXiv:2405.21060).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense_init, init_rmsnorm, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    n_heads = inner // s.head_dim
+    conv_dim = inner + 2 * s.n_groups * s.state_dim
+    return dict(inner=inner, n_heads=n_heads, conv_dim=conv_dim,
+                proj_dim=2 * inner + 2 * s.n_groups * s.state_dim + n_heads)
+
+
+def _use_split_proj() -> bool:
+    from repro.distributed import opts
+
+    return opts.SPLIT_SSM_PROJ
+
+
+def init_ssm_block(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if _use_split_proj():
+        # §Perf SPLIT_SSM_PROJ: three separately-sharded projections
+        # instead of one fused matrix whose column split straddles shard
+        # boundaries (removing the per-layer resharding collectives).
+        ka, kb, kc = jax.random.split(k1, 3)
+        proj = {
+            "w_z": dense_init(ka, (cfg.d_model, dims["inner"]), 0, dtype),
+            "w_xbc": dense_init(kb, (cfg.d_model, dims["conv_dim"]), 0, dtype),
+            "w_dt": dense_init(kc, (cfg.d_model, dims["n_heads"]), 0, dtype),
+        }
+    else:
+        proj = {"in_proj": dense_init(k1, (cfg.d_model, dims["proj_dim"]),
+                                      0, dtype)}
+    return {
+        **proj,
+        "conv_w": dense_init(k2, (s.conv_width, dims["conv_dim"]), 0, dtype),
+        "conv_b": jnp.zeros((dims["conv_dim"],), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dims["n_heads"]).astype(jnp.float32)),
+        "D": jnp.ones((dims["n_heads"],), jnp.float32),
+        "dt_bias": jnp.zeros((dims["n_heads"],), jnp.float32),
+        "norm": init_rmsnorm(dims["inner"], dtype),
+        "out_proj": dense_init(k4, (dims["inner"], cfg.d_model), 0, dtype),
+    }
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    inner, g, st, nh = dims["inner"], s.n_groups, s.state_dim, dims["n_heads"]
+    z = zxbcdt[..., :inner]
+    xBC = zxbcdt[..., inner: inner + dims["conv_dim"]]
+    dt = zxbcdt[..., inner + dims["conv_dim"]:]
+    return z, xBC, dt
+
+
+def _project(params: Params, u: jnp.ndarray, cfg: ModelConfig):
+    """Input projection → (z, xBC, dt), fused or split per SPLIT_SSM_PROJ."""
+    if "in_proj" in params:
+        return _split_proj(u @ params["in_proj"], cfg)
+    return u @ params["w_z"], u @ params["w_xbc"], u @ params["w_dt"]
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xBC: (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+W-1, C)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                 state0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x:  (B, S, nh, hd)      dt: (B, S, nh)        A: (nh,) negative
+    Bm: (B, S, g, st)       Cm: (B, S, g, st)
+    Returns (y: (B, S, nh, hd), final_state: (B, nh, hd, st)).
+    """
+    Bsz, S, nh, hd = x.shape
+    g, st = Bm.shape[2], Bm.shape[3]
+    rep = nh // g
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (S + pad) // chunk
+
+    def resh(a, feat_shape):
+        return a.reshape((Bsz, n_chunks, chunk) + feat_shape).swapaxes(0, 1)
+
+    xc = resh(x, (nh, hd))
+    dtc = resh(dt, (nh,))
+    Bc = resh(Bm, (g, st))
+    Cc = resh(Cm, (g, st))
+
+    def body(state, inp):
+        x_i, dt_i, B_i, C_i = inp
+        # x_i: (B, L, nh, hd); dt_i: (B, L, nh); B_i/C_i: (B, L, g, st)
+        a = dt_i * A  # (B, L, nh) log-decay per step (negative)
+        cum = jnp.cumsum(a, axis=1)  # (B, L, nh)
+        # intra-chunk: Y[i] += sum_{j<=i} exp(cum[i]-cum[j]) dt[j] (C_i·B_j) x[j]
+        Lmat = cum[:, :, None, :] - cum[:, None, :, :]  # (B, L, L, nh)
+        iota = jnp.arange(x_i.shape[1])
+        causal = iota[:, None] >= iota[None, :]
+        # mask BEFORE exp: anti-causal entries are positive and can
+        # overflow to inf, which would poison the backward pass through
+        # the where (NaN gradients)
+        Lmat = jnp.exp(jnp.where(causal[None, :, :, None], Lmat, -1e30))
+        Bh = jnp.repeat(B_i, rep, axis=2)  # (B, L, nh, st)
+        Ch = jnp.repeat(C_i, rep, axis=2)
+        scores = jnp.einsum("blhs,bmhs->blmh", Ch, Bh)  # (B, L, L, nh)
+        M = scores * Lmat * dt_i[:, None, :, :]
+        y_intra = jnp.einsum("blmh,bmhd->blhd", M, x_i)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("blhs,bhds->blhd", Ch, state) * jnp.exp(cum)[..., None]
+        # state update: state' = exp(sum a) * state + sum_j exp(cum[-1]-cum[j]) dt_j B_j ⊗ x_j
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # (B, L, nh)
+        w = decay_to_end * dt_i  # (B, L, nh)
+        state_new = (jnp.exp(cum[:, -1])[:, :, None, None] * state
+                     + jnp.einsum("blh,blhs,blhd->bhds", w, Bh, x_i))
+        return state_new, y_intra + y_inter
+
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, nh, hd, st), jnp.float32)
+    # remat per chunk: the (B, L, L, nh) decay/score blocks are recomputed
+    # in the backward pass instead of being saved for all chunks.
+    final_state, yc = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                   state0, (xc, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(Bsz, S + pad, nh, hd)[:, :S]
+    return y, final_state
+
+
+def ssm_block(params: Params, u: jnp.ndarray, cfg: ModelConfig,
+              cache: Optional[Dict[str, jnp.ndarray]] = None
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Full Mamba2 mixer. u: (B, S, d). With a cache and S == 1 → decode."""
+    s = cfg.ssm
+    dims = ssm_dims(cfg)
+    nh, hd, g, st = dims["n_heads"], s.head_dim, s.n_groups, s.state_dim
+    B_, S, _ = u.shape
+    z, xBC, dt = _project(params, u, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,) negative
+
+    if cache is not None and S == 1:
+        # --- decode: O(1) recurrent update --------------------------------
+        conv_in = jnp.concatenate([cache["conv_state"].astype(xBC.dtype), xBC], axis=1)
+        w = params["conv_w"]
+        conv_out = sum(conv_in[:, i: i + 1] * w[i] for i in range(w.shape[0]))
+        xBC_t = jax.nn.silu(conv_out + params["conv_b"])  # (B,1,conv_dim)
+        new_conv_state = conv_in[:, 1:]
+        x = xBC_t[..., : dims["inner"]].reshape(B_, nh, hd)
+        Bm = xBC_t[..., dims["inner"]: dims["inner"] + g * st].reshape(B_, g, st)
+        Cm = xBC_t[..., dims["inner"] + g * st:].reshape(B_, g, st)
+        Bh = jnp.repeat(Bm, nh // g, axis=1)  # (B, nh, st)
+        Ch = jnp.repeat(Cm, nh // g, axis=1)
+        dt1 = dt[:, 0]  # (B, nh)
+        decay = jnp.exp(dt1 * A)  # (B, nh)
+        xf = x.astype(jnp.float32)
+        state = (cache["ssm_state"] * decay[..., None, None]
+                 + dt1[..., None, None] * jnp.einsum("bhs,bhd->bhds", Bh.astype(jnp.float32), xf))
+        y = jnp.einsum("bhs,bhds->bhd", Ch.astype(jnp.float32), state)
+        y = y + params["D"][:, None] * xf
+        y = y.reshape(B_, 1, dims["inner"]).astype(u.dtype)
+        new_cache = {"ssm_state": state, "conv_state": new_conv_state}
+    else:
+        # --- train / prefill: chunked SSD ---------------------------------
+        xBC_raw = xBC
+        xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                           None if cache is None else cache["conv_state"])
+        x = xBC[..., : dims["inner"]].reshape(B_, S, nh, hd)
+        Bm = xBC[..., dims["inner"]: dims["inner"] + g * st].reshape(B_, S, g, st)
+        Cm = xBC[..., dims["inner"] + g * st:].reshape(B_, S, g, st)
+        state0 = None if cache is None else cache["ssm_state"]
+        y, final_state = _ssd_chunked(
+            x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32), s.chunk_size, state0)
+        y = y + params["D"][:, None] * x.astype(jnp.float32)
+        y = y.reshape(B_, S, dims["inner"]).astype(u.dtype)
+        if cache is None:
+            new_cache = None
+        else:
+            W = params["conv_w"].shape[0]
+            hist = jnp.concatenate(
+                [cache["conv_state"].astype(xBC_raw.dtype), xBC_raw], axis=1)
+            new_cache = {
+                "ssm_state": final_state,
+                "conv_state": hist[:, -(W - 1):].astype(jnp.float32),
+            }
+    # gated RMSNorm + output projection
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

@@ -1,0 +1,115 @@
+"""Continuous batching: a fixed pool of decode slots, each at its own
+position; requests join as slots free up (prefill into the slot) and
+leave on EOS/max-tokens — no head-of-line blocking like the static
+grouped engine.
+
+Single-host serving path (jitted Model; per-slot cache writes are
+scatter-based, see kv_cache.write_decode_multi).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.serving.engine import Request
+from repro.serving.sampler import greedy
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0          # next decode position
+    last_token: int = 0
+    steps_left: int = 0
+
+
+class ContinuousEngine:
+    def __init__(self, model, params, *, n_slots: int = 4,
+                 max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: List[Request] = []
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.cache = model.make_cache(n_slots, max_seq, dtype=jnp.float32)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step_multi(p, c, t, pos,
+                                                         max_seq))
+        self._prefill1 = jax.jit(
+            lambda p, t: model.prefill(p, t, max_seq,
+                                       cache_dtype=jnp.float32))
+        self.steps = 0
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray([req.prompt], jnp.int32)
+            logits, slot_cache = self._prefill1(self.params, prompt)
+            self.cache = self.model.write_slot(self.cache, slot_cache, i)
+            tok = int(jnp.argmax(logits[0]))
+            req.output.append(tok)
+            req.ttft = float(self.steps)  # in engine steps
+            slot.req = req
+            slot.pos = len(req.prompt)
+            slot.last_token = tok
+            slot.steps_left = req.max_new_tokens - 1
+            if tok == EOS_ID or slot.steps_left <= 0:
+                self._retire(i)
+
+    def _retire(self, i: int) -> None:
+        slot = self.slots[i]
+        if slot.req is not None:
+            slot.req.latency = float(self.steps)
+            self.finished.append(slot.req)
+        self.slots[i] = _Slot()
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    def step(self) -> None:
+        """One decode step for every active slot (idle slots decode a pad
+        token at position 0 and are masked out)."""
+        self._admit()
+        if self.active == 0:
+            return
+        tokens = np.full((self.n_slots, 1), PAD_ID, np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.req is not None:
+                tokens[i, 0] = s.last_token
+                pos[i] = s.pos
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(pos))
+        next_tok = greedy(logits)
+        self.steps += 1
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            tok = int(next_tok[i])
+            s.req.output.append(tok)
+            s.pos += 1
+            s.last_token = tok
+            s.steps_left -= 1
+            if tok == EOS_ID or s.steps_left <= 0 or s.pos >= self.max_seq - 1:
+                self._retire(i)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or self.active) and self.steps < max_steps:
+            self.step()
+        return self.finished

@@ -1,0 +1,116 @@
+"""Batched serving engine: request queue → grouped prefill + decode.
+
+Requests are grouped into static batches (padded prompts), prefilled once,
+then decoded until EOS/max-tokens.  Works over the monolithic jitted
+``Model`` (capacity-sufficient regime) or over the ``FiddlerEngine``
+orchestrator (fast/slow-tier regime — the paper's setting).  Per-request
+TTFT/ITL are recorded from the engine's simulated clock when orchestrated,
+or wall-clock otherwise.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.serving.sampler import greedy, sample
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # outputs
+    output: List[int] = field(default_factory=list)
+    ttft: Optional[float] = None
+    latency: Optional[float] = None
+
+
+class ServingEngine:
+    def __init__(self, backend, *, mode: str = "model", params=None,
+                 max_batch: int = 8, max_seq: int = 512, seed: int = 0):
+        """backend: a ``Model`` (mode="model") or ``FiddlerEngine``
+        (mode="fiddler")."""
+        assert mode in ("model", "fiddler")
+        self.mode = mode
+        self.backend = backend
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        if mode == "model":
+            self._prefill = jax.jit(
+                lambda p, t: backend.prefill(p, t, max_seq))
+            self._decode = jax.jit(
+                lambda p, c, t, pos: backend.decode_step(p, c, t, pos, max_seq))
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _clock(self) -> float:
+        if self.mode == "fiddler":
+            return self.backend.ledger.sim_time
+        return time.perf_counter()
+
+    def _run_group(self, group: List[Request]) -> None:
+        B = len(group)
+        S = max(len(r.prompt) for r in group)
+        prompts = np.full((B, S), PAD_ID, np.int32)
+        for i, r in enumerate(group):
+            prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
+        t0 = self._clock()
+        if self.mode == "model":
+            logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        else:
+            logits, cache = self.backend.prefill(jnp.asarray(prompts),
+                                                 self.max_seq)
+        t_first = self._clock()
+        for r in group:
+            r.ttft = t_first - t0
+
+        done = np.zeros(B, bool)
+        n_steps = min(max(r.max_new_tokens for r in group),
+                      self.max_seq - S)
+        for step in range(n_steps):
+            if group[0].temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                tok = sample(logits, sub, group[0].temperature)
+            else:
+                tok = greedy(logits)
+            for i, r in enumerate(group):
+                if not done[i]:
+                    r.output.append(int(tok[i]))
+                    if tok[i] == EOS_ID or len(r.output) >= r.max_new_tokens:
+                        done[i] = True
+            if done.all():
+                break
+            pos = S + step
+            if self.mode == "model":
+                logits, cache = self._decode(self.params, cache,
+                                             jnp.asarray(tok[:, None]),
+                                             jnp.int32(pos))
+            else:
+                logits, cache = self.backend.decode_step(
+                    cache, jnp.asarray(tok[:, None]), pos, self.max_seq)
+        t_end = self._clock()
+        for r in group:
+            r.latency = t_end - t0
+
+    def run(self) -> List[Request]:
+        """Drain the queue in static batches of ≤ max_batch."""
+        finished: List[Request] = []
+        while self.queue:
+            group = self.queue[: self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            self._run_group(group)
+            finished.extend(group)
+        return finished

@@ -1,0 +1,29 @@
+"""Token samplers over final-position logits."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def greedy(logits: jnp.ndarray) -> np.ndarray:
+    """logits: (B, V) → (B,) int32."""
+    return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 1.0,
+           top_k: Optional[int] = None) -> np.ndarray:
+    if temperature <= 0.0:
+        return greedy(logits)
+    l = logits / temperature
+    if top_k is not None:
+        vals, _ = jax.lax.top_k(l, top_k)
+        thresh = vals[:, -1:]
+        l = jnp.where(l < thresh, -1e30, l)
+    return np.asarray(jax.random.categorical(key, l, axis=-1), np.int32)
+
+
+def log_softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)

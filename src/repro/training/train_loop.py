@@ -1,0 +1,65 @@
+"""Training step + loop.
+
+``make_train_step(model)`` returns the pure function that the launcher
+pjit-compiles for the production mesh (and the multi-pod dry-run lowers for
+every architecture × train shape).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, lm_loss
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_loss_fn(model: Model) -> Callable:
+    def loss_fn(params, batch):
+        extra = {k: v for k, v in batch.items()
+                 if k in ("image_embeds", "frames")}
+        hidden, aux = model.forward_train(params, batch["tokens"],
+                                          extra or None, remat=True)
+        loss = lm_loss(model, params, hidden, batch["labels"])
+        return loss + aux, {"lm_loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig()
+                    ) -> Callable:
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, opt_stats = adamw_update(params, grads, opt_state,
+                                                    opt_cfg)
+        metrics = {"loss": loss, **parts, **opt_stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, params, data_iter, n_steps: int,
+          opt_cfg: AdamWConfig = AdamWConfig(),
+          log_every: int = 10,
+          callback: Optional[Callable[[int, Dict[str, float]], None]] = None):
+    """Single-host eager training loop (examples + integration tests)."""
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    history = []
+    t0 = time.perf_counter()
+    for step in range(n_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(step, m)
+    return params, opt_state, history

@@ -1,0 +1,32 @@
+import os
+import sys
+
+# Keep the default device count at 1 for smoke tests/benches (the dry-run
+# sets its own XLA_FLAGS in a subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+_MODEL_CACHE = {}
+
+
+def reduced_model(arch: str):
+    """Cached (cfg, model, params) for a reduced architecture."""
+    if arch not in _MODEL_CACHE:
+        cfg = get_config(arch).reduced()
+        model = Model(cfg, param_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(42))
+        _MODEL_CACHE[arch] = (cfg, model, params)
+    return _MODEL_CACHE[arch]

@@ -1,0 +1,128 @@
+"""Attention: chunked (flash-style) vs dense oracle; prefill/decode cache
+consistency; sliding windows; softcap; ring-buffer semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.ref import flash_attention_ref
+from repro.models import kv_cache as kvc
+from repro.models.attention import (
+    attention_block,
+    chunked_attention,
+    decode_attention,
+    init_attention,
+)
+
+
+def _qkv(key, B, S, H, KV, hd, scale=0.3):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * scale
+    k = jax.random.normal(ks[1], (B, S, KV, hd)) * scale
+    v = jax.random.normal(ks[2], (B, S, KV, hd)) * scale
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 8, 64])
+@pytest.mark.parametrize("chunk", [7, 16, 128])
+def test_chunked_matches_dense(window, chunk):
+    B, S, H, hd = 2, 65, 4, 32
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, S, H, H, hd)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    got = chunked_attention(q, k, v, pos, pos, causal=True, window=window,
+                            kv_chunk=chunk)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_grouping():
+    """GQA: q-head h attends with kv-head h // (H/KV)."""
+    B, S, H, KV, hd = 1, 16, 8, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(1), B, S, H, KV, hd)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    got = chunked_attention(q, k, v, pos, pos, causal=True, kv_chunk=8)
+    k_full = jnp.repeat(k, H // KV, axis=2)
+    v_full = jnp.repeat(v, H // KV, axis=2)
+    want = flash_attention_ref(q, k_full, v_full, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_softcap_applied():
+    B, S, H, hd = 1, 12, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(2), B, S, H, H, hd, scale=2.0)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    a = chunked_attention(q, k, v, pos, pos, attn_softcap=5.0, kv_chunk=4)
+    b = flash_attention_ref(q, k, v, attn_softcap=5.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+    c = chunked_attention(q, k, v, pos, pos, kv_chunk=4)
+    assert float(jnp.abs(a - c).max()) > 1e-4
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-9b", "mixtral-8x7b"])
+def test_decode_matches_prefill(arch):
+    """Decoding token t+1 after prefilling t tokens must equal attention
+    over the full t+1 sequence."""
+    cfg = get_config(arch).reduced()
+    params = init_attention(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S + 1, cfg.d_model)) * 0.3
+    pos_full = jnp.broadcast_to(jnp.arange(S + 1)[None], (B, S + 1))
+    want, _ = attention_block(params, x, pos_full, cfg, 0, mode="train",
+                              max_seq=S + 1)
+
+    cache = kvc.init_attn_cache(cfg, 0, B, 32, jnp.float32)
+    pos_pre = pos_full[:, :S]
+    _, cache = attention_block(params, x[:, :S], pos_pre, cfg, 0,
+                               mode="prefill", cache=cache, max_seq=32)
+    got, _ = attention_block(params, x[:, S:], pos_full[:, S:], cfg, 0,
+                             mode="decode", cache=cache, max_seq=32)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(want[:, S]), rtol=2e-4, atol=2e-4)
+
+
+def test_ring_buffer_wrap():
+    """Windowed cache: writes past the window overwrite the oldest slot and
+    decode sees exactly the last `window` positions."""
+    cfg = get_config("mixtral-8x7b").reduced()  # window=64 reduced
+    W = 8
+    B = 1
+    cache = {"k": jnp.zeros((B, W, cfg.n_kv_heads, cfg.head_dim)),
+             "v": jnp.zeros((B, W, cfg.n_kv_heads, cfg.head_dim)),
+             "pos": jnp.full((B, W), -1, jnp.int32)}
+    for t in range(13):
+        k_new = jnp.full((B, 1, cfg.n_kv_heads, cfg.head_dim), float(t))
+        cache = kvc.write_decode(cache, k_new, k_new, jnp.int32(t))
+    pos = np.asarray(cache["pos"][0])
+    assert sorted(pos.tolist()) == list(range(5, 13))
+    # slot layout: pos % W
+    for slot, p in enumerate(pos):
+        assert p % W == slot
+
+
+def test_prefill_longer_than_window():
+    """write_prefill with S > W keeps exactly the last W positions at the
+    correct ring slots."""
+    B, W, KV, hd, S = 1, 8, 2, 4, 20
+    cache = {"k": jnp.zeros((B, W, KV, hd)), "v": jnp.zeros((B, W, KV, hd)),
+             "pos": jnp.full((B, W), -1, jnp.int32)}
+    k_new = jnp.arange(S, dtype=jnp.float32)[None, :, None, None] * jnp.ones((B, S, KV, hd))
+    cache = kvc.write_prefill(cache, k_new, k_new)
+    pos = np.asarray(cache["pos"][0])
+    assert sorted(pos.tolist()) == list(range(S - W, S))
+    for slot, p in enumerate(pos):
+        assert p % W == slot
+        assert float(cache["k"][0, slot, 0, 0]) == float(p)
+
+
+def test_fully_masked_rows_are_zero_not_nan():
+    B, S, H, hd = 1, 4, 2, 8
+    q, k, v = _qkv(jax.random.PRNGKey(3), B, S, H, H, hd)
+    pos_q = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos_kv = jnp.full((B, S), -1, jnp.int32)  # nothing valid
+    out = chunked_attention(q, k, v, pos_q, pos_kv, causal=True, kv_chunk=2)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)

@@ -1,0 +1,131 @@
+"""Beyond-paper orchestrator extensions: LRU expert cache, adaptive
+placement, int8 slow tier (core/expert_cache.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_model
+from repro.configs import get_config
+from repro.core import FiddlerEngine, HardwareSpec
+from repro.core.expert_cache import (
+    AdaptivePlacement,
+    LRUExpertCache,
+    QuantizedHostExpert,
+    dequantize_expert,
+    quantize_expert,
+)
+from repro.core.popularity import synthetic_profile
+
+
+@given(st.integers(1, 8), st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 7)), min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_lru_never_exceeds_capacity(cap, accesses):
+    lru = LRUExpertCache(cap)
+    for (l, e) in accesses:
+        if not lru.lookup(l, e):
+            lru.insert(l, e)
+        assert lru.occupancy <= cap
+
+
+def test_lru_eviction_order():
+    lru = LRUExpertCache(2)
+    lru.insert(0, 0)
+    lru.insert(0, 1)
+    assert lru.lookup(0, 0)          # touch 0 → 1 is now LRU
+    evicted = lru.insert(0, 2)
+    assert evicted == (0, 1)
+    assert (0, 0) in lru and (0, 2) in lru
+
+
+def test_zero_capacity_cache_is_noop():
+    lru = LRUExpertCache(0)
+    assert lru.insert(0, 0) is None
+    assert not lru.lookup(0, 0)
+    assert lru.occupancy == 0
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_int8_roundtrip_error_bounded(din, dout, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((din, dout)).astype(np.float32)
+    q, s = quantize_expert(w)
+    back = dequantize_expert(q, s)
+    # per-channel symmetric int8: error ≤ scale/2 per element
+    assert np.all(np.abs(back - w) <= s / 2 + 1e-7)
+
+
+def test_quantized_host_expert_close():
+    rng = np.random.default_rng(0)
+    d, f = 64, 128
+    wg, wu = [rng.standard_normal((d, f)).astype(np.float32) * 0.05
+              for _ in range(2)]
+    wd = rng.standard_normal((f, d)).astype(np.float32) * 0.05
+    from repro.kernels.host_expert import HostExpert
+
+    x = rng.standard_normal((4, d)).astype(np.float32) * 0.3
+    exact = HostExpert(wg, wu, wd, precision="fp32")(x)
+    quant = QuantizedHostExpert(wg, wu, wd)(x)
+    assert np.abs(quant - exact).max() < 0.05
+    assert QuantizedHostExpert(wg, wu, wd).nbytes() < 0.6 * (3 * d * f * 2)
+
+
+def test_lru_improves_offload_decode():
+    full = get_config("mixtral-8x7b")
+    kw = dict(policy="offload", hw=HardwareSpec.paper_env1(), seed=0)
+    base = FiddlerEngine(full, **kw).simulate_generate(64, 64)
+    lru = FiddlerEngine(full, **kw, lru_cache_experts=64) \
+        .simulate_generate(64, 64)
+    assert lru["tokens_per_s"] > base["tokens_per_s"] * 1.1
+
+
+def test_int8_improves_fiddler_decode():
+    full = get_config("mixtral-8x7b")
+    kw = dict(policy="fiddler", hw=HardwareSpec.paper_env1(), seed=0)
+    base = FiddlerEngine(full, **kw).simulate_generate(64, 64)
+    q = FiddlerEngine(full, **kw, quantize_slow=True) \
+        .simulate_generate(64, 64)
+    assert q["tokens_per_s"] > base["tokens_per_s"] * 1.3
+
+
+def test_adaptive_placement_tracks_shift():
+    full = get_config("mixtral-8x7b")
+    serve = synthetic_profile(full.n_layers, full.moe.n_experts, seed=123,
+                              concentration=3.0)
+    kw = dict(policy="fiddler", hw=HardwareSpec.paper_env1(), seed=0,
+              profile=synthetic_profile(full.n_layers, full.moe.n_experts,
+                                        seed=0))
+    static = FiddlerEngine(full, **kw)
+    static.profile = serve
+    adapt = FiddlerEngine(full, **kw, adaptive=True)
+    adapt.profile = serve
+    r_static = static.simulate_generate(64, 384)
+    r_adapt = adapt.simulate_generate(64, 384)
+    assert adapt.adaptive.swapped_experts > 0
+    assert r_adapt["tokens_per_s"] > r_static["tokens_per_s"]
+
+
+def test_real_mode_lru_and_int8_numerics():
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 3,
+                                cfg.vocab_size)
+    ref, _ = model.prefill(params, tokens, max_seq=32,
+                           cache_dtype=jnp.float32)
+    eng = FiddlerEngine(cfg, params, policy="offload", expert_budget=2,
+                        host_precision="fp32", lru_cache_experts=6)
+    lg, caches = eng.prefill(tokens, max_seq=32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref), rtol=3e-4,
+                               atol=3e-4)
+    for i in range(4):
+        lg, caches = eng.decode_step(caches, tokens[:, :1], pos=12 + i,
+                                     max_seq=32)
+    assert eng.lru.hits > 0
+
+    engq = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=2,
+                         quantize_slow=True)
+    lgq, _ = engq.prefill(tokens, max_seq=32)
+    err = float(jnp.abs(lgq - jnp.asarray(ref)).max())
+    assert err < 0.5  # int8-level, not garbage

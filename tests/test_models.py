@@ -1,0 +1,65 @@
+"""End-to-end model consistency: decode path ≡ training forward at the
+same positions, for one representative arch per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+
+FAMILY_REPS = ["qwen3-0.6b", "gemma2-9b", "mixtral-8x22b", "mamba2-2.7b",
+               "recurrentgemma-2b", "whisper-large-v3", "internvl2-76b"]
+
+
+@pytest.mark.parametrize("arch", FAMILY_REPS)
+def test_decode_consistent_with_forward(arch):
+    cfg, model, params = reduced_model(arch)
+    B, S = 2, 10
+    key = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(key, (B, S + 1), 3, cfg.vocab_size)
+    extra = {}
+    if cfg.arch_type == "vlm":
+        extra["image_embeds"] = 0.02 * jax.random.normal(key, (B, 4, cfg.d_model))
+    if cfg.arch_type == "audio":
+        extra["frames"] = 0.02 * jax.random.normal(
+            key, (B, cfg.encdec.n_audio_frames, cfg.d_model))
+
+    # full forward over all S+1 tokens; last position predicts token S+1
+    hidden, _ = model.forward_train(params, tokens, extra or None, remat=False)
+    off = hidden.shape[1] - (S + 1)  # modality prefix length (vlm)
+    full_logits = model.logits(params, hidden[:, -1:])[:, 0]
+
+    # prefill tokens 0..S-1 (its logits predict token S) …
+    logits_pre, cache = model.prefill(params, tokens[:, :S], max_seq=32,
+                                      extra=extra or None,
+                                      cache_dtype=jnp.float32)
+    want_pre = model.logits(params, hidden[:, off + S - 1: off + S])[:, 0]
+    np.testing.assert_allclose(np.asarray(logits_pre), np.asarray(want_pre),
+                               rtol=5e-3, atol=5e-3)
+
+    # … then decode token S at position off+S → predicts token S+1
+    logits_dec, _ = model.decode_step(params, cache, tokens[:, S:S + 1],
+                                      jnp.int32(off + S), max_seq=32)
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(full_logits),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-2.7b"])
+def test_greedy_continuation_deterministic(arch):
+    cfg, model, params = reduced_model(arch)
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 3,
+                                cfg.vocab_size)
+    outs = []
+    for _ in range(2):
+        logits, cache = model.prefill(params, tokens, max_seq=32,
+                                      cache_dtype=jnp.float32)
+        seq = []
+        tok = jnp.argmax(logits, -1)[:, None]
+        for t in range(5):
+            seq.append(int(tok[0, 0]))
+            logits, cache = model.decode_step(params, cache, tok,
+                                              jnp.int32(S + t), max_seq=32)
+            tok = jnp.argmax(logits, -1)[:, None]
+        outs.append(seq)
+    assert outs[0] == outs[1]

@@ -1,0 +1,73 @@
+"""Property tests for popularity profiling and expert placement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (
+    PlacementReport,
+    hit_rate,
+    place_by_popularity,
+    place_random,
+    place_static_split,
+    place_worst,
+)
+from repro.core.popularity import ExpertProfile, synthetic_profile
+
+
+@given(st.integers(2, 8), st.integers(2, 16), st.integers(0, 64),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=100, deadline=None)
+def test_greedy_placement_is_optimal(L, E, budget, seed):
+    rng = np.random.default_rng(seed)
+    prof = ExpertProfile(rng.random((L, E)) * 100)
+    best = place_by_popularity(prof, budget)
+    assert best.n_resident == min(budget, L * E)
+    hr_best = hit_rate(prof, best)
+    # no random placement of the same budget beats greedy
+    for s in range(5):
+        hr_rand = hit_rate(prof, place_random(L, E, budget, seed=s))
+        assert hr_best >= hr_rand - 1e-12
+    assert hr_best >= hit_rate(prof, place_worst(prof, budget)) - 1e-12
+
+
+@given(st.integers(2, 6), st.integers(2, 12))
+@settings(max_examples=50, deadline=None)
+def test_hit_rate_bounds(L, E):
+    prof = synthetic_profile(L, E, seed=1)
+    assert hit_rate(prof, place_by_popularity(prof, 0)) == 0.0
+    assert abs(hit_rate(prof, place_by_popularity(prof, L * E)) - 1.0) < 1e-9
+
+
+def test_profile_update_and_normalize():
+    prof = ExpertProfile.empty(2, 4)
+    prof.update(0, np.array([0, 0, 1, 3]))
+    prof.update(1, np.array([2, 2, 2, 2]))
+    assert prof.counts[0, 0] == 2
+    assert prof.normalized().max() == 1.0
+    p = prof.probabilities()
+    np.testing.assert_allclose(p.sum(axis=1), [1.0, 1.0])
+
+
+def test_paper_appendix_c_regime():
+    """Paper App. C (Mixtral-8x7B, 32 layers × 8 experts): with 56/256
+    experts resident, best ≈ 25.2%, random ≈ 21.9%, worst ≈ 18.7% —
+    popularity placement buys ~3–5pp.  Our synthetic ShareGPT-like profile
+    reproduces that ordering and magnitude."""
+    prof = synthetic_profile(32, 8, seed=0, concentration=12.0)
+    rep = PlacementReport.build(prof, budget=56)
+    assert rep.best > rep.random > rep.worst
+    assert 0.01 < rep.best - rep.random < 0.10
+    assert abs(rep.random - 56 / 256) < 1e-9
+
+
+def test_static_split_shape():
+    p = place_static_split(8, 4, 3)
+    assert p.on_fast[:3].all() and not p.on_fast[3:].any()
+
+
+def test_profile_save_load(tmp_path):
+    prof = synthetic_profile(4, 8, seed=3)
+    path = str(tmp_path / "prof.npz")
+    prof.save(path)
+    loaded = ExpertProfile.load(path)
+    np.testing.assert_array_equal(prof.counts, loaded.counts)

@@ -1,0 +1,119 @@
+"""Property tests for Algorithm 1 (the paper's planner) with hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import HardwareSpec, LatencyModel
+from repro.core.planner import (
+    Decision,
+    brute_force_plan,
+    plan_layer,
+    plan_layer_jnp,
+)
+
+lat_strategy = st.builds(
+    LatencyModel,
+    gpu_const=st.floats(1e-6, 1e-2),
+    gpu_per_token=st.floats(0.0, 1e-5),
+    cpu_base=st.floats(0.0, 1e-3),
+    cpu_per_token=st.floats(1e-7, 1e-2),
+    weight_transfer=st.floats(1e-6, 1e-1),
+    act_per_token=st.floats(0.0, 1e-6),
+)
+
+sizes_strategy = st.lists(st.integers(0, 5000), min_size=1, max_size=64)
+
+
+@given(lat=lat_strategy, sizes=sizes_strategy, data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_planner_matches_bruteforce(lat, sizes, data):
+    s = np.asarray(sizes)
+    on_fast = np.asarray(
+        data.draw(st.lists(st.booleans(), min_size=len(sizes),
+                           max_size=len(sizes))))
+    plan = plan_layer(s, on_fast, lat)
+    oracle = brute_force_plan(s, on_fast, lat)
+    np.testing.assert_array_equal(plan.decisions, oracle)
+
+
+@given(lat=lat_strategy, sizes=sizes_strategy, data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_planner_jnp_matches_numpy(lat, sizes, data):
+    import jax.numpy as jnp
+
+    s = np.asarray(sizes)
+    on_fast = np.asarray(
+        data.draw(st.lists(st.booleans(), min_size=len(sizes),
+                           max_size=len(sizes))))
+    plan = plan_layer(s, on_fast, lat)
+    dec_j = np.asarray(plan_layer_jnp(jnp.asarray(s), jnp.asarray(on_fast), lat))
+    np.testing.assert_array_equal(plan.decisions, dec_j)
+
+
+@given(lat=lat_strategy, sizes=sizes_strategy)
+@settings(max_examples=100, deadline=None)
+def test_planner_invariants(lat, sizes):
+    s = np.asarray(sizes)
+    on_fast = np.zeros(len(sizes), bool)
+    plan = plan_layer(s, on_fast, lat)
+    # zero-input experts are skipped; active experts always get a decision
+    assert (plan.decisions[s == 0] == int(Decision.SKIP)).all()
+    assert (plan.decisions[s > 0] != int(Decision.SKIP)).all()
+    # resident experts never stream or go slow
+    on_fast2 = np.ones(len(sizes), bool)
+    plan2 = plan_layer(s, on_fast2, lat)
+    assert (plan2.decisions[s > 0] == int(Decision.FAST_RESIDENT)).all()
+    # estimates are non-negative
+    assert plan.est_fast_time >= 0 and plan.est_slow_time >= 0
+    assert plan.est_overlapped <= plan.est_total + 1e-12
+
+
+@given(lat=lat_strategy)
+@settings(max_examples=100, deadline=None)
+def test_decision_monotone_in_input_size(lat):
+    """Paper §3.2: CPU is preferred below a crossover input size and the
+    stream path above it — the decision is monotone in s.  (Holds under
+    the paper's premise that the slow tier's marginal per-token cost
+    exceeds the fast tier's.)"""
+    from hypothesis import assume
+
+    assume(lat.cpu_per_token + lat.act_per_token > lat.gpu_per_token)
+    sizes = np.arange(1, 4097)
+    on_fast = np.zeros_like(sizes, dtype=bool)
+    plan = plan_layer(sizes, on_fast, lat)
+    slow = plan.decisions == int(Decision.SLOW)
+    # once streaming wins at size s, it wins for all larger s
+    if slow.any() and (~slow).any():
+        last_slow = np.nonzero(slow)[0].max()
+        first_stream = np.nonzero(~slow)[0].min()
+        assert first_stream > last_slow
+
+    cross = lat.crossover(4096)
+    if cross < 4096:
+        assert not lat.prefer_cpu(cross)
+        assert lat.prefer_cpu(max(cross - 1, 1)) or cross == 1
+
+
+def test_paper_rule_verbatim():
+    """cpu_lat(s) > gpu_lat(s) + transfer_lat() ⟺ stream (Alg. 1 line 12)."""
+    lat = LatencyModel(gpu_const=1e-3, gpu_per_token=0.0, cpu_base=0.0,
+                       cpu_per_token=1e-4, weight_transfer=9e-3,
+                       act_per_token=0.0)
+    # crossover at s = (1e-3 + 9e-3) / 1e-4 = 100
+    plan = plan_layer(np.array([99, 100, 101, 150]),
+                      np.zeros(4, bool), lat)
+    assert plan.decisions[0] == int(Decision.SLOW)
+    assert plan.decisions[3] == int(Decision.FAST_STREAM)
+
+
+def test_derived_model_shape():
+    """Sanity of the napkin-math model: fast tier ~constant, slow ~linear
+    (paper App. A observation)."""
+    from repro.configs import get_config
+
+    lat = LatencyModel.derive(get_config("mixtral-8x7b"), HardwareSpec())
+    g1, g64 = lat.gpu_lat(1), lat.gpu_lat(64)
+    c1, c64 = lat.cpu_lat(1), lat.cpu_lat(64)
+    assert g64 / g1 < 2.0                       # near-constant fast tier
+    assert (c64 - c1) > 10 * (g64 - g1)         # slow-tier slope dominates
+    assert lat.transfer_lat() > lat.gpu_lat(1)  # PCIe ≫ HBM read (2–5×, App. A)

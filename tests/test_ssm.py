@@ -1,0 +1,101 @@
+"""Mamba2 SSD + RG-LRU: chunked-scan vs step-by-step recurrence, chunk-size
+invariance, cache continuation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import kv_cache as kvc
+from repro.models.rglru import init_rglru_block, rglru_block
+from repro.models.ssm import init_ssm_block, ssm_block
+
+
+def _ssm_cfg(chunk=8):
+    cfg = get_config("mamba2-2.7b").reduced()
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm,
+                                                            chunk_size=chunk))
+
+
+def test_chunk_size_invariance():
+    """SSD output must not depend on the chunk size."""
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 256)) * 0.3
+    outs = []
+    for chunk in (4, 8, 24):
+        cfg = _ssm_cfg(chunk)
+        params = init_ssm_block(key, cfg)
+        out, _ = ssm_block(params, u, cfg)
+        outs.append(np.asarray(out))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_prefill_then_decode_matches_full():
+    """prefill(x[:S]) + decode(x[S]) ≡ full forward over S+1 tokens."""
+    cfg = _ssm_cfg(4)
+    params = init_ssm_block(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 11
+    u = jax.random.normal(jax.random.PRNGKey(2), (B, S + 1, cfg.d_model)) * 0.3
+    want, _ = ssm_block(params, u, cfg)
+
+    cache = kvc.init_ssm_cache(cfg, B)
+    _, cache = ssm_block(params, u[:, :S], cfg, cache=cache)
+    got, _ = ssm_block(params, u[:, S:], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want[:, S]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_chain_matches_scan():
+    """Running decode step-by-step over a sequence equals the chunked scan."""
+    cfg = _ssm_cfg(4)
+    params = init_ssm_block(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 9
+    u = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model)) * 0.3
+    want, _ = ssm_block(params, u, cfg)
+    cache = kvc.init_ssm_cache(cfg, B)
+    got = []
+    for t in range(S):
+        y, cache = ssm_block(params, u[:, t:t + 1], cfg, cache=cache)
+        got.append(np.asarray(y[:, 0]))
+    got = np.stack(got, axis=1)
+    np.testing.assert_allclose(got, np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_prefill_then_decode_matches_full():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = init_rglru_block(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 10
+    u = jax.random.normal(jax.random.PRNGKey(4), (B, S + 1, cfg.d_model)) * 0.3
+    want, _ = rglru_block(params, u, cfg)
+    cache = kvc.init_lru_cache(cfg, B)
+    _, cache = rglru_block(params, u[:, :S], cfg, cache=cache)
+    got, _ = rglru_block(params, u[:, S:], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want[:, S]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decode_chain():
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = init_rglru_block(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 7
+    u = jax.random.normal(jax.random.PRNGKey(5), (B, S, cfg.d_model)) * 0.3
+    want, _ = rglru_block(params, u, cfg)
+    cache = kvc.init_lru_cache(cfg, B)
+    got = []
+    for t in range(S):
+        y, cache = rglru_block(params, u[:, t:t + 1], cfg, cache=cache)
+        got.append(np.asarray(y[:, 0]))
+    np.testing.assert_allclose(np.stack(got, 1), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU gate: 0 < a < 1 always (stability)."""
+    cfg = get_config("recurrentgemma-2b").reduced()
+    params = init_rglru_block(jax.random.PRNGKey(0), cfg)
+    lam = np.asarray(params["lam"])
+    a_at_r1 = np.exp(-8.0 * np.log1p(np.exp(lam)))
+    assert (a_at_r1 > 0).all() and (a_at_r1 < 1).all()

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the paper's system.
+
+1. A short training run on a reduced MoE model must reduce the loss.
+2. Train → checkpoint → serve through the Fiddler orchestrator: the full
+   production path, numerics identical to the monolithic model.
+3. The dry-run harness works end-to-end on a tiny mesh (subprocess so the
+   forced device count doesn't leak into this process).
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.data.pipeline import make_batch_iter
+from repro.models import Model, lm_loss
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def test_training_reduces_loss():
+    cfg = get_config("mixtral-8x7b").reduced()
+    model = Model(cfg, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    data = make_batch_iter(cfg, seq_len=32, batch=4, seed=0)
+    params, opt, hist = train(model, params, iter(data), n_steps=30,
+                              opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=5),
+                              log_every=29)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert np.isfinite(last)
+    assert last < first - 0.5, (first, last)
+
+
+def test_train_checkpoint_serve_roundtrip(tmp_path):
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    save_checkpoint(str(tmp_path / "ck"), params, step=1)
+    loaded, _ = load_checkpoint(str(tmp_path / "ck"),
+                                like={"params": params})
+    restored = loaded["params"]
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 3,
+                                cfg.vocab_size)
+    ref, _ = model.prefill(params, tokens, max_seq=16,
+                           cache_dtype=jnp.float32)
+    eng = FiddlerEngine(cfg, restored, policy="fiddler", expert_budget=20,
+                        host_precision="fp32")
+    got, _ = eng.prefill(tokens, max_seq=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=3e-4,
+                               atol=3e-4)
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_subprocess():
+    """launch/dryrun on a 2×4 mesh in a subprocess (own XLA_FLAGS)."""
+    code = (
+        "import os; os.environ['XLA_FLAGS']="
+        "'--xla_force_host_platform_device_count=8'\n"
+        "import jax\n"
+        "mesh = jax.make_mesh((2, 4), ('data', 'model'),"
+        " axis_types=(jax.sharding.AxisType.Auto,)*2)\n"
+        "from repro.launch.dryrun import dryrun_one\n"
+        "r = dryrun_one('qwen3-0.6b', 'decode_32k', mesh=mesh, verbose=False)\n"
+        "assert r['ok'], r\n"
+        "print('DRYRUN_OK', r['bottleneck'])\n"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600,
+                         env={**__import__('os').environ,
+                              "PYTHONPATH": "src"},
+                         cwd=__import__('os').path.join(
+                             __import__('os').path.dirname(__file__), ".."))
+    assert "DRYRUN_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_single_device_visible():
+    """Smoke tests must see exactly one device (dry-run flags must not
+    leak — system prompt requirement)."""
+    assert len(jax.devices()) == 1
