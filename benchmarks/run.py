@@ -29,6 +29,7 @@ def main() -> None:
         portability,
         prefill_ttft,
         roofline,
+        serve_load,
         sparsity,
     )
 
@@ -42,6 +43,7 @@ def main() -> None:
         ("fig8_popularity", lambda: popularity.run(fast=fast)),
         ("fig9_dataset_sensitivity", lambda: dataset_sensitivity.run(fast=fast)),
         ("appE_portability", lambda: portability.run(fast=fast)),
+        ("serve_load_poisson", lambda: serve_load.run(fast=fast)),
         ("beyond_paper_extensions", lambda: extensions.run(fast=fast)),
         ("roofline", roofline.report),
     ]

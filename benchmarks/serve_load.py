@@ -1,0 +1,111 @@
+"""Continuous-batching load benchmark: Poisson arrivals through the
+orchestrated serving scheduler.
+
+A Poisson load generator (arrivals in *simulated* seconds on the
+paper-env hardware specs) drives ``ContinuousEngine`` over a
+``FiddlerBackend``: real reduced-Mixtral numerics, full-size-config
+latency constants (``timing_cfg``), chunked admission.  Sweeps arrival
+rate × slot count across the three policies and reports per-config
+throughput (tokens / simulated second), mean TTFT and mean ITL — the
+heavy-traffic scenario axis the monolithic static-batch benchmarks never
+exercise.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ENVS, POLICIES, emit
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.serving.backend import FiddlerBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+MAX_SEQ = 48
+PREFILL_CHUNK = 8
+
+_model_cache = {}
+
+
+def _reduced(model_name: str):
+    if model_name not in _model_cache:
+        from repro.models import Model
+
+        full = get_config(model_name)
+        cfg = full.reduced()
+        model = Model(cfg, param_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(0))
+        _model_cache[model_name] = (full, cfg, model, params)
+    return _model_cache[model_name]
+
+
+def poisson_requests(rate_hz: float, n: int, *, prompt_len: int = 12,
+                     max_new: int = 8, seed: int = 0) -> List[Request]:
+    """n requests with exponential inter-arrival gaps at ``rate_hz``
+    (simulated seconds) and random prompts."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_hz)
+        plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
+        prompt = [1] + rng.integers(3, 250, size=plen - 1).tolist()
+        reqs.append(Request(rid=f"r{i}", prompt=prompt, max_new_tokens=max_new,
+                            arrival=t))
+    return reqs
+
+
+def serve_once(model_name: str, policy: str, env: str, *, rate_hz: float,
+               n_slots: int, n_requests: int, seed: int = 0) -> Dict[str, float]:
+    full, cfg, model, params = _reduced(model_name)
+    eng = FiddlerEngine(cfg, params, policy=policy, hw=ENVS[env],
+                        timing_cfg=full, host_precision="fp32",
+                        expert_budget=cfg.n_layers * cfg.moe.n_experts // 4,
+                        seed=seed)
+    serving = ContinuousEngine(FiddlerBackend(eng, max_seq=MAX_SEQ),
+                               n_slots=n_slots, max_seq=MAX_SEQ,
+                               prefill_chunk=PREFILL_CHUNK)
+    for r in poisson_requests(rate_hz, n_requests, seed=seed):
+        serving.submit(r)
+    done = serving.run()
+    assert len(done) == n_requests, (len(done), n_requests)
+    led = eng.ledger
+    n_tokens = sum(len(r.output) for r in done)
+    itls = [r.itl for r in done if r.itl is not None]
+    return {
+        "throughput_tok_per_s": n_tokens / led.sim_time if led.sim_time else 0.0,
+        "mean_ttft": float(np.mean([r.ttft for r in done])),
+        "mean_itl": float(np.mean(itls)) if itls else 0.0,
+        "hit_rate": led.fast_hits / max(led.fast_hits + led.streams
+                                        + led.slow_runs, 1),
+    }
+
+
+def run(model: str = "mixtral-8x7b", env: str = "env1",
+        fast: bool = False) -> Dict[str, Dict[str, float]]:
+    rates = [2.0, 16.0] if fast else [2.0, 8.0, 32.0]
+    slot_counts = [2] if fast else [2, 4]
+    n_requests = 6 if fast else 16
+    results = {}
+    for policy in POLICIES:
+        for rate in rates:
+            for n_slots in slot_counts:
+                r = serve_once(model, policy, env, rate_hz=rate,
+                               n_slots=n_slots, n_requests=n_requests)
+                key = f"serve_load/{env}/{policy}/rate{rate:g}_slots{n_slots}"
+                emit(key, r["mean_itl"] * 1e6,
+                     f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                     f"ttft={r['mean_ttft']:.4f}s "
+                     f"hit_rate={r['hit_rate']:.2f}")
+                results[key] = r
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(fast="--full" not in sys.argv)

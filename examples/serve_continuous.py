@@ -1,0 +1,59 @@
+"""Continuous batching through the Fiddler orchestrator.
+
+A request stream with Poisson arrival times flows through the slot-based
+``ContinuousEngine`` over a ``FiddlerBackend``: prompts are admitted in
+chunks (so a long admission never stalls in-flight decodes), the planner
+sees the mixed in-flight batch's expert counts each step, and TTFT/ITL
+are recorded in simulated seconds on the paper's env1 hardware spec.
+
+  PYTHONPATH=src python examples/serve_continuous.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import FiddlerEngine, HardwareSpec
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import Model
+from repro.serving.backend import FiddlerBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+
+def main():
+    full = get_config("mixtral-8x7b")
+    cfg = full.reduced()  # real numerics at reduced scale on CPU
+    model = Model(cfg, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    tok = ByteTokenizer(cfg.vocab_size)
+
+    fe = FiddlerEngine(cfg, params, policy="fiddler", timing_cfg=full,
+                       hw=HardwareSpec.paper_env1(), host_precision="fp32",
+                       expert_budget=cfg.n_layers * cfg.moe.n_experts // 4)
+    eng = ContinuousEngine(FiddlerBackend(fe, max_seq=96), n_slots=3,
+                           max_seq=96, prefill_chunk=8)
+
+    rng = np.random.default_rng(0)
+    texts = ["the paper's fast tier", "experts on the slow tier",
+             "orchestrate cpu and gpu", "mixture of experts serving",
+             "continuous batching wins", "a longer prompt that needs "
+             "several admission chunks before its first token"]
+    t = 0.0
+    for i, text in enumerate(texts):
+        t += rng.exponential(1 / 8.0)  # 8 req/s Poisson load
+        eng.submit(Request(rid=f"req{i}", prompt=tok.encode(text)[:64],
+                           max_new_tokens=12, arrival=t))
+
+    for r in sorted(eng.run(), key=lambda r: r.rid):
+        print(f"{r.rid}: ttft={r.ttft * 1e3:7.2f}ms(sim) "
+              f"itl={(r.itl or 0) * 1e3:6.2f}ms(sim) "
+              f"tokens={len(r.output)} text={tok.decode(r.output)!r}")
+    led = fe.ledger
+    print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "
+          f"streams={led.streams} slow={led.slow_runs} "
+          f"tokens_out={led.tokens_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -97,12 +97,23 @@ def nonexpert_layer_bytes(cfg: ModelConfig, bytes_per_param: int = 2) -> int:
 
 
 def nonexpert_layer_time(cfg: ModelConfig, hw: HardwareSpec, n_tokens: int,
-                         kv_len: int, tier: str = "fast") -> float:
+                         kv_len, tier: str = "fast") -> float:
+    """``kv_len`` is either a scalar — one sequence's KV read once
+    (prefill: queries stream against the same cache) — or an array of
+    per-token KV lengths (decode: every row reads its own cache; the
+    continuous path has mixed per-slot positions, the static path equal
+    ones)."""
     d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
     wbytes = nonexpert_layer_bytes(cfg)
-    kv_bytes = 2 * kv_len * kv * 2  # K+V read, bf16
+    if np.ndim(kv_len):
+        kv_read = float(np.sum(kv_len))   # each slot reads its own KV
+        attn_kv = kv_read
+    else:
+        kv_read = float(kv_len)
+        attn_kv = float(n_tokens) * float(kv_len)
+    kv_bytes = 2 * kv_read * kv * 2  # K+V read, bf16
     flops = 2 * n_tokens * (d * q + 2 * d * kv + q * d)
-    flops += 4 * n_tokens * kv_len * q  # attention score+value flops
+    flops += 4 * attn_kv * q  # attention score+value flops
     if cfg.moe and cfg.moe.n_shared_experts:
         flops += 2 * n_tokens * 3 * d * cfg.d_ff * cfg.moe.n_shared_experts
     if tier == "fast":
@@ -296,21 +307,33 @@ class FiddlerEngine:
         return np.bincount(idx.reshape(-1), minlength=E).astype(np.int64)
 
     # -- MoE layer execution (real numerics) -------------------------------------
-    def _run_moe_layer(self, li: int, x_flat: jnp.ndarray
-                       ) -> Tuple[jnp.ndarray, np.ndarray]:
+    def _run_moe_layer(self, li: int, x_flat: jnp.ndarray,
+                       row_mask: Optional[np.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, np.ndarray, LayerPlan]:
+        """Route + execute one MoE layer.  ``row_mask`` (T,) bool marks the
+        rows that are real in-flight tokens (continuous batching pads idle
+        slots): masked-out rows are excluded from the expert counts the
+        planner sees, from execution, and from the ledger."""
         cfg = self.cfg
         m = cfg.moe
         moe_p = self.layer_params[li]["moe"]
         gates, idx, _ = route(moe_p["router"], x_flat, m)
         idx_np = np.asarray(idx)
         gates_np = np.asarray(gates, np.float32)
-        counts = np.bincount(idx_np.reshape(-1), minlength=m.n_experts)
+        if row_mask is None:
+            counted = idx_np
+        else:
+            counted = idx_np[np.asarray(row_mask, bool)]
+        counts = np.bincount(counted.reshape(-1), minlength=m.n_experts)
         plan = self._decide(li, counts)
 
         x_np = np.asarray(x_flat, np.float32)
         out = np.zeros_like(x_np)
         for e in np.nonzero(counts)[0]:
-            rows, kpos = np.nonzero(idx_np == e)
+            hit = idx_np == e
+            if row_mask is not None:
+                hit = hit & np.asarray(row_mask, bool)[:, None]
+            rows, kpos = np.nonzero(hit)
             xe = x_np[rows]
             d = Decision(plan.decisions[e])
             if d == Decision.FAST_RESIDENT:
@@ -368,19 +391,91 @@ class FiddlerEngine:
         x = model.embed({"embed": self.top_params["embed"]}, tokens)
         B = x.shape[0]
         positions = jnp.full((B, 1), pos, jnp.int32)
+        # per-row KV lengths: every batch row reads its own cache (same
+        # accounting as the continuous multi-slot path)
+        kv_lens = np.full(B, pos + 1, np.int64)
         for li in range(cfg.n_layers):
             x, caches[li] = self._run_layer(li, x, positions, "decode",
                                             caches[li], max_seq,
-                                            kv_len=pos + 1)
+                                            kv_len=kv_lens)
         logits = self._logits(x)
         self.ledger.tokens_out += 1
+        return logits[:, 0], caches
+
+    # -- slot-based serving path (continuous batching) ---------------------------
+    def make_decode_caches(self, n_slots: int, max_seq: int) -> List[Any]:
+        """Per-layer multi-slot KV caches for continuous batching."""
+        return [self._init_layer_cache(li, n_slots, max_seq)
+                for li in range(self.cfg.n_layers)]
+
+    def write_slot(self, caches: List[Any], slot_caches: List[Any],
+                   slot: int) -> List[Any]:
+        """Copy a freshly-prefilled batch-1 cache into row ``slot`` of the
+        multi-slot caches (request joins the in-flight batch)."""
+        for li in range(self.cfg.n_layers):
+            caches[li] = jax.tree.map(
+                lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
+                caches[li], slot_caches[li])
+        return caches
+
+    def prefill_chunk(self, tokens: jnp.ndarray, caches: Optional[List[Any]],
+                      pos_offset: int, max_seq: int
+                      ) -> Tuple[jnp.ndarray, List[Any]]:
+        """One chunk of a chunked prefill: tokens (B, C) are processed at
+        positions ``pos_offset .. +C-1`` against ``caches`` (``None`` on
+        the first chunk).  Splitting a long admission into chunks lets the
+        serving loop interleave in-flight decode steps between chunks
+        instead of stalling them behind one monolithic prefill."""
+        assert self.model is not None
+        model, cfg = self.model, self.cfg
+        B, C = tokens.shape
+        if caches is None:
+            caches = [self._init_layer_cache(li, B, max_seq)
+                      for li in range(cfg.n_layers)]
+        x = model.embed({"embed": self.top_params["embed"]}, tokens)
+        positions = jnp.broadcast_to(
+            (pos_offset + jnp.arange(C, dtype=jnp.int32))[None], (B, C))
+        for li in range(cfg.n_layers):
+            x, caches[li] = self._run_layer(li, x, positions, "prefill_chunk",
+                                            caches[li], max_seq,
+                                            kv_len=pos_offset + C)
+        logits = self._logits(x[:, -1:])
+        return logits[:, 0], caches
+
+    def decode_step_multi(self, caches: List[Any], tokens: jnp.ndarray,
+                          pos: np.ndarray, max_seq: int,
+                          active: Optional[np.ndarray] = None
+                          ) -> Tuple[jnp.ndarray, List[Any]]:
+        """Continuous-batching decode through the orchestrator: every slot
+        decodes at its own position.  tokens (n_slots, 1); pos (n_slots,).
+        ``active`` masks live slots — idle rows flow through the numerics
+        as padding but are excluded from the expert counts fed to the
+        planner, from expert execution, and from the ledger, so the
+        simulated clock charges exactly the mixed in-flight batch."""
+        assert self.model is not None
+        cfg = self.cfg
+        pos = np.asarray(pos, np.int32)
+        if active is None:
+            active = np.ones(pos.shape[0], bool)
+        active = np.asarray(active, bool)
+        assert active.any(), "decode_step_multi needs at least one live slot"
+        x = self.model.embed({"embed": self.top_params["embed"]}, tokens)
+        positions = jnp.asarray(pos)[:, None]
+        kv_lens = pos[active].astype(np.int64) + 1
+        for li in range(cfg.n_layers):
+            x, caches[li] = self._run_layer(li, x, positions, "decode_multi",
+                                            caches[li], max_seq,
+                                            kv_len=kv_lens, row_mask=active)
+        logits = self._logits(x)
+        self.ledger.tokens_out += int(active.sum())
         return logits[:, 0], caches
 
     def _init_layer_cache(self, li, B, max_seq):
         from repro.models import kv_cache as kvc
         return kvc.init_attn_cache(self.cfg, li, B, max_seq, jnp.float32)
 
-    def _run_layer(self, li, x, positions, mode, cache, max_seq, kv_len):
+    def _run_layer(self, li, x, positions, mode, cache, max_seq, kv_len,
+                   row_mask: Optional[np.ndarray] = None):
         from repro.models.attention import attention_block
         from repro.models.layers import rmsnorm
         cfg = self.cfg
@@ -391,8 +486,10 @@ class FiddlerEngine:
         x = x + h
         B, S, d = x.shape
         normed = rmsnorm(p["norm2"], x, cfg.norm_eps).reshape(-1, d)
-        moe_out, counts, plan = self._run_moe_layer(li, normed)
-        self._charge(li, plan, n_tokens=B * S, kv_len=kv_len)
+        moe_out, counts, plan = self._run_moe_layer(li, normed,
+                                                    row_mask=row_mask)
+        n_real = B * S if row_mask is None else int(np.sum(row_mask))
+        self._charge(li, plan, n_tokens=n_real, kv_len=kv_len)
         x = x + moe_out.reshape(B, S, d)
         return x, cache
 
@@ -421,11 +518,12 @@ class FiddlerEngine:
         per_pass = batch if self.batched_beams else 1
         for step in range(n_steps):
             for _ in range(passes):
+                kv_lens = np.full(per_pass, kv_start + step + 1, np.int64)
                 for li in range(self.cfg.n_layers):
                     counts = self._sample_counts(li, per_pass)
                     plan = self._decide(li, counts)
                     self._charge(li, plan, n_tokens=per_pass,
-                                 kv_len=kv_start + step + 1)
+                                 kv_len=kv_lens)
             self.ledger.tokens_out += 1
         return self.ledger.sim_time - t0
 

@@ -12,8 +12,15 @@ from typing import Tuple
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types``/``AxisType``
+    only exist in newer releases — explicit Auto axes there, default
+    behaviour (equivalent) on older ones."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,13 +28,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(model: int = 1, data: int = 1):
     """Tiny mesh over however many local devices exist (tests)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:

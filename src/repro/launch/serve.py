@@ -1,8 +1,9 @@
 """Serving launcher: run the Fiddler engine (or the monolithic model) over
-a stream of requests from the synthetic conversation pipeline.
+a stream of requests from the synthetic conversation pipeline, with either
+the static grouped scheduler or slot-based continuous batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --policy fiddler --requests 8 --max-new 16
+      --policy fiddler --requests 8 --max-new 16 --scheduler continuous
 """
 import argparse
 
@@ -14,6 +15,8 @@ from repro.core import FiddlerEngine, HardwareSpec
 from repro.data.pipeline import synthetic_conversations
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import Model
+from repro.serving.backend import FiddlerBackend, ModelBackend
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request, ServingEngine
 
 
@@ -27,6 +30,12 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--hw", default="env1",
                     choices=["env1", "env2", "tpuhost"])
+    ap.add_argument("--scheduler", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (continuous scheduler)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked-admission size (continuous scheduler)")
     args = ap.parse_args(argv)
 
     full = get_config(args.arch)
@@ -39,14 +48,21 @@ def main(argv=None):
           "env2": HardwareSpec.paper_env2(),
           "tpuhost": HardwareSpec()}[args.hw]
 
-    if args.policy == "model":
-        eng = ServingEngine(model, mode="model", params=params,
-                            max_batch=args.max_batch, max_seq=256)
-    else:
+    fe = None
+    if args.policy != "model":
         fe = FiddlerEngine(cfg, params, policy=args.policy, timing_cfg=full,
                            hw=hw,
                            expert_budget=cfg.n_layers * cfg.moe.n_experts // 4
                            if cfg.moe else 0)
+    if args.scheduler == "continuous":
+        backend = (ModelBackend(model, params, max_seq=256) if fe is None
+                   else FiddlerBackend(fe, max_seq=256))
+        eng = ContinuousEngine(backend, n_slots=args.slots, max_seq=256,
+                               prefill_chunk=args.prefill_chunk)
+    elif fe is None:
+        eng = ServingEngine(model, mode="model", params=params,
+                            max_batch=args.max_batch, max_seq=256)
+    else:
         eng = ServingEngine(fe, mode="fiddler", max_batch=args.max_batch,
                             max_seq=256)
 

@@ -240,6 +240,15 @@ def attention_block(
         out = chunked_attention(
             q, k, v, positions, positions, causal=causal, window=window,
             attn_softcap=cfg.attn_softcap, kv_chunk=kv_chunk)
+    elif mode == "prefill_chunk":
+        # chunked prefill: append this chunk at ``positions`` (B, S), then
+        # attend against the whole cache (earlier chunks + this one; intra-
+        # chunk causality falls out of the position mask)
+        assert cache is not None
+        new_cache = kvc.write_prefill_chunk(cache, k, v, positions)
+        out = decode_attention(
+            q, new_cache, positions, window=window,
+            attn_softcap=cfg.attn_softcap)
     elif mode == "decode":
         assert cache is not None and S == 1
         new_cache = kvc.write_decode(cache, k, v, positions[0, 0])

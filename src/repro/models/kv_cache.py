@@ -98,6 +98,21 @@ def write_prefill(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray) -> Cache
     return {"k": k, "v": v, "pos": pos}
 
 
+def write_prefill_chunk(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                        positions: jnp.ndarray) -> Cache:
+    """Append one prompt chunk at arbitrary ``positions`` (B, S) int32 —
+    chunked prefill (a long admission is split so in-flight decodes are
+    not stalled behind one monolithic prefill).  Scatter-based like
+    ``write_decode_multi``; serving path only, not the dry-run lowering."""
+    w = cache["k"].shape[1]
+    slots = positions % w                       # (B, S)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = cache["k"].at[b_idx, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[b_idx, slots].set(v_new.astype(cache["v"].dtype))
+    pos_arr = cache["pos"].at[b_idx, slots].set(positions.astype(jnp.int32))
+    return {"k": k, "v": v, "pos": pos_arr}
+
+
 def write_decode_multi(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
                        pos: jnp.ndarray) -> Cache:
     """Per-row decode write: ``pos`` is (B,) int32 (continuous batching —

@@ -253,7 +253,8 @@ def apply_sublayer(
 
     if "moe" in p:
         kind_str = {"train": "train", "prefill": "prefill",
-                    "decode": "decode", "decode_multi": "decode"}[mode]
+                    "prefill_chunk": "prefill", "decode": "decode",
+                    "decode_multi": "decode"}[mode]
         if pctx.active:
             h, stats = moe_block_sharded(
                 p["moe"], _norm(cfg, p["norm2"], x), cfg, pctx.mesh,
@@ -604,6 +605,27 @@ class Model:
                 lambda a: a.astype(cache_dtype), self._stack_cross_kv(params, enc_out))
         x, cache, _ = self._backbone(params, x, positions, mode="prefill",
                                      cache=cache, max_seq=max_seq)
+        logits = self.logits(params, x[:, -1:])
+        return logits[:, 0], cache
+
+    def prefill_chunk(self, params: Params, cache: Params,
+                      tokens: jnp.ndarray, pos_offset: jnp.ndarray,
+                      max_seq: int) -> Tuple[jnp.ndarray, Params]:
+        """Process one prompt chunk at positions ``pos_offset .. +S-1``
+        against an existing cache (chunked prefill — long admissions are
+        split across serving steps so in-flight decodes aren't stalled).
+        Returns (last-position logits, cache); attention-backbone archs
+        only (the recurrent/SSM state path has no chunk-append write)."""
+        cfg, pctx = self.cfg, self.pctx
+        x = self.embed(params, tokens)
+        x = pctx.shard_act(x)
+        B, S, _ = x.shape
+        positions = (jnp.asarray(pos_offset, jnp.int32)
+                     + jnp.arange(S, dtype=jnp.int32))[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+        x, cache, _ = self._backbone(params, x, positions,
+                                     mode="prefill_chunk", cache=cache,
+                                     max_seq=max_seq)
         logits = self.logits(params, x[:, -1:])
         return logits[:, 0], cache
 

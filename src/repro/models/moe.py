@@ -33,10 +33,26 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.layers import Params, activation, dense_init
 
-try:  # jax >= 0.8
-    from jax import shard_map
+try:  # newer jax exports it at top level
+    from jax import shard_map as _shard_map
 except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+# the no-check kwarg was renamed check_rep → check_vma; pick by signature
+# (the top-level export appeared before the rename, so never assume)
+_SHARD_MAP_NOCHECK = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
+
+def shard_map(*args, **kwargs):
+    """shard_map with the replication/VMA check disabled, across the jax
+    versions that renamed the kwarg (check_rep → check_vma)."""
+    kwargs.update(_SHARD_MAP_NOCHECK)
+    return _shard_map(*args, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +255,8 @@ def moe_param_specs(cfg: ModelConfig, model_axis: str, model_size: int,
     fa = fsdp_axes if fsdp_axes else None
     if fa is not None and fsdp_size and not fsdp_applicable(cfg, mode, fsdp_size):
         fa = None
+    if fa is not None and len(fa) == 1:
+        fa = fa[0]  # newer jax normalises 1-tuples inside P; do it for all
     if mode == "ep":
         specs = {
             "router": P(None, None),
@@ -370,6 +388,5 @@ def moe_block_sharded(params: Params, x: jnp.ndarray, cfg: ModelConfig,
         body, mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=(x_spec, {"aux_loss": P(), "expert_counts": P()}),
-        check_vma=False,
     )(params, x)
     return out, stats

@@ -1,0 +1,228 @@
+"""Common serving-backend protocol.
+
+``ServingEngine`` (static grouped batches) and ``ContinuousEngine``
+(slot-based continuous batching) used to be hard-wired to the monolithic
+jitted ``Model`` and to ``FiddlerEngine`` respectively.  This module
+extracts the surface both schedulers need —
+
+* a **clock source** (wall time for real execution, the orchestrator's
+  simulated-seconds ledger for the fast/slow-tier regime),
+* **prefill-into-slot** (whole-prompt or chunked, producing a batch-1
+  cache that joins the multi-slot cache via ``write_slot``),
+* a **multi-slot decode step** (every slot at its own position, with an
+  active mask so idle slots are padding, not load),
+* **grouped prefill/decode** (the static-batch path),
+
+— so either scheduler runs over either execution engine.  TTFT/ITL
+recorded against ``clock()`` are therefore wall-clock for the ``Model``
+backend and simulated seconds for the ``FiddlerEngine`` backend (the
+paper's setting: the modelled hardware, not this container's CPU).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ServingBackend:
+    """Interface both serving schedulers target.  ``max_seq`` is fixed at
+    construction (it is baked into jitted signatures and cache shapes)."""
+
+    max_seq: int
+
+    # -- clock --------------------------------------------------------------
+    def clock(self) -> float:
+        raise NotImplementedError
+
+    def wait_until(self, t: float) -> None:
+        """Advance the clock to ``t`` (idle gap between arrivals):
+        simulated clocks fast-forward, wall clocks sleep.  Implementations
+        must actually reach ``t`` — the continuous scheduler relies on it
+        to admit future-arrival requests instead of busy-spinning."""
+        raise NotImplementedError
+
+    # -- slot API (continuous batching) -------------------------------------
+    def make_cache(self, n_slots: int) -> Any:
+        raise NotImplementedError
+
+    def prefill(self, prompt: Sequence[int]) -> Tuple[np.ndarray, Any]:
+        """Whole-prompt prefill → ((V,) last-token logits, batch-1 cache)."""
+        raise NotImplementedError
+
+    def prefill_chunk(self, slot_cache: Optional[Any],
+                      chunk: Sequence[int], pos_offset: int
+                      ) -> Tuple[np.ndarray, Any]:
+        """Process one prompt chunk at ``pos_offset``; ``slot_cache`` is
+        None on the first chunk.  Returns ((V,) logits of the chunk's last
+        position, updated batch-1 cache)."""
+        raise NotImplementedError
+
+    def write_slot(self, cache: Any, slot_cache: Any, slot: int) -> Any:
+        raise NotImplementedError
+
+    def decode_slots(self, cache: Any, tokens: np.ndarray, pos: np.ndarray,
+                     active: np.ndarray) -> Tuple[np.ndarray, Any]:
+        """One decode step over all slots.  tokens/pos/active: (n_slots,).
+        Returns ((n_slots, V) logits, updated cache)."""
+        raise NotImplementedError
+
+    # -- group API (static batching) ----------------------------------------
+    def prefill_group(self, prompts: np.ndarray
+                      ) -> Tuple[jnp.ndarray, Any]:
+        """Padded (B, S) prompt batch → ((B, V) logits, cache)."""
+        raise NotImplementedError
+
+    def decode_group(self, cache: Any, tokens: np.ndarray, pos: int
+                     ) -> Tuple[jnp.ndarray, Any]:
+        """One decode step at shared scalar position ``pos``."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Monolithic jitted Model backend (capacity-sufficient regime)
+# ---------------------------------------------------------------------------
+
+
+class ModelBackend(ServingBackend):
+    """Jitted ``repro.models.Model`` execution; wall-clock timing."""
+
+    def __init__(self, model, params, *, max_seq: int = 256):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self._prefill1 = jax.jit(
+            lambda p, t: model.prefill(p, t, max_seq,
+                                       cache_dtype=jnp.float32))
+        # group path keeps the model's default (bf16) cache — only the
+        # slot path needs fp32 to splice into make_cache(dtype=float32)
+        self._prefill_grp = jax.jit(
+            lambda p, t: model.prefill(p, t, max_seq))
+        self._prefill_chunk = jax.jit(
+            lambda p, c, t, off: model.prefill_chunk(p, c, t, off, max_seq))
+        self._decode_multi = jax.jit(
+            lambda p, c, t, pos: model.decode_step_multi(p, c, t, pos,
+                                                         max_seq))
+        self._decode1 = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, max_seq))
+
+    def clock(self) -> float:
+        return time.perf_counter()
+
+    def wait_until(self, t: float) -> None:
+        dt = t - self.clock()
+        if dt > 0:
+            time.sleep(dt)
+
+    # slot API
+    def make_cache(self, n_slots: int) -> Any:
+        return self.model.make_cache(n_slots, self.max_seq,
+                                     dtype=jnp.float32)
+
+    def prefill(self, prompt):
+        logits, cache = self._prefill1(
+            self.params, jnp.asarray([list(prompt)], jnp.int32))
+        return np.asarray(logits[0]), cache
+
+    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+        if slot_cache is None:
+            slot_cache = self.model.make_cache(1, self.max_seq,
+                                               dtype=jnp.float32)
+        logits, slot_cache = self._prefill_chunk(
+            self.params, slot_cache, jnp.asarray([list(chunk)], jnp.int32),
+            jnp.int32(pos_offset))
+        return np.asarray(logits[0]), slot_cache
+
+    def write_slot(self, cache, slot_cache, slot):
+        return self.model.write_slot(cache, slot_cache, slot)
+
+    def decode_slots(self, cache, tokens, pos, active):
+        logits, cache = self._decode_multi(
+            self.params, cache, jnp.asarray(tokens, jnp.int32)[:, None],
+            jnp.asarray(pos, jnp.int32))
+        return np.asarray(logits), cache
+
+    # group API
+    def prefill_group(self, prompts):
+        return self._prefill_grp(self.params, jnp.asarray(prompts, jnp.int32))
+
+    def decode_group(self, cache, tokens, pos):
+        return self._decode1(self.params, cache,
+                             jnp.asarray(tokens, jnp.int32)[:, None],
+                             jnp.int32(pos))
+
+
+# ---------------------------------------------------------------------------
+# Fiddler orchestrator backend (fast/slow-tier regime — the paper's setting)
+# ---------------------------------------------------------------------------
+
+
+class FiddlerBackend(ServingBackend):
+    """Orchestrated execution over a ``FiddlerEngine``; the clock is the
+    engine ledger's simulated seconds, so per-request TTFT/ITL reflect the
+    modelled hardware and the planner's fast/stream/slow decisions."""
+
+    def __init__(self, engine, *, max_seq: int = 256):
+        assert engine.model is not None, (
+            "FiddlerBackend needs a FiddlerEngine built with params "
+            "(real-numerics mode)")
+        self.engine = engine
+        self.max_seq = max_seq
+
+    @property
+    def ledger(self):
+        return self.engine.ledger
+
+    def clock(self) -> float:
+        return self.engine.ledger.sim_time
+
+    def wait_until(self, t: float) -> None:
+        led = self.engine.ledger
+        led.sim_time = max(led.sim_time, t)
+
+    # slot API
+    def make_cache(self, n_slots: int) -> Any:
+        return self.engine.make_decode_caches(n_slots, self.max_seq)
+
+    def prefill(self, prompt):
+        logits, caches = self.engine.prefill(
+            jnp.asarray([list(prompt)], jnp.int32), self.max_seq)
+        return np.asarray(logits[0]), caches
+
+    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+        logits, slot_cache = self.engine.prefill_chunk(
+            jnp.asarray([list(chunk)], jnp.int32), slot_cache, pos_offset,
+            self.max_seq)
+        return np.asarray(logits[0]), slot_cache
+
+    def write_slot(self, cache, slot_cache, slot):
+        return self.engine.write_slot(cache, slot_cache, slot)
+
+    def decode_slots(self, cache, tokens, pos, active):
+        logits, cache = self.engine.decode_step_multi(
+            cache, jnp.asarray(tokens, jnp.int32)[:, None], pos,
+            self.max_seq, active=active)
+        return np.asarray(logits), cache
+
+    # group API
+    def prefill_group(self, prompts):
+        return self.engine.prefill(jnp.asarray(prompts, jnp.int32),
+                                   self.max_seq)
+
+    def decode_group(self, cache, tokens, pos):
+        return self.engine.decode_step(cache,
+                                       jnp.asarray(tokens, jnp.int32)[:, None],
+                                       pos, self.max_seq)
+
+
+def as_backend(obj, *, params=None, mode: Optional[str] = None,
+               max_seq: int = 256) -> ServingBackend:
+    """Coerce (Model, params) / FiddlerEngine / ready backend → backend."""
+    if isinstance(obj, ServingBackend):
+        return obj
+    if mode == "fiddler" or (mode is None and hasattr(obj, "ledger")):
+        return FiddlerBackend(obj, max_seq=max_seq)
+    return ModelBackend(obj, params, max_seq=max_seq)

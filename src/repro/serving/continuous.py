@@ -1,22 +1,32 @@
 """Continuous batching: a fixed pool of decode slots, each at its own
-position; requests join as slots free up (prefill into the slot) and
-leave on EOS/max-tokens — no head-of-line blocking like the static
-grouped engine.
+position; requests join as slots free up and leave on EOS/max-tokens —
+no head-of-line blocking like the static grouped engine.
 
-Single-host serving path (jitted Model; per-slot cache writes are
-scatter-based, see kv_cache.write_decode_multi).
+Runs over any ``ServingBackend``:
+
+* ``ModelBackend``   — jitted monolithic ``Model`` (scatter cache writes,
+  see kv_cache.write_decode_multi); wall-clock metrics.
+* ``FiddlerBackend`` — the paper's CPU-GPU orchestrator: the planner sees
+  the mixed in-flight batch's expert counts each step and the ledger
+  advances in simulated seconds, which is also the clock that TTFT/ITL
+  are recorded from.
+
+Admission can be **chunked** (``prefill_chunk=N``): a long prompt is
+prefilled N tokens per engine step into a batch-1 staging cache while the
+in-flight slots keep decoding, then joins the multi-slot cache — so one
+long admission never stalls the whole pool.  Requests may carry an
+``arrival`` time (load generators set it in backend-clock units); the
+engine admits a request only once the clock has reached it.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.serving.backend import ServingBackend, as_backend
 from repro.serving.engine import Request
 from repro.serving.sampler import greedy
 
@@ -24,46 +34,94 @@ from repro.serving.sampler import greedy
 @dataclass
 class _Slot:
     req: Optional[Request] = None
-    pos: int = 0          # next decode position
+    phase: str = "idle"        # idle | prefill | decode
+    pos: int = 0               # next decode position
     last_token: int = 0
     steps_left: int = 0
+    staging: Any = None        # batch-1 cache being chunk-prefilled
+    prefilled: int = 0         # prompt tokens already processed
 
 
 class ContinuousEngine:
-    def __init__(self, model, params, *, n_slots: int = 4,
-                 max_seq: int = 256):
-        self.model = model
-        self.params = params
+    def __init__(self, backend, params=None, *, n_slots: int = 4,
+                 max_seq: int = 256, prefill_chunk: Optional[int] = None):
+        """``backend``: a ``ServingBackend``, or a ``Model`` together with
+        ``params`` (coerced to a ``ModelBackend`` for back-compat).
+        ``prefill_chunk=None`` admits whole prompts in one step (exactly
+        the monolithic prefill numerics); an integer enables chunked
+        admission."""
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1 (or None for whole-prompt "
+                f"admission), got {prefill_chunk}")
+        if not isinstance(backend, ServingBackend):
+            backend = as_backend(backend, params=params, max_seq=max_seq)
+        assert backend.max_seq == max_seq, (backend.max_seq, max_seq)
+        self.backend = backend
         self.n_slots = n_slots
         self.max_seq = max_seq
+        self.prefill_chunk = prefill_chunk
         self.queue: List[Request] = []
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.cache = model.make_cache(n_slots, max_seq, dtype=jnp.float32)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: model.decode_step_multi(p, c, t, pos,
-                                                         max_seq))
-        self._prefill1 = jax.jit(
-            lambda p, t: model.prefill(p, t, max_seq,
-                                       cache_dtype=jnp.float32))
+        self.cache = backend.make_cache(n_slots)
         self.steps = 0
         self.finished: List[Request] = []
 
     # ------------------------------------------------------------------
+    def clock(self) -> float:
+        return self.backend.clock()
+
     def submit(self, req: Request) -> None:
+        if req.arrival is None:
+            req.arrival = self.clock()
         self.queue.append(req)
 
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    # ------------------------------------------------------------------
     def _admit(self) -> None:
-        for i, slot in enumerate(self.slots):
+        now = self.clock()
+        for slot in self.slots:
             if slot.req is not None or not self.queue:
                 continue
+            if self.queue[0].arrival is not None and \
+                    self.queue[0].arrival > now:
+                break  # FIFO: head hasn't arrived yet
             req = self.queue.pop(0)
-            prompt = jnp.asarray([req.prompt], jnp.int32)
-            logits, slot_cache = self._prefill1(self.params, prompt)
-            self.cache = self.model.write_slot(self.cache, slot_cache, i)
-            tok = int(jnp.argmax(logits[0]))
-            req.output.append(tok)
-            req.ttft = float(self.steps)  # in engine steps
             slot.req = req
+            slot.phase = "prefill"
+            slot.staging = None
+            slot.prefilled = 0
+
+    def _prefill_step(self) -> None:
+        """Advance every prefilling slot by one chunk (or the whole prompt
+        when chunking is off)."""
+        for i, slot in enumerate(self.slots):
+            if slot.phase != "prefill":
+                continue
+            req = slot.req
+            if self.prefill_chunk is None:
+                logits, slot.staging = self.backend.prefill(req.prompt)
+                slot.prefilled = len(req.prompt)
+            else:
+                chunk = req.prompt[slot.prefilled:
+                                   slot.prefilled + self.prefill_chunk]
+                logits, slot.staging = self.backend.prefill_chunk(
+                    slot.staging, chunk, slot.prefilled)
+                slot.prefilled += len(chunk)
+                if slot.prefilled < len(req.prompt):
+                    continue  # more chunks; in-flight decodes run meanwhile
+            # prompt complete: first token, join the multi-slot batch
+            tok = int(np.argmax(logits))
+            now = self.clock()
+            req.output.append(tok)
+            req.token_times.append(now)
+            req.ttft = now - req.arrival
+            self.cache = self.backend.write_slot(self.cache, slot.staging, i)
+            slot.staging = None
+            slot.phase = "decode"
             slot.pos = len(req.prompt)
             slot.last_token = tok
             slot.steps_left = req.max_new_tokens - 1
@@ -73,43 +131,52 @@ class ContinuousEngine:
     def _retire(self, i: int) -> None:
         slot = self.slots[i]
         if slot.req is not None:
-            slot.req.latency = float(self.steps)
+            slot.req.latency = self.clock() - slot.req.arrival
             self.finished.append(slot.req)
         self.slots[i] = _Slot()
 
-    @property
-    def active(self) -> int:
-        return sum(1 for s in self.slots if s.req is not None)
-
-    def step(self) -> None:
-        """One decode step for every active slot (idle slots decode a pad
-        token at position 0 and are masked out)."""
-        self._admit()
-        if self.active == 0:
+    def _decode_step(self) -> None:
+        decoding = [s.phase == "decode" for s in self.slots]
+        if not any(decoding):
             return
-        tokens = np.full((self.n_slots, 1), PAD_ID, np.int32)
+        tokens = np.full((self.n_slots,), PAD_ID, np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.slots):
-            if s.req is not None:
-                tokens[i, 0] = s.last_token
+            if decoding[i]:
+                tokens[i] = s.last_token
                 pos[i] = s.pos
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(pos))
+        logits, self.cache = self.backend.decode_slots(
+            self.cache, tokens, pos, np.asarray(decoding))
         next_tok = greedy(logits)
+        now = self.clock()
         self.steps += 1
         for i, s in enumerate(self.slots):
-            if s.req is None:
+            if not decoding[i]:
                 continue
             tok = int(next_tok[i])
             s.req.output.append(tok)
+            s.req.token_times.append(now)
             s.pos += 1
             s.last_token = tok
             s.steps_left -= 1
             if tok == EOS_ID or s.steps_left <= 0 or s.pos >= self.max_seq - 1:
                 self._retire(i)
 
+    def step(self) -> None:
+        """One scheduler tick: admit → advance prefills one chunk → one
+        decode step for every decoding slot."""
+        self._admit()
+        self._prefill_step()
+        self._decode_step()
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        while (self.queue or self.active) and self.steps < max_steps:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            if self.active == 0 and self.queue and \
+                    self.queue[0].arrival is not None and \
+                    self.queue[0].arrival > self.clock():
+                # pool idle, next request hasn't arrived: fast-forward
+                self.backend.wait_until(self.queue[0].arrival)
             self.step()
+            steps += 1
         return self.finished

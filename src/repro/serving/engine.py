@@ -1,23 +1,23 @@
 """Batched serving engine: request queue → grouped prefill + decode.
 
 Requests are grouped into static batches (padded prompts), prefilled once,
-then decoded until EOS/max-tokens.  Works over the monolithic jitted
-``Model`` (capacity-sufficient regime) or over the ``FiddlerEngine``
+then decoded until EOS/max-tokens.  Execution goes through the common
+``ServingBackend`` protocol (see serving/backend.py): the monolithic
+jitted ``Model`` (capacity-sufficient regime) or the ``FiddlerEngine``
 orchestrator (fast/slow-tier regime — the paper's setting).  Per-request
-TTFT/ITL are recorded from the engine's simulated clock when orchestrated,
-or wall-clock otherwise.
+TTFT/ITL are recorded from the backend's clock — the engine's simulated
+seconds when orchestrated, wall-clock otherwise.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.serving.backend import ServingBackend, as_backend
 from repro.serving.sampler import greedy, sample
 
 
@@ -27,39 +27,54 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     temperature: float = 0.0
+    arrival: Optional[float] = None     # backend-clock submit/arrival time
     # outputs
     output: List[int] = field(default_factory=list)
+    token_times: List[float] = field(default_factory=list)
     ttft: Optional[float] = None
     latency: Optional[float] = None
 
+    @property
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency (backend-clock seconds/token)."""
+        if len(self.token_times) < 2:
+            return None
+        return float(self.token_times[-1] - self.token_times[0]) \
+            / (len(self.token_times) - 1)
+
 
 class ServingEngine:
-    def __init__(self, backend, *, mode: str = "model", params=None,
+    def __init__(self, backend, *, mode: Optional[str] = None, params=None,
                  max_batch: int = 8, max_seq: int = 512, seed: int = 0):
-        """backend: a ``Model`` (mode="model") or ``FiddlerEngine``
-        (mode="fiddler")."""
-        assert mode in ("model", "fiddler")
-        self.mode = mode
-        self.backend = backend
-        self.params = params
+        """``backend``: a ``ServingBackend``, a ``Model`` (with ``params``;
+        mode="model") or a ``FiddlerEngine`` (mode="fiddler")."""
+        assert mode in (None, "model", "fiddler")
+        self.raw_backend = backend
+        self._backend: ServingBackend = as_backend(
+            backend, params=params, mode=mode, max_seq=max_seq)
+        from repro.serving.backend import FiddlerBackend
+
+        self.mode = ("fiddler" if isinstance(self._backend, FiddlerBackend)
+                     else "model")
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
-        if mode == "model":
-            self._prefill = jax.jit(
-                lambda p, t: backend.prefill(p, t, max_seq))
-            self._decode = jax.jit(
-                lambda p, c, t, pos: backend.decode_step(p, c, t, pos, max_seq))
+
+    @property
+    def backend(self):
+        """The execution engine as passed in (back-compat: launchers read
+        ``engine.backend.ledger`` for the orchestrated path)."""
+        return self.raw_backend
 
     def submit(self, req: Request) -> None:
+        if req.arrival is None:
+            req.arrival = self._backend.clock()
         self.queue.append(req)
 
     # ------------------------------------------------------------------
     def _clock(self) -> float:
-        if self.mode == "fiddler":
-            return self.backend.ledger.sim_time
-        return time.perf_counter()
+        return self._backend.clock()
 
     def _run_group(self, group: List[Request]) -> None:
         B = len(group)
@@ -67,15 +82,10 @@ class ServingEngine:
         prompts = np.full((B, S), PAD_ID, np.int32)
         for i, r in enumerate(group):
             prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
-        t0 = self._clock()
-        if self.mode == "model":
-            logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        else:
-            logits, cache = self.backend.prefill(jnp.asarray(prompts),
-                                                 self.max_seq)
+        logits, cache = self._backend.prefill_group(prompts)
         t_first = self._clock()
         for r in group:
-            r.ttft = t_first - t0
+            r.ttft = t_first - r.arrival
 
         done = np.zeros(B, bool)
         n_steps = min(max(r.max_new_tokens for r in group),
@@ -86,24 +96,20 @@ class ServingEngine:
                 tok = sample(logits, sub, group[0].temperature)
             else:
                 tok = greedy(logits)
+            now = self._clock()
             for i, r in enumerate(group):
                 if not done[i]:
                     r.output.append(int(tok[i]))
+                    r.token_times.append(now)
                     if tok[i] == EOS_ID or len(r.output) >= r.max_new_tokens:
                         done[i] = True
             if done.all():
                 break
             pos = S + step
-            if self.mode == "model":
-                logits, cache = self._decode(self.params, cache,
-                                             jnp.asarray(tok[:, None]),
-                                             jnp.int32(pos))
-            else:
-                logits, cache = self.backend.decode_step(
-                    cache, jnp.asarray(tok[:, None]), pos, self.max_seq)
+            logits, cache = self._backend.decode_group(cache, tok, pos)
         t_end = self._clock()
         for r in group:
-            r.latency = t_end - t0
+            r.latency = t_end - r.arrival
 
     def run(self) -> List[Request]:
         """Drain the queue in static batches of ≤ max_batch."""
@@ -111,6 +117,10 @@ class ServingEngine:
         while self.queue:
             group = self.queue[: self.max_batch]
             self.queue = self.queue[self.max_batch:]
+            # a batch can only start once its last member has arrived
+            latest = max(r.arrival for r in group if r.arrival is not None)
+            if latest > self._backend.clock():
+                self._backend.wait_until(latest)
             self._run_group(group)
             finished.extend(group)
         return finished

@@ -1,0 +1,289 @@
+"""Minimal stand-in for the ``hypothesis`` API used by this test suite.
+
+The real package is declared in ``pyproject.toml`` (test extras) and wins
+whenever it is importable; this fallback keeps the property tests runnable
+in hermetic environments where it is not.  It implements only what the
+suite uses — ``given``/``settings``/``assume`` and the ``integers``,
+``floats``, ``booleans``, ``text``, ``lists``, ``tuples``, ``builds`` and
+``data`` strategies — with deterministic seeded random draws plus explicit
+all-minimum / all-maximum boundary examples in place of hypothesis's
+shrinking search.
+
+Registered from ``conftest.py`` via ``sys.modules`` so plain
+``from hypothesis import given, strategies as st`` keeps working.
+"""
+from __future__ import annotations
+
+import functools
+import string
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["given", "settings", "assume", "strategies", "HealthCheck"]
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by ``assume(False)`` — the example is silently discarded."""
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Strategies: objects with draw(rng, mode) for mode in {"min", "max", "rand"}
+# ---------------------------------------------------------------------------
+
+
+class Strategy:
+    def draw(self, rng: np.random.Generator, mode: str = "rand") -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return _Mapped(self, fn)
+
+
+class _Mapped(Strategy):
+    def __init__(self, base: Strategy, fn: Callable[[Any], Any]):
+        self.base, self.fn = base, fn
+
+    def draw(self, rng, mode="rand"):
+        return self.fn(self.base.draw(rng, mode))
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int = 0, max_value: int = 1 << 16):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            return self.lo
+        if mode == "max":
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value: float = 0.0, max_value: float = 1.0):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            return self.lo
+        if mode == "max":
+            return self.hi
+        # mix uniform and log-uniform draws so tiny lower bounds (1e-6
+        # latency constants) are actually exercised, as hypothesis would
+        if self.lo > 0 and self.hi / max(self.lo, 1e-300) > 1e3 and rng.random() < 0.5:
+            return float(np.exp(rng.uniform(np.log(self.lo), np.log(self.hi))))
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Booleans(Strategy):
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            return False
+        if mode == "max":
+            return True
+        return bool(rng.integers(0, 2))
+
+
+_TEXT_ALPHABET = string.ascii_letters + string.digits + string.punctuation \
+    + " \t\n" + "αβγδé漢字🙂"
+
+
+class _Text(Strategy):
+    def __init__(self, alphabet: Optional[str] = None, min_size: int = 0,
+                 max_size: int = 64):
+        self.alphabet = alphabet or _TEXT_ALPHABET
+        self.min_size, self.max_size = min_size, max_size
+
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            n = self.min_size
+        elif mode == "max":
+            n = self.max_size
+        else:
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+        chars = [self.alphabet[int(i)]
+                 for i in rng.integers(0, len(self.alphabet), size=n)]
+        return "".join(chars)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size: int = 0,
+                 max_size: int = 16, unique: bool = False):
+        self.elements = elements
+        self.min_size, self.max_size = min_size, max_size
+        self.unique = unique
+
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            n = self.min_size
+        elif mode == "max":
+            n = self.max_size
+        else:
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+        out: List[Any] = []
+        tries = 0
+        while len(out) < n and tries < 100 * max(n, 1):
+            v = self.elements.draw(rng, mode)
+            tries += 1
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        return out
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts: Strategy):
+        self.parts = parts
+
+    def draw(self, rng, mode="rand"):
+        return tuple(p.draw(rng, mode) for p in self.parts)
+
+
+class _Builds(Strategy):
+    def __init__(self, target: Callable, *args: Strategy, **kwargs: Strategy):
+        self.target, self.args, self.kwargs = target, args, kwargs
+
+    def draw(self, rng, mode="rand"):
+        a = [s.draw(rng, mode) for s in self.args]
+        kw = {k: s.draw(rng, mode) for k, s in self.kwargs.items()}
+        return self.target(*a, **kw)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def draw(self, rng, mode="rand"):
+        if mode == "min":
+            return self.elements[0]
+        if mode == "max":
+            return self.elements[-1]
+        return self.elements[int(rng.integers(0, len(self.elements)))]
+
+
+class _JustStrategy(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def draw(self, rng, mode="rand"):
+        return self.value
+
+
+class DataObject:
+    """Interactive drawing (``data.draw(strategy)``) inside a test body."""
+
+    def __init__(self, rng: np.random.Generator, mode: str):
+        self._rng, self._mode = rng, mode
+
+    def draw(self, strategy: Strategy, label: Optional[str] = None) -> Any:
+        return strategy.draw(self._rng, self._mode)
+
+
+class _Data(Strategy):
+    def draw(self, rng, mode="rand"):
+        return DataObject(rng, mode)
+
+
+# public strategies namespace (mirrors ``hypothesis.strategies``)
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _Integers
+strategies.floats = _Floats
+strategies.booleans = _Booleans
+strategies.text = _Text
+strategies.lists = _Lists
+strategies.tuples = _Tuples
+strategies.builds = _Builds
+strategies.sampled_from = _SampledFrom
+strategies.just = _JustStrategy
+strategies.data = _Data
+strategies.SearchStrategy = Strategy
+
+
+# ---------------------------------------------------------------------------
+# settings / given
+# ---------------------------------------------------------------------------
+
+
+class HealthCheck:
+    """Accepted and ignored (API compatibility)."""
+    all = classmethod(lambda cls: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+def settings(max_examples: int = 50, deadline: Any = None, **_ignored):
+    def apply(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return apply
+
+
+DEFAULT_MAX_EXAMPLES = 50
+# examples 0/1 are the all-minimum / all-maximum boundary draws
+_BOUNDARY_MODES = ("min", "max")
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            conf = (getattr(wrapper, "_fallback_settings", None)
+                    or getattr(fn, "_fallback_settings", None)
+                    or {"max_examples": DEFAULT_MAX_EXAMPLES})
+            n = conf["max_examples"]
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for i in range(max(4 * n, n + 8)):
+                if ran >= n:
+                    break
+                mode = _BOUNDARY_MODES[i] if i < len(_BOUNDARY_MODES) else "rand"
+                try:
+                    args = [s.draw(rng, mode) for s in arg_strategies]
+                    kwargs = {k: s.draw(rng, mode)
+                              for k, s in kw_strategies.items()}
+                except UnsatisfiedAssumption:
+                    continue
+                try:
+                    fn(*fixture_args, *args, **fixture_kwargs, **kwargs)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{ran}, mode={mode}): "
+                        f"args={args!r} kwargs={kwargs!r}") from e
+                ran += 1
+            if ran == 0:
+                raise AssertionError(
+                    f"{fn.__qualname__}: unable to satisfy assume() on any "
+                    f"generated example — property was never checked")
+        # pytest must not see the strategy parameters as fixtures
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+``.strategies``) in
+    ``sys.modules`` — called from conftest only when the real package is
+    missing."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = HealthCheck
+    mod.strategies = strategies
+    mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -5,6 +5,15 @@ import sys
 # sets its own XLA_FLAGS in a subprocess).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Property tests use hypothesis when installed; otherwise fall back to the
+# minimal shim so the suite still collects and runs hermetically.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 import jax
 import jax.numpy as jnp
 import numpy as np

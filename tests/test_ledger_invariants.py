@@ -1,0 +1,126 @@
+"""Ledger accounting invariants, across all three policies:
+
+* every activated expert gets exactly one decision —
+  ``fast_hits + streams + slow_runs`` equals the number of activated
+  experts the planner saw;
+* ``stream_bytes`` is exactly ``streams * expert_weight_bytes``;
+* the simulated clock strictly increases with every charged layer;
+* with an active-slot mask, padded slots contribute nothing to expert
+  counts or the ledger.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.core.cost_model import expert_weight_bytes
+from repro.core.orchestrator import POLICIES
+
+
+def _spy_decide(eng):
+    """Wrap eng._decide to record (activated experts, sim_time) per call."""
+    orig = eng._decide
+    seen = []
+
+    def spy(li, counts):
+        seen.append({"activated": int((counts > 0).sum()),
+                     "total": int(counts.sum()),
+                     "sim_time": eng.ledger.sim_time})
+        return orig(li, counts)
+
+    eng._decide = spy
+    return seen
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_decision_accounting_real_numerics(policy):
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, params, policy=policy, expert_budget=30,
+                        host_precision="fp32")
+    seen = _spy_decide(eng)
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (2, 6), 3,
+                                cfg.vocab_size)
+    _, caches = eng.prefill(tokens, max_seq=32)
+    _, caches = eng.decode_step(caches, tokens[:, :1], pos=6, max_seq=32)
+    led = eng.ledger
+    assert led.fast_hits + led.streams + led.slow_runs == \
+        sum(s["activated"] for s in seen)
+    assert led.stream_bytes == led.streams * expert_weight_bytes(cfg)
+    assert len(seen) == 2 * cfg.n_layers  # prefill + one decode step
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_sim_time_strictly_increasing_per_layer(policy):
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy=policy, seed=0)
+    seen = _spy_decide(eng)
+    eng.simulate_prefill(64)
+    eng.simulate_decode(4, batch=2)
+    times = [s["sim_time"] for s in seen] + [eng.ledger.sim_time]
+    diffs = np.diff(times)
+    assert (diffs > 0).all(), times
+    # per-layer log mirrors the charges: every layer costs real time
+    for entry in eng.ledger.layer_log:
+        assert entry["nonexpert"] > 0
+        assert entry["moe"] >= 0
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_ledger_accounting_simulated(policy):
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy=policy, seed=1)
+    seen = _spy_decide(eng)
+    eng.simulate_generate(prompt_len=32, gen_len=8, batch=4)
+    led = eng.ledger
+    assert led.fast_hits + led.streams + led.slow_runs == \
+        sum(s["activated"] for s in seen)
+    assert led.stream_bytes == led.streams * expert_weight_bytes(cfg)
+
+
+def test_multi_slot_mask_excludes_padding():
+    """decode_step_multi with one live slot of two: the planner must see
+    exactly top_k assignments per layer and tokens_out advances by the
+    live count only."""
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                        host_precision="fp32")
+    caches = eng.make_decode_caches(2, 32)
+    # give slot 0 some KV history via a chunked prefill joined into slot 0
+    logits, slot_cache = eng.prefill_chunk(
+        jnp.asarray([[1, 5, 9]], jnp.int32), None, 0, 32)
+    caches = eng.write_slot(caches, slot_cache, 0)
+    seen = _spy_decide(eng)
+    led = eng.ledger
+    tokens_before = led.tokens_out
+    decisions_before = led.fast_hits + led.streams + led.slow_runs
+    tokens = jnp.asarray([[7], [0]], jnp.int32)
+    active = np.array([True, False])
+    _, caches = eng.decode_step_multi(caches, tokens, np.array([3, 0]),
+                                      32, active=active)
+    assert led.tokens_out == tokens_before + 1
+    for s in seen:
+        assert s["total"] == cfg.moe.top_k  # one live token only
+    assert led.fast_hits + led.streams + led.slow_runs - decisions_before == \
+        sum(s["activated"] for s in seen)
+
+
+def test_mixed_batch_counts_reach_planner():
+    """With two live slots the planner sees 2·top_k assignments — the
+    expert counts reflect the mixed in-flight batch, not per-request
+    singletons."""
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                        host_precision="fp32")
+    caches = eng.make_decode_caches(2, 32)
+    for slot, prompt in enumerate([[1, 5, 9], [1, 8]]):
+        _, sc = eng.prefill_chunk(jnp.asarray([prompt], jnp.int32), None, 0,
+                                  32)
+        caches = eng.write_slot(caches, sc, slot)
+    seen = _spy_decide(eng)
+    tokens = jnp.asarray([[7], [4]], jnp.int32)
+    _, caches = eng.decode_step_multi(caches, tokens, np.array([3, 2]), 32)
+    for s in seen:
+        assert s["total"] == 2 * cfg.moe.top_k

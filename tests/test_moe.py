@@ -98,8 +98,9 @@ def test_ref_vs_sharded_trivial_mesh():
     params = init_moe(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.3
     ref_out, ref_stats = moe_block_ref(params, x, cfg, kind="decode")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_debug_mesh
+
+    mesh = make_debug_mesh()
     sh_out, sh_stats = moe_block_sharded(params, x, cfg, mesh, ("data",),
                                          "model", kind="decode")
     np.testing.assert_allclose(np.asarray(ref_out), np.asarray(sh_out),

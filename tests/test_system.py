@@ -61,8 +61,8 @@ def test_dryrun_small_mesh_subprocess():
         "import os; os.environ['XLA_FLAGS']="
         "'--xla_force_host_platform_device_count=8'\n"
         "import jax\n"
-        "mesh = jax.make_mesh((2, 4), ('data', 'model'),"
-        " axis_types=(jax.sharding.AxisType.Auto,)*2)\n"
+        "from repro.launch.mesh import make_debug_mesh\n"
+        "mesh = make_debug_mesh(model=4, data=2)\n"
         "from repro.launch.dryrun import dryrun_one\n"
         "r = dryrun_one('qwen3-0.6b', 'decode_32k', mesh=mesh, verbose=False)\n"
         "assert r['ok'], r\n"
