@@ -6,11 +6,8 @@ Benchmarks report two kinds of numbers:
   the policies are real (the paper's Algorithm 1 vs baselines); only the
   hardware clock is modelled, since this container has no GPU/TPU.
 """
-import csv
-import io
-import sys
 import time
-from typing import Dict, Iterable, List
+from typing import Dict, List
 
 from repro.configs import get_config
 from repro.core import FiddlerEngine, HardwareSpec

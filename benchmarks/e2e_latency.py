@@ -3,7 +3,7 @@
 environments.  ``--breakdown`` adds the TTFT/ITL split (Fig. 11/12)."""
 import itertools
 
-from benchmarks.common import ENVS, POLICIES, emit, engine_for
+from benchmarks.common import POLICIES, emit, engine_for
 
 IN_LENS = [32, 64, 128, 256]
 OUT_LENS = [64, 128, 256, 512]

@@ -12,7 +12,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
-from repro.core.placement import PlacementReport, hit_rate, place_by_popularity
+from repro.core.placement import PlacementReport
 from repro.core.popularity import ExpertProfile, synthetic_profile
 from repro.data.pipeline import sample_prompts
 from repro.models import Model

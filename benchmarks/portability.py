@@ -1,6 +1,6 @@
 """Paper Appendix E: applicability beyond Mixtral-8x7B — Phi-3.5-MoE
 (vs the offloading baseline, the only one that supports it in the paper)."""
-from benchmarks.common import ENVS, emit, engine_for
+from benchmarks.common import emit, engine_for
 
 
 def run(env: str = "env1", fast: bool = False):

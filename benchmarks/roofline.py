@@ -25,7 +25,6 @@ Two modes:
 import argparse
 import dataclasses
 import json
-import subprocess
 import sys
 from typing import Dict, List, Optional
 

@@ -1,17 +1,29 @@
 """Continuous-batching load benchmark: Poisson arrivals through the
 orchestrated serving scheduler.
 
-A Poisson load generator (arrivals in *simulated* seconds on the
-paper-env hardware specs) drives ``ContinuousEngine`` over a
-``FiddlerBackend``: real reduced-Mixtral numerics, full-size-config
-latency constants (``timing_cfg``), chunked admission.  Sweeps arrival
-rate × slot count across the three policies and reports per-config
-throughput (tokens / simulated second), mean TTFT and mean ITL — the
-heavy-traffic scenario axis the monolithic static-batch benchmarks never
-exercise.
+Two modes share one sweep harness:
+
+* **reduced real numerics** — a Poisson load generator (arrivals in
+  *simulated* seconds on the paper-env hardware specs) drives
+  ``ContinuousEngine`` over a ``FiddlerBackend``: real reduced-Mixtral
+  numerics, full-size-config latency constants (``timing_cfg``), chunked
+  admission.
+* **pure simulation at paper scale** — the same scheduler over a
+  ``SimulatedBackend`` wrapping a *param-less* ``FiddlerEngine`` on the
+  full Mixtral-8x7B config: routing sampled from the popularity profile,
+  only the ledger advances.  This is where heavy-traffic (tens of req/s)
+  sweeps get paper-scale numbers on a bare CPU container.
+
+Both sweep arrival rate × slot count across the orchestrator policies
+*and* the scheduler policies (``fifo`` / ``priority`` / ``autoscale`` —
+see serving/policy.py), reporting throughput (tokens / simulated second),
+mean/p95 TTFT overall and per SLO class, mean ITL, and preemption counts.
+Results are also dumped to ``BENCH_serve_load.json`` at the repo root.
 """
 from __future__ import annotations
 
+import json
+from pathlib import Path
 from typing import Dict, List
 
 import jax
@@ -21,12 +33,16 @@ import numpy as np
 from benchmarks.common import ENVS, POLICIES, emit
 from repro.configs import get_config
 from repro.core import FiddlerEngine
-from repro.serving.backend import FiddlerBackend
+from repro.serving.backend import FiddlerBackend, SimulatedBackend
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request
 
 MAX_SEQ = 48
 PREFILL_CHUNK = 8
+SIM_MAX_SEQ = 256
+SIM_PREFILL_CHUNK = 16
+SCHED_POLICIES = ("fifo", "priority", "autoscale")
+RESULTS_JSON = Path(__file__).resolve().parents[1] / "BENCH_serve_load.json"
 
 _model_cache = {}
 
@@ -44,9 +60,12 @@ def _reduced(model_name: str):
 
 
 def poisson_requests(rate_hz: float, n: int, *, prompt_len: int = 12,
-                     max_new: int = 8, seed: int = 0) -> List[Request]:
+                     max_new: int = 8, seed: int = 0,
+                     interactive_frac: float = 0.0) -> List[Request]:
     """n requests with exponential inter-arrival gaps at ``rate_hz``
-    (simulated seconds) and random prompts."""
+    (simulated seconds) and random prompts; a ``interactive_frac``
+    fraction is tagged with the high-priority ``interactive`` SLO class
+    (the rest are ``batch``)."""
     rng = np.random.default_rng(seed)
     t = 0.0
     reqs = []
@@ -54,13 +73,40 @@ def poisson_requests(rate_hz: float, n: int, *, prompt_len: int = 12,
         t += rng.exponential(1.0 / rate_hz)
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
         prompt = [1] + rng.integers(3, 250, size=plen - 1).tolist()
-        reqs.append(Request(rid=f"r{i}", prompt=prompt, max_new_tokens=max_new,
-                            arrival=t))
+        slo = ("interactive" if rng.random() < interactive_frac else "batch")
+        reqs.append(Request(rid=f"r{i}", prompt=prompt,
+                            max_new_tokens=max_new, arrival=t,
+                            slo_class=slo))
     return reqs
 
 
+def _metrics(done: List[Request], led) -> Dict[str, float]:
+    n_tokens = sum(len(r.output) for r in done)
+    ttfts = [r.ttft for r in done]
+    itls = [r.itl for r in done if r.itl is not None]
+    out = {
+        "throughput_tok_per_s": n_tokens / led.sim_time if led.sim_time else 0.0,
+        "mean_ttft": float(np.mean(ttfts)),
+        "p95_ttft": float(np.percentile(ttfts, 95)),
+        "mean_itl": float(np.mean(itls)) if itls else 0.0,
+        "hit_rate": led.fast_hits / max(led.fast_hits + led.streams
+                                        + led.slow_runs, 1),
+        "preemptions": float(sum(r.preemptions for r in done)),
+    }
+    by_class: Dict[str, List[float]] = {}
+    for r in done:
+        by_class.setdefault(r.slo_class, []).append(r.ttft)
+    for c, vals in sorted(by_class.items()):
+        out[f"mean_ttft_{c}"] = float(np.mean(vals))
+        out[f"p95_ttft_{c}"] = float(np.percentile(vals, 95))
+    return out
+
+
 def serve_once(model_name: str, policy: str, env: str, *, rate_hz: float,
-               n_slots: int, n_requests: int, seed: int = 0) -> Dict[str, float]:
+               n_slots: int, n_requests: int, seed: int = 0,
+               sched: str = "fifo",
+               interactive_frac: float = 0.0) -> Dict[str, float]:
+    """Reduced real-numerics run: orchestrated execution, real weights."""
     full, cfg, model, params = _reduced(model_name)
     eng = FiddlerEngine(cfg, params, policy=policy, hw=ENVS[env],
                         timing_cfg=full, host_precision="fp32",
@@ -68,29 +114,44 @@ def serve_once(model_name: str, policy: str, env: str, *, rate_hz: float,
                         seed=seed)
     serving = ContinuousEngine(FiddlerBackend(eng, max_seq=MAX_SEQ),
                                n_slots=n_slots, max_seq=MAX_SEQ,
-                               prefill_chunk=PREFILL_CHUNK)
-    for r in poisson_requests(rate_hz, n_requests, seed=seed):
+                               prefill_chunk=PREFILL_CHUNK, policy=sched)
+    for r in poisson_requests(rate_hz, n_requests, seed=seed,
+                              interactive_frac=interactive_frac):
         serving.submit(r)
     done = serving.run()
     assert len(done) == n_requests, (len(done), n_requests)
-    led = eng.ledger
-    n_tokens = sum(len(r.output) for r in done)
-    itls = [r.itl for r in done if r.itl is not None]
-    return {
-        "throughput_tok_per_s": n_tokens / led.sim_time if led.sim_time else 0.0,
-        "mean_ttft": float(np.mean([r.ttft for r in done])),
-        "mean_itl": float(np.mean(itls)) if itls else 0.0,
-        "hit_rate": led.fast_hits / max(led.fast_hits + led.streams
-                                        + led.slow_runs, 1),
-    }
+    return _metrics(done, eng.ledger)
+
+
+def simulate_once(model_name: str, policy: str, env: str, *, rate_hz: float,
+                  n_slots: int, n_requests: int, seed: int = 0,
+                  sched: str = "fifo", interactive_frac: float = 0.25,
+                  prompt_len: int = 64, max_new: int = 24
+                  ) -> Dict[str, float]:
+    """Paper-scale pure simulation: full-size config, no params — the
+    ``simulate_*`` ledger path under the real scheduler."""
+    cfg = get_config(model_name)
+    eng = FiddlerEngine(cfg, policy=policy, hw=ENVS[env], seed=seed)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=SIM_MAX_SEQ),
+                               n_slots=n_slots, max_seq=SIM_MAX_SEQ,
+                               prefill_chunk=SIM_PREFILL_CHUNK, policy=sched)
+    for r in poisson_requests(rate_hz, n_requests, prompt_len=prompt_len,
+                              max_new=max_new, seed=seed,
+                              interactive_frac=interactive_frac):
+        serving.submit(r)
+    done = serving.run(max_steps=100_000, on_exhausted="raise")
+    assert len(done) == n_requests, (len(done), n_requests)
+    return _metrics(done, eng.ledger)
 
 
 def run(model: str = "mixtral-8x7b", env: str = "env1",
         fast: bool = False) -> Dict[str, Dict[str, float]]:
+    results: Dict[str, Dict[str, float]] = {}
+
+    # -- reduced real numerics: orchestrator-policy axis (sched=fifo) --------
     rates = [2.0, 16.0] if fast else [2.0, 8.0, 32.0]
     slot_counts = [2] if fast else [2, 4]
     n_requests = 6 if fast else 16
-    results = {}
     for policy in POLICIES:
         for rate in rates:
             for n_slots in slot_counts:
@@ -102,6 +163,52 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
                      f"ttft={r['mean_ttft']:.4f}s "
                      f"hit_rate={r['hit_rate']:.2f}")
                 results[key] = r
+
+    # -- scheduler-policy axis, reduced real numerics ------------------------
+    sched_rate = 16.0 if fast else 32.0
+    for sched in (("fifo", "priority") if fast else SCHED_POLICIES):
+        r = serve_once(model, "fiddler", env, rate_hz=sched_rate, n_slots=2,
+                       n_requests=n_requests, sched=sched,
+                       interactive_frac=0.25)
+        key = f"serve_load/{env}/fiddler/sched_{sched}_rate{sched_rate:g}"
+        emit(key, r["mean_itl"] * 1e6,
+             f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+             f"p95_ttft={r['p95_ttft']:.4f}s "
+             f"preempt={r['preemptions']:.0f}")
+        results[key] = r
+
+    # -- paper-scale pure simulation: full-size Mixtral, heavy traffic -------
+    sim_rates = [8.0, 32.0] if fast else [8.0, 32.0, 64.0]
+    sim_requests = 16 if fast else 48
+    sim_slots = 4
+    for sched in SCHED_POLICIES:
+        for rate in sim_rates:
+            r = simulate_once(model, "fiddler", env, rate_hz=rate,
+                              n_slots=sim_slots, n_requests=sim_requests,
+                              sched=sched)
+            key = (f"serve_load_sim/{env}/fiddler/"
+                   f"sched_{sched}_rate{rate:g}_slots{sim_slots}")
+            emit(key, r["mean_itl"] * 1e6,
+                 f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                 f"p95_ttft={r['p95_ttft']:.4f}s "
+                 f"p95_ttft_int={r.get('p95_ttft_interactive', 0.0):.4f}s "
+                 f"preempt={r['preemptions']:.0f}")
+            results[key] = r
+
+    # self-describing record: a fast/dev run must not masquerade as the
+    # full sweep when it overwrites the file
+    record = {
+        "_meta": {
+            "mode": "fast" if fast else "full",
+            "model": model, "env": env,
+            "reduced_rates": rates, "reduced_slots": slot_counts,
+            "reduced_requests": n_requests,
+            "sim_rates": sim_rates, "sim_requests": sim_requests,
+            "sim_slots": sim_slots,
+        },
+        "results": results,
+    }
+    RESULTS_JSON.write_text(json.dumps(record, indent=2, sort_keys=True))
     return results
 
 

@@ -15,7 +15,7 @@ def smoke(arch: str):
     import jax.numpy as jnp
 
     from repro.configs import applicable_shapes, get_config
-    from repro.models import Model, lm_loss
+    from repro.models import Model
 
     cfg = get_config(arch)
     print(f"{arch}: {cfg.arch_type} {cfg.n_layers}L d={cfg.d_model} "

@@ -6,6 +6,13 @@ chunks (so a long admission never stalls in-flight decodes), the planner
 sees the mixed in-flight batch's expert counts each step, and TTFT/ITL
 are recorded in simulated seconds on the paper's env1 hardware spec.
 
+Scheduling goes through the pluggable ``SchedulerPolicy`` seam
+(serving/policy.py): this demo uses ``PriorityPolicy``, so the
+``interactive``-class request jumps the queue — preempting a running
+batch-class decode if no slot is free — and the preempted request still
+produces exactly its unpreempted greedy output (it is re-admitted via
+chunked prefill of its prompt + already-emitted tokens).
+
   PYTHONPATH=src python examples/serve_continuous.py
 """
 import jax
@@ -32,7 +39,7 @@ def main():
                        hw=HardwareSpec.paper_env1(), host_precision="fp32",
                        expert_budget=cfg.n_layers * cfg.moe.n_experts // 4)
     eng = ContinuousEngine(FiddlerBackend(fe, max_seq=96), n_slots=3,
-                           max_seq=96, prefill_chunk=8)
+                           max_seq=96, prefill_chunk=8, policy="priority")
 
     rng = np.random.default_rng(0)
     texts = ["the paper's fast tier", "experts on the slow tier",
@@ -42,13 +49,17 @@ def main():
     t = 0.0
     for i, text in enumerate(texts):
         t += rng.exponential(1 / 8.0)  # 8 req/s Poisson load
+        # the last arrival is an interactive-class request: it overtakes
+        # the queued batch work (and may steal a busy decode slot)
+        slo = "interactive" if i == len(texts) - 1 else "batch"
         eng.submit(Request(rid=f"req{i}", prompt=tok.encode(text)[:64],
-                           max_new_tokens=12, arrival=t))
+                           max_new_tokens=12, arrival=t, slo_class=slo))
 
     for r in sorted(eng.run(), key=lambda r: r.rid):
-        print(f"{r.rid}: ttft={r.ttft * 1e3:7.2f}ms(sim) "
+        print(f"{r.rid}[{r.slo_class}]: ttft={r.ttft * 1e3:7.2f}ms(sim) "
               f"itl={(r.itl or 0) * 1e3:6.2f}ms(sim) "
-              f"tokens={len(r.output)} text={tok.decode(r.output)!r}")
+              f"tokens={len(r.output)} preempt={r.preemptions} "
+              f"text={tok.decode(r.output)!r}")
     led = fe.ledger
     print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "
           f"streams={led.streams} slow={led.slow_runs} "

@@ -5,12 +5,10 @@ and loss logging.
     PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.data.pipeline import make_batch_iter
 from repro.models import Model

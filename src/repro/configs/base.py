@@ -10,8 +10,8 @@ Input shapes (the four assigned workload shapes) are described by
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 # ---------------------------------------------------------------------------
 # Model configuration

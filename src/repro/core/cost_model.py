@@ -19,10 +19,9 @@ paper's initialization-phase microbenchmarks).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
 

@@ -30,7 +30,6 @@ container's CPU.
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -42,11 +41,9 @@ from repro.configs.base import ModelConfig
 from repro.core.cost_model import (
     HardwareSpec,
     LatencyModel,
-    expert_flops_per_token,
     expert_weight_bytes,
 )
 from repro.core.placement import (
-    Placement,
     fast_tier_expert_budget,
     place_by_popularity,
     place_static_split,
@@ -55,7 +52,7 @@ from repro.core.planner import Decision, LayerPlan, plan_layer
 from repro.core.popularity import ExpertProfile, synthetic_profile
 from repro.kernels.host_expert import HostExpert
 from repro.kernels.ops import expert_mlp_op
-from repro.models.model import Model, apply_sublayer
+from repro.models.model import Model
 from repro.models.moe import route
 
 POLICIES = ("fiddler", "offload", "static_split")
@@ -525,6 +522,33 @@ class FiddlerEngine:
                     self._charge(li, plan, n_tokens=per_pass,
                                  kv_len=kv_lens)
             self.ledger.tokens_out += 1
+        return self.ledger.sim_time - t0
+
+    def simulate_prefill_chunk(self, n_tokens: int, kv_len: int) -> float:
+        """Charge one prefill chunk (``n_tokens`` tokens attending to
+        ``kv_len`` KV entries) without touching ``ledger.ttft`` — the
+        serving layer's simulated chunked-admission path."""
+        t0 = self.ledger.sim_time
+        for li in range(self.cfg.n_layers):
+            counts = self._sample_counts(li, n_tokens)
+            plan = self._decide(li, counts)
+            self._charge(li, plan, n_tokens=n_tokens, kv_len=kv_len)
+        return self.ledger.sim_time - t0
+
+    def simulate_decode_multi(self, kv_lens: np.ndarray) -> float:
+        """Charge one continuous-batching decode step: one token per live
+        slot, each reading its own KV length.  Mirrors
+        ``decode_step_multi``'s accounting without weights — the
+        ``SimulatedBackend`` serving path."""
+        kv_lens = np.asarray(kv_lens, np.int64)
+        n = int(kv_lens.shape[0])
+        assert n >= 1, "simulate_decode_multi needs at least one live slot"
+        t0 = self.ledger.sim_time
+        for li in range(self.cfg.n_layers):
+            counts = self._sample_counts(li, n)
+            plan = self._decide(li, counts)
+            self._charge(li, plan, n_tokens=n, kv_len=kv_lens)
+        self.ledger.tokens_out += n
         return self.ledger.sim_time - t0
 
     def simulate_generate(self, prompt_len: int, gen_len: int,

@@ -8,9 +8,7 @@ profile.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 import numpy as np
 

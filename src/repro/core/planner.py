@@ -19,10 +19,8 @@ provided, plus a brute-force optimal baseline used by the hypothesis tests.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from enum import IntEnum
-from typing import Optional, Tuple
 
 import numpy as np
 

@@ -7,9 +7,8 @@ popular expert and reports hit rates for best/worst/random placements.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Iterable, Optional
+from typing import Iterable
 
 import numpy as np
 

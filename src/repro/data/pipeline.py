@@ -10,13 +10,12 @@ used by the paper's Appendix D sensitivity study.
 """
 from __future__ import annotations
 
-import itertools
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import BOS_ID, EOS_ID, ByteTokenizer
+from repro.data.tokenizer import EOS_ID, ByteTokenizer
 
 _WORDS = [
     "the", "of", "and", "to", "in", "model", "expert", "token", "layer",

@@ -12,10 +12,9 @@ detected by rank and get a ``None`` prepended.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -223,7 +222,6 @@ def cache_pspecs(cfg: ModelConfig, cache_shape, global_batch: int,
         if "cross_kv" in names:
             full = (None, b_axes, None, None, None)
             return P(*full[5 - leaf.ndim:])
-        lead = ()
         nd = leaf.ndim
         if name in ("k", "v"):
             base = (b_axes, w_axes, None, None)

@@ -7,7 +7,6 @@ expert execution; ``host_expert.HostExpert`` is the slow-tier path.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -26,24 +26,22 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, applicable_shapes, get_config
-from repro.configs.base import ModelConfig
 from repro.distributed.sharding import (
     batch_pspecs,
     cache_pspecs,
     param_pspecs,
     set_axis_sizes,
-    to_named,
-)
+    )
 from repro.launch import analysis
 from repro.launch.mesh import make_production_mesh, mesh_axes
-from repro.launch.specs import input_specs, prefill_specs, train_batch_specs
+from repro.launch.specs import prefill_specs, train_batch_specs
 from repro.models.model import Model, ParallelContext
 from repro.training.optimizer import init_opt_state
 from repro.training.train_loop import make_train_step

@@ -2,10 +2,19 @@
 a stream of requests from the synthetic conversation pipeline, with either
 the static grouped scheduler or slot-based continuous batching.
 
+``--policy`` picks the *orchestrator* policy (paper Algorithm 1 vs
+baselines); ``--sched-policy`` picks the *scheduler* policy (the
+SchedulerPolicy seam: fifo / priority / autoscale) and ``--slo`` assigns
+SLO classes to the generated request stream, e.g.
+``--slo interactive=1,batch=3`` for a 1:3 class mix.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-      --policy fiddler --requests 8 --max-new 16 --scheduler continuous
+      --policy fiddler --requests 8 --max-new 16 --scheduler continuous \
+      --sched-policy priority --slo interactive=1,batch=3
 """
 import argparse
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +45,14 @@ def main(argv=None):
                     help="decode slots (continuous scheduler)")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-admission size (continuous scheduler)")
+    ap.add_argument("--sched-policy", default="fifo",
+                    choices=["fifo", "priority", "autoscale"],
+                    help="SchedulerPolicy: admission order, preemption, "
+                         "slot autoscaling")
+    ap.add_argument("--slo", default=None,
+                    help="SLO class mix for the request stream, e.g. "
+                         "'interactive=1,batch=3' (weights); default: all "
+                         "standard")
     args = ap.parse_args(argv)
 
     full = get_config(args.arch)
@@ -58,22 +75,41 @@ def main(argv=None):
         backend = (ModelBackend(model, params, max_seq=256) if fe is None
                    else FiddlerBackend(fe, max_seq=256))
         eng = ContinuousEngine(backend, n_slots=args.slots, max_seq=256,
-                               prefill_chunk=args.prefill_chunk)
+                               prefill_chunk=args.prefill_chunk,
+                               policy=args.sched_policy)
     elif fe is None:
         eng = ServingEngine(model, mode="model", params=params,
-                            max_batch=args.max_batch, max_seq=256)
+                            max_batch=args.max_batch, max_seq=256,
+                            policy=args.sched_policy)
     else:
         eng = ServingEngine(fe, mode="fiddler", max_batch=args.max_batch,
-                            max_seq=256)
+                            max_seq=256, policy=args.sched_policy)
+
+    # SLO class mix: "interactive=1,batch=3" → weighted random assignment
+    classes, weights = ["standard"], [1.0]
+    if args.slo:
+        classes, weights = [], []
+        for part in args.slo.split(","):
+            name, _, w = part.partition("=")
+            classes.append(name.strip())
+            weights.append(float(w) if w else 1.0)
+        if min(weights) < 0 or sum(weights) <= 0:
+            raise SystemExit(
+                f"--slo weights must be non-negative with a positive sum, "
+                f"got {args.slo!r}")
+    probs = np.asarray(weights) / np.sum(weights)
+    rng = np.random.default_rng(0)
 
     for i, conv in enumerate(synthetic_conversations(args.requests)):
+        slo = classes[int(rng.choice(len(classes), p=probs))]
         eng.submit(Request(rid=f"req{i}",
                            prompt=tok.encode(conv["text"])[:48],
-                           max_new_tokens=args.max_new))
+                           max_new_tokens=args.max_new, slo_class=slo))
     for r in eng.run():
         unit = "s(sim)" if args.policy != "model" else "s"
-        print(f"{r.rid}: ttft={r.ttft:.4f}{unit} latency={r.latency:.4f}{unit} "
-              f"tokens={len(r.output)}")
+        print(f"{r.rid}[{r.slo_class}]: ttft={r.ttft:.4f}{unit} "
+              f"latency={r.latency:.4f}{unit} tokens={len(r.output)} "
+              f"preempt={r.preemptions}")
     if args.policy not in ("model",):
         led = eng.backend.ledger
         print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "

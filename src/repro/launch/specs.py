@@ -8,7 +8,7 @@ reduced so the TOTAL sequence length matches the assigned shape.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,12 +13,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data.pipeline import make_batch_iter
-from repro.distributed.sharding import batch_pspecs, param_pspecs
+from repro.distributed.sharding import param_pspecs
 from repro.launch.mesh import make_debug_mesh, mesh_axes
 from repro.models.model import Model, ParallelContext
 from repro.training.checkpoint import save_checkpoint

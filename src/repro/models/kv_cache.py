@@ -15,7 +15,7 @@ The ring-buffer write index is ``step % W``; masking is done against the
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

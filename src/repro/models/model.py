@@ -15,8 +15,6 @@ one CPU device (smoke tests, Fiddler serving) and on the 512-chip mesh
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -547,8 +545,6 @@ class Model:
             cross = self._stack_cross_kv(params, enc_out)
 
         if cross is not None:
-            cache = {"blocks": [None] * self.period, "tail": [],
-                     "cross_kv": cross}
             x, _, aux = self._backbone_train_with_cross(
                 params, x, positions, cross, remat=remat)
         else:
@@ -652,7 +648,6 @@ class Model:
         decodes at its own position (single-host serving path)."""
         cfg, pctx = self.cfg, self.pctx
         x = self.embed(params, tokens)
-        B = x.shape[0]
         positions = pos[:, None].astype(jnp.int32)
         x, cache, _ = self._backbone(params, x, positions,
                                      mode="decode_multi", cache=cache,

@@ -23,7 +23,6 @@ so compiled FLOPs stay proportional to the real expert compute (no dense
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -30,7 +30,13 @@ import numpy as np
 
 class ServingBackend:
     """Interface both serving schedulers target.  ``max_seq`` is fixed at
-    construction (it is baked into jitted signatures and cache shapes)."""
+    construction (it is baked into jitted signatures and cache shapes).
+
+    Slot-mask contract: ``decode_slots``'s ``active`` mask is what governs
+    accounting — rows outside the mask are padding, never load, so a
+    scheduler that shrinks its live pool (see ``SchedulerPolicy
+    .target_slots``) is charged only for the slots it actually runs.
+    ``resize_cache`` grows (or shrinks) the allocated pool itself."""
 
     max_seq: int
 
@@ -64,6 +70,14 @@ class ServingBackend:
     def write_slot(self, cache: Any, slot_cache: Any, slot: int) -> Any:
         raise NotImplementedError
 
+    def resize_cache(self, cache: Any, n_slots: int) -> Any:
+        """Re-allocate the multi-slot cache with ``n_slots`` rows,
+        preserving rows ``0..min(old, new)-1`` (slot autoscaling).  The
+        default allocates fresh via ``make_cache`` and copies leaf axis 0;
+        backends whose leaves are not slot-major must override."""
+        fresh = self.make_cache(n_slots)
+        return jax.tree.map(_copy_rows(0), fresh, cache)
+
     def decode_slots(self, cache: Any, tokens: np.ndarray, pos: np.ndarray,
                      active: np.ndarray) -> Tuple[np.ndarray, Any]:
         """One decode step over all slots.  tokens/pos/active: (n_slots,).
@@ -80,6 +94,16 @@ class ServingBackend:
                      ) -> Tuple[jnp.ndarray, Any]:
         """One decode step at shared scalar position ``pos``."""
         raise NotImplementedError
+
+
+def _copy_rows(axis: int):
+    """Tree-map helper: copy the leading ``min(new, old)`` entries of
+    ``axis`` from the old cache leaf into the freshly-allocated one."""
+    def _copy(f, o):
+        n = min(f.shape[axis], o.shape[axis])
+        idx = (slice(None),) * axis + (slice(0, n),)
+        return f.at[idx].set(o[idx].astype(f.dtype))
+    return _copy
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +162,22 @@ class ModelBackend(ServingBackend):
 
     def write_slot(self, cache, slot_cache, slot):
         return self.model.write_slot(cache, slot_cache, slot)
+
+    def resize_cache(self, cache, n_slots):
+        """``Model.make_cache`` leaves are not slot-major: block caches
+        are scan-stacked (n_periods, B, ...) — batch axis 1 — while tail
+        and per-layer caches keep batch on axis 0 (same layout contract
+        as ``Model.write_slot``/``reorder_cache``)."""
+        fresh = self.make_cache(n_slots)
+        out = dict(fresh)
+        out["blocks"] = jax.tree.map(_copy_rows(1), fresh["blocks"],
+                                     cache["blocks"])
+        out["tail"] = jax.tree.map(_copy_rows(0), fresh["tail"],
+                                   cache["tail"])
+        if "cross_kv" in fresh:
+            out["cross_kv"] = jax.tree.map(_copy_rows(1), fresh["cross_kv"],
+                                           cache["cross_kv"])
+        return out
 
     def decode_slots(self, cache, tokens, pos, active):
         logits, cache = self._decode_multi(
@@ -218,11 +258,91 @@ class FiddlerBackend(ServingBackend):
                                        pos, self.max_seq)
 
 
+# ---------------------------------------------------------------------------
+# Pure-simulation backend (full-size configs, no weights)
+# ---------------------------------------------------------------------------
+
+
+class SimulatedBackend(ServingBackend):
+    """Slot API over a *param-less* ``FiddlerEngine``: routing is sampled
+    from the popularity profile (the engine's ``simulate_*`` path) and
+    only the simulated-seconds ledger advances — no weights, no numerics.
+    This is what lets ``ContinuousEngine`` + ``SchedulerPolicy`` sweeps
+    run at paper scale (full Mixtral-8x7B configs, heavy traffic) on a
+    bare CPU container.
+
+    Logits are a fixed one-hot on a non-EOS token, so greedy decoding
+    always runs each request to its ``max_new_tokens`` — the load pattern,
+    not the text, is what the simulation measures."""
+
+    FAKE_TOKEN = 5  # != EOS_ID(2), != PAD_ID(0)
+
+    def __init__(self, engine, *, max_seq: int = 256):
+        self.engine = engine
+        self.max_seq = max_seq
+        self._vocab = engine.cfg.vocab_size
+
+    @property
+    def ledger(self):
+        return self.engine.ledger
+
+    def clock(self) -> float:
+        return self.engine.ledger.sim_time
+
+    def wait_until(self, t: float) -> None:
+        led = self.engine.ledger
+        led.sim_time = max(led.sim_time, t)
+
+    def _logits(self, n: Optional[int] = None) -> np.ndarray:
+        row = np.zeros((self._vocab,), np.float32)
+        row[self.FAKE_TOKEN] = 1.0
+        return row if n is None else np.tile(row, (n, 1))
+
+    # slot API — caches are just slot counts; only the ledger matters
+    def make_cache(self, n_slots: int) -> Any:
+        return {"n_slots": n_slots}
+
+    def resize_cache(self, cache: Any, n_slots: int) -> Any:
+        return {"n_slots": n_slots}
+
+    def prefill(self, prompt):
+        n = len(list(prompt))
+        self.engine.simulate_prefill_chunk(n, kv_len=n)
+        return self._logits(), {"staged": n}
+
+    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+        n = len(list(chunk))
+        self.engine.simulate_prefill_chunk(n, kv_len=pos_offset + n)
+        return self._logits(), {"staged": pos_offset + n}
+
+    def write_slot(self, cache, slot_cache, slot):
+        return cache
+
+    def decode_slots(self, cache, tokens, pos, active):
+        active = np.asarray(active, bool)
+        kv_lens = np.asarray(pos)[active].astype(np.int64) + 1
+        self.engine.simulate_decode_multi(kv_lens)
+        return self._logits(len(active)), cache
+
+    # group API (static scheduler over the simulation)
+    def prefill_group(self, prompts):
+        B, S = np.asarray(prompts).shape
+        self.engine.simulate_prefill_chunk(B * S, kv_len=S)
+        return jnp.asarray(self._logits(B)), {"pos": S, "batch": B}
+
+    def decode_group(self, cache, tokens, pos):
+        B = cache["batch"]
+        self.engine.simulate_decode_multi(np.full(B, pos + 1, np.int64))
+        return jnp.asarray(self._logits(B)), cache
+
+
 def as_backend(obj, *, params=None, mode: Optional[str] = None,
                max_seq: int = 256) -> ServingBackend:
     """Coerce (Model, params) / FiddlerEngine / ready backend → backend."""
     if isinstance(obj, ServingBackend):
         return obj
     if mode == "fiddler" or (mode is None and hasattr(obj, "ledger")):
+        if getattr(obj, "model", None) is None:
+            return SimulatedBackend(obj, max_seq=max_seq)
         return FiddlerBackend(obj, max_seq=max_seq)
     return ModelBackend(obj, params, max_seq=max_seq)

@@ -9,7 +9,6 @@ paper's 11.57× result).  Works over either the monolithic ``Model`` or the
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -4,12 +4,14 @@ no head-of-line blocking like the static grouped engine.
 
 Runs over any ``ServingBackend``:
 
-* ``ModelBackend``   — jitted monolithic ``Model`` (scatter cache writes,
+* ``ModelBackend``     — jitted monolithic ``Model`` (scatter cache writes,
   see kv_cache.write_decode_multi); wall-clock metrics.
-* ``FiddlerBackend`` — the paper's CPU-GPU orchestrator: the planner sees
+* ``FiddlerBackend``   — the paper's CPU-GPU orchestrator: the planner sees
   the mixed in-flight batch's expert counts each step and the ledger
   advances in simulated seconds, which is also the clock that TTFT/ITL
   are recorded from.
+* ``SimulatedBackend`` — no weights: routing sampled from the popularity
+  profile, only the ledger advances (paper-scale load sweeps).
 
 Admission can be **chunked** (``prefill_chunk=N``): a long prompt is
 prefilled N tokens per engine step into a batch-1 staging cache while the
@@ -17,9 +19,19 @@ in-flight slots keep decoding, then joins the multi-slot cache — so one
 long admission never stalls the whole pool.  Requests may carry an
 ``arrival`` time (load generators set it in backend-clock units); the
 engine admits a request only once the clock has reached it.
+
+Scheduling decisions — admission order, preemption victims, and the live
+slot-pool size — are delegated to a pluggable ``SchedulerPolicy`` (see
+serving/policy.py).  The default ``FIFOPolicy`` reproduces the engine's
+pre-policy behavior exactly.  Preempted requests return to the queue
+carrying their generated tokens and are re-admitted through the (chunked)
+prefill path: the prompt plus all-but-the-last emitted token is
+re-prefilled, then decoding resumes from the last token — so greedy
+outputs are preemption-invariant and in-flight decodes never stall.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Any, List, Optional
 
@@ -28,7 +40,17 @@ import numpy as np
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.serving.backend import ServingBackend, as_backend
 from repro.serving.engine import Request
+from repro.serving.policy import (
+    QueueView,
+    SchedulerView,
+    SlotView,
+    get_policy,
+)
 from repro.serving.sampler import greedy
+
+# EWMA weight for the inter-arrival-gap estimate feeding
+# SchedulerView.arrival_rate (AutoscalePolicy's input).
+RATE_EWMA_ALPHA = 0.3
 
 
 @dataclass
@@ -40,16 +62,19 @@ class _Slot:
     steps_left: int = 0
     staging: Any = None        # batch-1 cache being chunk-prefilled
     prefilled: int = 0         # prompt tokens already processed
+    started: Optional[float] = None  # backend-clock admission time
 
 
 class ContinuousEngine:
     def __init__(self, backend, params=None, *, n_slots: int = 4,
-                 max_seq: int = 256, prefill_chunk: Optional[int] = None):
+                 max_seq: int = 256, prefill_chunk: Optional[int] = None,
+                 policy=None):
         """``backend``: a ``ServingBackend``, or a ``Model`` together with
         ``params`` (coerced to a ``ModelBackend`` for back-compat).
         ``prefill_chunk=None`` admits whole prompts in one step (exactly
         the monolithic prefill numerics); an integer enables chunked
-        admission."""
+        admission.  ``policy``: a ``SchedulerPolicy`` instance/name
+        (default ``FIFOPolicy`` — exact pre-policy behavior)."""
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1 (or None for whole-prompt "
@@ -58,20 +83,36 @@ class ContinuousEngine:
             backend = as_backend(backend, params=params, max_seq=max_seq)
         assert backend.max_seq == max_seq, (backend.max_seq, max_seq)
         self.backend = backend
-        self.n_slots = n_slots
+        self.n_slots = n_slots          # hard cap on the pool
         self.max_seq = max_seq
         self.prefill_chunk = prefill_chunk
+        self.policy = get_policy(policy)
         self.queue: List[Request] = []
         self.slots = [_Slot() for _ in range(n_slots)]
-        self.cache = backend.make_cache(n_slots)
         self.steps = 0
         self.finished: List[Request] = []
+        # arrival-rate EWMA state (engine-owned so policies stay pure)
+        self._rate = 0.0
+        self._gap_ewma: Optional[float] = None
+        self._last_arrival: Optional[float] = None
+        self._rate_counted: set = set()
+        # live pool: the policy sizes it; cache rows are allocated lazily
+        # (grown via backend.resize_cache) so autoscaling starts small
+        boot = self._view(slot_limit=1)
+        self.slot_limit = max(1, min(n_slots,
+                                     int(self.policy.target_slots(boot))))
+        self._alloc = self.slot_limit   # cache rows currently allocated
+        self.cache = backend.make_cache(self._alloc)
 
     # ------------------------------------------------------------------
     def clock(self) -> float:
         return self.backend.clock()
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} >= "
+                f"max_seq {self.max_seq} leaves no decode budget")
         if req.arrival is None:
             req.arrival = self.clock()
         self.queue.append(req)
@@ -80,20 +121,104 @@ class ContinuousEngine:
     def active(self) -> int:
         return sum(1 for s in self.slots if s.req is not None)
 
+    # -- scheduler view -------------------------------------------------
+    def _view(self, slot_limit: Optional[int] = None) -> SchedulerView:
+        now = self.clock()
+        q = tuple(QueueView.from_request(i, r)
+                  for i, r in enumerate(self.queue))
+        s = tuple(
+            SlotView(index=i, rid=sl.req.rid if sl.req else None,
+                     phase=sl.phase,
+                     priority=sl.req.effective_priority if sl.req else 0,
+                     slo_class=sl.req.slo_class if sl.req else "standard",
+                     deadline=sl.req.deadline if sl.req else None,
+                     pos=sl.pos,
+                     prompt_len=len(sl.req.prompt) if sl.req else 0,
+                     emitted=len(sl.req.output) if sl.req else 0,
+                     steps_left=sl.steps_left, started=sl.started)
+            for i, sl in enumerate(self.slots))
+        return SchedulerView(
+            clock=now, queue=q, slots=s,
+            slot_limit=self.slot_limit if slot_limit is None else slot_limit,
+            max_slots=self.n_slots, arrival_rate=self._rate)
+
+    def _update_rate(self, now: float) -> None:
+        """EWMA the inter-arrival gap over requests whose arrival the
+        clock has reached (each counted once, preemptions excluded)."""
+        fresh = [r for r in self.queue
+                 if r.rid not in self._rate_counted
+                 and (r.arrival is None or r.arrival <= now)]
+        for r in sorted(fresh, key=lambda r: (r.arrival is not None,
+                                              r.arrival or 0.0)):
+            self._rate_counted.add(r.rid)
+            t = r.arrival if r.arrival is not None else now
+            if self._last_arrival is not None:
+                gap = max(t - self._last_arrival, 1e-9)
+                self._gap_ewma = (gap if self._gap_ewma is None else
+                                  RATE_EWMA_ALPHA * gap
+                                  + (1 - RATE_EWMA_ALPHA) * self._gap_ewma)
+                self._rate = 1.0 / self._gap_ewma
+            self._last_arrival = t
+
+    # -- policy mechanisms ----------------------------------------------
+    def _autoscale(self) -> None:
+        target = int(self.policy.target_slots(self._view()))
+        target = max(1, min(self.n_slots, target))
+        if target > self._alloc:
+            self.cache = self.backend.resize_cache(self.cache, target)
+            self._alloc = target
+        self.slot_limit = target
+
+    def _evict(self, i: int) -> None:
+        """Return slot ``i``'s request to the queue carrying its emitted
+        tokens; re-admission resumes it via the (chunked) prefill path."""
+        slot = self.slots[i]
+        if slot.req is None or slot.phase != "decode":
+            return  # policies may only preempt decoding slots
+        req = slot.req
+        req.preemptions += 1
+        self.queue.append(req)
+        self.slots[i] = _Slot()
+
+    def _preempt(self) -> None:
+        for i in self.policy.preempt(self._view()):
+            if 0 <= int(i) < len(self.slots):
+                self._evict(int(i))
+
     # ------------------------------------------------------------------
     def _admit(self) -> None:
         now = self.clock()
-        for slot in self.slots:
-            if slot.req is not None or not self.queue:
+        free = [i for i in range(self.slot_limit)
+                if self.slots[i].req is None]
+        if not free:
+            return
+        order = self.policy.admission_order(self._view())
+        chosen: set = set()  # id()s — Request is an unhashable dataclass
+        for qi in order:
+            if not free:
+                break
+            if not (0 <= int(qi) < len(self.queue)):
                 continue
-            if self.queue[0].arrival is not None and \
-                    self.queue[0].arrival > now:
-                break  # FIFO: head hasn't arrived yet
-            req = self.queue.pop(0)
+            req = self.queue[int(qi)]
+            if id(req) in chosen or (req.arrival is not None
+                                     and req.arrival > now):
+                continue  # not arrived (or duplicate index): skip
+            chosen.add(id(req))
+            i = free.pop(0)
+            slot = self.slots[i]
             slot.req = req
             slot.phase = "prefill"
             slot.staging = None
             slot.prefilled = 0
+            slot.started = now
+        if chosen:
+            self.queue = [r for r in self.queue if id(r) not in chosen]
+
+    def _resume_tokens(self, req: Request) -> List[int]:
+        """The token sequence a preempted request must re-prefill: its
+        prompt plus all emitted tokens except the last (whose KV is
+        produced by the next decode step)."""
+        return list(req.prompt) + list(req.output[:-1])
 
     def _prefill_step(self) -> None:
         """Advance every prefilling slot by one chunk (or the whole prompt
@@ -102,26 +227,39 @@ class ContinuousEngine:
             if slot.phase != "prefill":
                 continue
             req = slot.req
+            resume = len(req.output) > 0  # preempted: re-prefill emitted KV
+            seq = self._resume_tokens(req) if resume else req.prompt
             if self.prefill_chunk is None:
-                logits, slot.staging = self.backend.prefill(req.prompt)
-                slot.prefilled = len(req.prompt)
+                logits, slot.staging = self.backend.prefill(seq)
+                slot.prefilled = len(seq)
             else:
-                chunk = req.prompt[slot.prefilled:
-                                   slot.prefilled + self.prefill_chunk]
+                chunk = seq[slot.prefilled:
+                            slot.prefilled + self.prefill_chunk]
                 logits, slot.staging = self.backend.prefill_chunk(
                     slot.staging, chunk, slot.prefilled)
                 slot.prefilled += len(chunk)
-                if slot.prefilled < len(req.prompt):
+                if slot.prefilled < len(seq):
                     continue  # more chunks; in-flight decodes run meanwhile
-            # prompt complete: first token, join the multi-slot batch
+            # prefill complete: join the multi-slot batch
+            self.cache = self.backend.write_slot(self.cache, slot.staging, i)
+            slot.staging = None
+            slot.phase = "decode"
+            if resume:
+                # decoding continues from the last emitted token; the
+                # re-prefill logits (which re-predict it) are discarded
+                slot.pos = len(seq)
+                slot.last_token = req.output[-1]
+                slot.steps_left = req.max_new_tokens - len(req.output)
+                if (slot.last_token == EOS_ID or slot.steps_left <= 0
+                        or slot.pos >= self.max_seq - 1):
+                    self._retire(i)
+                continue
+            # fresh admission: the prompt's first generated token
             tok = int(np.argmax(logits))
             now = self.clock()
             req.output.append(tok)
             req.token_times.append(now)
             req.ttft = now - req.arrival
-            self.cache = self.backend.write_slot(self.cache, slot.staging, i)
-            slot.staging = None
-            slot.phase = "decode"
             slot.pos = len(req.prompt)
             slot.last_token = tok
             slot.steps_left = req.max_new_tokens - 1
@@ -136,23 +274,24 @@ class ContinuousEngine:
         self.slots[i] = _Slot()
 
     def _decode_step(self) -> None:
-        decoding = [s.phase == "decode" for s in self.slots]
+        decoding = [s.phase == "decode" for s in self.slots[: self._alloc]]
         if not any(decoding):
             return
-        tokens = np.full((self.n_slots,), PAD_ID, np.int32)
-        pos = np.zeros((self.n_slots,), np.int32)
-        for i, s in enumerate(self.slots):
+        tokens = np.full((self._alloc,), PAD_ID, np.int32)
+        pos = np.zeros((self._alloc,), np.int32)
+        for i in range(self._alloc):
             if decoding[i]:
-                tokens[i] = s.last_token
-                pos[i] = s.pos
+                tokens[i] = self.slots[i].last_token
+                pos[i] = self.slots[i].pos
         logits, self.cache = self.backend.decode_slots(
             self.cache, tokens, pos, np.asarray(decoding))
         next_tok = greedy(logits)
         now = self.clock()
         self.steps += 1
-        for i, s in enumerate(self.slots):
+        for i in range(self._alloc):
             if not decoding[i]:
                 continue
+            s = self.slots[i]
             tok = int(next_tok[i])
             s.req.output.append(tok)
             s.req.token_times.append(now)
@@ -163,20 +302,50 @@ class ContinuousEngine:
                 self._retire(i)
 
     def step(self) -> None:
-        """One scheduler tick: admit → advance prefills one chunk → one
-        decode step for every decoding slot."""
+        """One scheduler tick: observe arrivals → resize the live pool →
+        preempt → admit → advance prefills one chunk → one decode step
+        for every decoding slot."""
+        self._update_rate(self.clock())
+        self._autoscale()
+        self._preempt()
         self._admit()
         self._prefill_step()
         self._decode_step()
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
+    def _admissible(self) -> bool:
+        now = self.clock()
+        for qi in self.policy.admission_order(self._view()):
+            if 0 <= int(qi) < len(self.queue):
+                r = self.queue[int(qi)]
+                if r.arrival is None or r.arrival <= now:
+                    return True
+        return False
+
+    def run(self, max_steps: int = 10_000,
+            on_exhausted: str = "warn") -> List[Request]:
+        """Drive the scheduler until every request finishes or
+        ``max_steps`` ticks elapse.  An exhausted step budget with work
+        still queued/in flight warns (``on_exhausted="warn"``, default)
+        or raises (``"raise"``) instead of silently dropping requests."""
+        assert on_exhausted in ("warn", "raise", "ignore"), on_exhausted
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
-            if self.active == 0 and self.queue and \
-                    self.queue[0].arrival is not None and \
-                    self.queue[0].arrival > self.clock():
-                # pool idle, next request hasn't arrived: fast-forward
-                self.backend.wait_until(self.queue[0].arrival)
+            if self.active == 0 and self.queue and not self._admissible():
+                # pool idle, nothing admittable yet: fast-forward to the
+                # next arrival instead of busy-spinning
+                now = self.clock()
+                future = [r.arrival for r in self.queue
+                          if r.arrival is not None and r.arrival > now]
+                if future:
+                    self.backend.wait_until(min(future))
             self.step()
             steps += 1
+        if self.queue or self.active:
+            msg = (f"ContinuousEngine.run: step budget max_steps="
+                   f"{max_steps} exhausted with {len(self.queue)} queued "
+                   f"and {self.active} in-flight requests unfinished")
+            if on_exhausted == "raise":
+                raise RuntimeError(msg)
+            if on_exhausted == "warn":
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return self.finished

@@ -7,6 +7,13 @@ jitted ``Model`` (capacity-sufficient regime) or the ``FiddlerEngine``
 orchestrator (fast/slow-tier regime — the paper's setting).  Per-request
 TTFT/ITL are recorded from the backend's clock — the engine's simulated
 seconds when orchestrated, wall-clock otherwise.
+
+Group formation is delegated to a pluggable ``SchedulerPolicy`` (see
+serving/policy.py): the policy orders the queue — FIFO by default, or
+SLO-class/deadline-aware with ``PriorityPolicy`` so interactive requests
+batch ahead of bulk work.  Preemption and slot autoscaling are
+continuous-batching mechanisms; the static engine consumes only the
+admission order.
 """
 from __future__ import annotations
 
@@ -18,6 +25,7 @@ import numpy as np
 
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.serving.backend import ServingBackend, as_backend
+from repro.serving.policy import QueueView, SchedulerView, get_policy, slo_priority
 from repro.serving.sampler import greedy, sample
 
 
@@ -28,11 +36,22 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     arrival: Optional[float] = None     # backend-clock submit/arrival time
+    # scheduling (SchedulerPolicy inputs)
+    priority: Optional[int] = None      # None → derived from slo_class
+    slo_class: str = "standard"         # batch | standard | interactive
+    deadline: Optional[float] = None    # absolute backend-clock deadline
     # outputs
     output: List[int] = field(default_factory=list)
     token_times: List[float] = field(default_factory=list)
     ttft: Optional[float] = None
     latency: Optional[float] = None
+    preemptions: int = 0                # times evicted mid-decode
+
+    @property
+    def effective_priority(self) -> int:
+        """Explicit ``priority`` if set, else the SLO class default."""
+        return self.priority if self.priority is not None \
+            else slo_priority(self.slo_class)
 
     @property
     def itl(self) -> Optional[float]:
@@ -45,9 +64,12 @@ class Request:
 
 class ServingEngine:
     def __init__(self, backend, *, mode: Optional[str] = None, params=None,
-                 max_batch: int = 8, max_seq: int = 512, seed: int = 0):
+                 max_batch: int = 8, max_seq: int = 512, seed: int = 0,
+                 policy=None):
         """``backend``: a ``ServingBackend``, a ``Model`` (with ``params``;
-        mode="model") or a ``FiddlerEngine`` (mode="fiddler")."""
+        mode="model") or a ``FiddlerEngine`` (mode="fiddler").
+        ``policy``: a ``SchedulerPolicy`` instance/name ordering group
+        formation (default FIFO — exact pre-policy behavior)."""
         assert mode in (None, "model", "fiddler")
         self.raw_backend = backend
         self._backend: ServingBackend = as_backend(
@@ -60,6 +82,7 @@ class ServingEngine:
         self.max_seq = max_seq
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
+        self.policy = get_policy(policy)
 
     @property
     def backend(self):
@@ -68,6 +91,10 @@ class ServingEngine:
         return self.raw_backend
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} >= "
+                f"max_seq {self.max_seq} leaves no decode budget")
         if req.arrival is None:
             req.arrival = self._backend.clock()
         self.queue.append(req)
@@ -76,9 +103,33 @@ class ServingEngine:
     def _clock(self) -> float:
         return self._backend.clock()
 
+    def _sample_step(self, group: List[Request], logits) -> np.ndarray:
+        """Next token per row, honoring each request's own temperature
+        (mixed-temperature batches: greedy rows stay bit-exact while
+        sampled rows draw with their individual settings)."""
+        tok = greedy(logits)
+        if not any(r.temperature > 0 for r in group):
+            return tok
+        tok = tok.copy()  # greedy() may return a read-only device view
+        self.key, sub = jax.random.split(self.key)
+        keys = jax.random.split(sub, len(group))
+        for i, r in enumerate(group):
+            if r.temperature > 0:
+                tok[i] = int(sample(logits[i:i + 1], keys[i],
+                                    r.temperature)[0])
+        return tok
+
     def _run_group(self, group: List[Request]) -> None:
         B = len(group)
         S = max(len(r.prompt) for r in group)
+        n_steps = min(max(r.max_new_tokens for r in group),
+                      self.max_seq - S)
+        if n_steps <= 0:
+            longest = max(group, key=lambda r: len(r.prompt))
+            raise ValueError(
+                f"group has no decode budget: prompt length "
+                f"{len(longest.prompt)} (rid={longest.rid}) >= max_seq "
+                f"{self.max_seq}")
         prompts = np.full((B, S), PAD_ID, np.int32)
         for i, r in enumerate(group):
             prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
@@ -88,14 +139,8 @@ class ServingEngine:
             r.ttft = t_first - r.arrival
 
         done = np.zeros(B, bool)
-        n_steps = min(max(r.max_new_tokens for r in group),
-                      self.max_seq - S)
         for step in range(n_steps):
-            if group[0].temperature > 0:
-                self.key, sub = jax.random.split(self.key)
-                tok = sample(logits, sub, group[0].temperature)
-            else:
-                tok = greedy(logits)
+            tok = self._sample_step(group, logits)
             now = self._clock()
             for i, r in enumerate(group):
                 if not done[i]:
@@ -111,12 +156,32 @@ class ServingEngine:
         for r in group:
             r.latency = t_end - r.arrival
 
+    def _next_group(self) -> List[Request]:
+        """Form the next batch: the policy orders the queue (everything is
+        treated as arrived — static batches wait for stragglers below)."""
+        horizon = max([self._clock()]
+                      + [r.arrival for r in self.queue
+                         if r.arrival is not None])
+        view = SchedulerView(
+            clock=horizon,
+            queue=tuple(QueueView.from_request(i, r)
+                        for i, r in enumerate(self.queue)),
+            slots=(), slot_limit=0, max_slots=0, arrival_rate=0.0)
+        order = [i for i in self.policy.admission_order(view)
+                 if 0 <= int(i) < len(self.queue)]
+        if not order:                      # inert policy: fall back to FIFO
+            order = list(range(len(self.queue)))
+        picked = list(dict.fromkeys(int(i) for i in order))[: self.max_batch]
+        group = [self.queue[i] for i in picked]
+        taken = set(picked)
+        self.queue = [r for i, r in enumerate(self.queue) if i not in taken]
+        return group
+
     def run(self) -> List[Request]:
         """Drain the queue in static batches of ≤ max_batch."""
         finished: List[Request] = []
         while self.queue:
-            group = self.queue[: self.max_batch]
-            self.queue = self.queue[self.max_batch:]
+            group = self._next_group()
             # a batch can only start once its last member has arrived
             latest = max(r.arrival for r in group if r.arrival is not None)
             if latest > self._backend.clock():

@@ -1,0 +1,271 @@
+"""Pluggable scheduling policies for the serving engines.
+
+Fiddler's orchestrator wins by handling *every* serving scenario with one
+execution engine; this module gives the scheduling layer the same shape.
+Admission order, preemption victims, and the live decode-slot count are
+decided by a ``SchedulerPolicy`` instead of hard-coded FIFO loops inside
+``ContinuousEngine``/``ServingEngine``.
+
+The contract
+------------
+Each engine step the engine builds a read-only :class:`SchedulerView` —
+the queue (with per-request ``priority``/``slo_class``/``deadline``), the
+slot states, the backend clock, and an EWMA arrival-rate estimate — and
+asks the policy three questions:
+
+* :meth:`SchedulerPolicy.admission_order` — which queued requests may be
+  admitted this step, in order.  Returning an index whose request has not
+  arrived yet is ignored by the engine; *omitting* arrived indices is how
+  a policy expresses head-of-line blocking (see :class:`FIFOPolicy`).
+* :meth:`SchedulerPolicy.preempt` — decode-slot indices to evict.  The
+  engine returns each victim to the queue carrying its generated tokens;
+  re-admission re-prefills prompt + emitted tokens through the (chunked)
+  prefill path, so under greedy decoding a preempted request's final
+  output is identical to its unpreempted output.
+* :meth:`SchedulerPolicy.target_slots` — desired live-pool size.  The
+  engine clamps to ``[1, max_slots]``, grows the backend cache via
+  ``ServingBackend.resize_cache`` when needed, and only ever *admits*
+  into slots below the limit (shrinking drains, it never kills work).
+
+Policies must be pure functions of the view (the engine may call them
+more than once per step); state that must persist across steps — e.g.
+the arrival-rate EWMA — lives in the engine and is surfaced through the
+view.
+
+Shipped policies
+----------------
+* :class:`FIFOPolicy` — exact pre-redesign behavior (the default).
+* :class:`PriorityPolicy` — deadline/SLO classes ahead of FIFO,
+  preempting the longest-running lower-priority decode when a
+  higher-priority arrival is waiting without a free slot.
+* :class:`AutoscalePolicy` — sizes the live slot pool against the
+  arrival-rate EWMA (Little's law with a configurable service-time
+  estimate).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+# SLO class → default priority when a request does not set one explicitly.
+# Higher is more urgent.  Unknown classes fall back to "standard".
+SLO_CLASSES = {
+    "batch": 0,
+    "standard": 1,
+    "interactive": 2,
+}
+
+
+def slo_priority(slo_class: str) -> int:
+    return SLO_CLASSES.get(slo_class, SLO_CLASSES["standard"])
+
+
+@dataclass(frozen=True)
+class QueueView:
+    """Read-only snapshot of one queued request."""
+    index: int                   # position in the engine queue
+    rid: str
+    arrival: Optional[float]     # backend-clock arrival (None = already due)
+    priority: int                # resolved priority (explicit or SLO class)
+    slo_class: str
+    deadline: Optional[float]    # absolute backend-clock deadline
+    prompt_len: int
+    max_new_tokens: int
+    emitted: int                 # >0 means a preempted request awaiting resume
+
+    def arrived(self, clock: float) -> bool:
+        return self.arrival is None or self.arrival <= clock
+
+    @classmethod
+    def from_request(cls, index: int, req) -> "QueueView":
+        """Snapshot a ``serving.engine.Request`` at queue position
+        ``index`` (single point where Request fields map to the view)."""
+        return cls(index=index, rid=req.rid, arrival=req.arrival,
+                   priority=req.effective_priority, slo_class=req.slo_class,
+                   deadline=req.deadline, prompt_len=len(req.prompt),
+                   max_new_tokens=req.max_new_tokens,
+                   emitted=len(req.output))
+
+
+@dataclass(frozen=True)
+class SlotView:
+    """Read-only snapshot of one decode slot."""
+    index: int
+    rid: Optional[str]           # None = free slot
+    phase: str                   # idle | prefill | decode
+    priority: int
+    slo_class: str
+    deadline: Optional[float]
+    pos: int
+    prompt_len: int
+    emitted: int
+    steps_left: int
+    started: Optional[float]     # backend-clock time of admission
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+
+@dataclass(frozen=True)
+class SchedulerView:
+    """Everything a policy may look at: queue, slots, clock, load."""
+    clock: float
+    queue: Tuple[QueueView, ...]
+    slots: Tuple[SlotView, ...]  # all allocated slots (live + draining)
+    slot_limit: int              # current live-pool size (admittable slots)
+    max_slots: int               # hard cap on the pool
+    arrival_rate: float          # EWMA req/s of the backend clock (0 = unknown)
+
+    def arrived_queue(self) -> Tuple[QueueView, ...]:
+        return tuple(q for q in self.queue if q.arrived(self.clock))
+
+    def free_live_slots(self) -> int:
+        return sum(1 for s in self.slots[: self.slot_limit] if s.free)
+
+
+class SchedulerPolicy:
+    """Base policy: subclasses override any of the three decisions.
+
+    The defaults are inert — no admissions, no preemption, keep the pool
+    at its maximum — so concrete policies state exactly what they change.
+    """
+
+    name = "base"
+
+    def admission_order(self, view: SchedulerView) -> Sequence[int]:
+        """Queue indices to admit, in order.  Non-arrived indices are
+        skipped by the engine; arrived-but-omitted indices wait."""
+        raise NotImplementedError
+
+    def preempt(self, view: SchedulerView) -> Sequence[int]:
+        """Slot indices to evict back to the queue (decode phase only)."""
+        return ()
+
+    def target_slots(self, view: SchedulerView) -> int:
+        """Desired live-pool size; clamped to [1, max_slots] by the engine."""
+        return view.max_slots
+
+
+class FIFOPolicy(SchedulerPolicy):
+    """Exact pre-redesign behavior: admit in queue order, and if the queue
+    head has not arrived yet nothing behind it is admitted either
+    (head-of-line blocking).  Never preempts, never resizes the pool."""
+
+    name = "fifo"
+
+    def admission_order(self, view: SchedulerView) -> Sequence[int]:
+        order = []
+        for q in view.queue:
+            if not q.arrived(view.clock):
+                break  # FIFO: head hasn't arrived yet
+            order.append(q.index)
+        return order
+
+
+class PriorityPolicy(SchedulerPolicy):
+    """SLO/deadline-aware admission with optional preemption.
+
+    Arrived requests are ordered by (priority desc, deadline asc, arrival
+    asc) so a higher class never waits behind a lower one.  When a
+    higher-priority arrival is waiting and no live slot is free, the
+    longest-running strictly-lower-priority decode is evicted; the engine
+    re-admits it later via chunked prefill of its prompt + emitted
+    tokens, so no token is lost and in-flight decodes never stall behind
+    the re-prefill."""
+
+    name = "priority"
+
+    def __init__(self, preemption: bool = True):
+        self.preemption = preemption
+
+    @staticmethod
+    def _key(q: QueueView):
+        return (-q.priority,
+                q.deadline if q.deadline is not None else math.inf,
+                q.arrival if q.arrival is not None else -math.inf,
+                q.index)
+
+    def admission_order(self, view: SchedulerView) -> Sequence[int]:
+        arrived = sorted(view.arrived_queue(), key=self._key)
+        return [q.index for q in arrived]
+
+    def preempt(self, view: SchedulerView) -> Sequence[int]:
+        if not self.preemption:
+            return ()
+        waiters = sorted(view.arrived_queue(), key=self._key)
+        if not waiters:
+            return ()
+        free = view.free_live_slots()
+        # longest-running first among the lowest priorities
+        candidates = sorted(
+            (s for s in view.slots[: view.slot_limit]
+             if s.phase == "decode"),
+            key=lambda s: (s.priority,
+                           s.started if s.started is not None else math.inf))
+        victims = []
+        taken = set()
+        for w in waiters:
+            if free > 0:
+                free -= 1  # a free slot serves this waiter; no eviction
+                continue
+            for s in candidates:
+                if s.index in taken:
+                    continue
+                if s.priority < w.priority:
+                    taken.add(s.index)
+                    victims.append(s.index)
+                    break
+        return victims
+
+
+class AutoscalePolicy(FIFOPolicy):
+    """FIFO admission plus slot-pool autoscaling against the engine's
+    arrival-rate EWMA: ``target = ceil(rate * service_time * headroom)``
+    (Little's law), clamped to ``[min_slots, max_slots]``.  Before the
+    estimate warms up (rate == 0) the pool keeps its current size, so a
+    cold engine starts at ``min_slots`` and grows with load — exercising
+    ``ServingBackend.resize_cache`` — and shrinks back when load drops
+    (draining, never killing, occupied slots)."""
+
+    name = "autoscale"
+
+    def __init__(self, min_slots: int = 1, service_time: float = 0.25,
+                 headroom: float = 1.5):
+        assert min_slots >= 1 and service_time > 0 and headroom > 0
+        self.min_slots = min_slots
+        self.service_time = service_time
+        self.headroom = headroom
+
+    def target_slots(self, view: SchedulerView) -> int:
+        if view.arrival_rate <= 0.0:
+            return max(self.min_slots, view.slot_limit)
+        need = math.ceil(view.arrival_rate * self.service_time
+                         * self.headroom)
+        return max(self.min_slots, min(view.max_slots, need))
+
+
+POLICIES = {
+    "fifo": FIFOPolicy,
+    "priority": PriorityPolicy,
+    "autoscale": AutoscalePolicy,
+}
+
+
+def get_policy(spec=None) -> SchedulerPolicy:
+    """Coerce None / name / class / instance → a policy instance."""
+    if spec is None:
+        return FIFOPolicy()
+    if isinstance(spec, SchedulerPolicy):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, SchedulerPolicy):
+        return spec()
+    if isinstance(spec, str):
+        try:
+            return POLICIES[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown scheduler policy {spec!r}; "
+                f"choose from {sorted(POLICIES)}") from None
+    raise TypeError(f"cannot build a SchedulerPolicy from {spec!r}")

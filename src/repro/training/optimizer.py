@@ -6,7 +6,6 @@ be ZeRO-sharded over the data axes — see distributed/sharding.py).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 
@@ -26,7 +25,8 @@ class AdamWConfig:
 
 
 def init_opt_state(params) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

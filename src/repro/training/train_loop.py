@@ -7,10 +7,9 @@ every architecture × train shape).
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.model import Model, lm_loss
 from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state

@@ -19,7 +19,7 @@ import string
 import sys
 import types
 import zlib
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, List, Optional
 
 import numpy as np
 

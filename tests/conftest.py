@@ -16,7 +16,6 @@ except ImportError:
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config

@@ -11,7 +11,6 @@ from repro.models import kv_cache as kvc
 from repro.models.attention import (
     attention_block,
     chunked_attention,
-    decode_attention,
     init_attention,
 )
 

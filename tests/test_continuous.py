@@ -3,7 +3,6 @@ greedy continuations as isolated single-request decoding, with slot
 reuse and mid-flight joins — through the monolithic jitted Model and
 through the Fiddler orchestrator backend (whose ledger advances in
 simulated seconds and feeds per-request TTFT/ITL)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

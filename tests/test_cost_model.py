@@ -1,7 +1,6 @@
 """Cost model: calibration against the REAL kernels (the paper's
 initialization-phase measurement), hardware derivation, budget math."""
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core.cost_model import (
@@ -18,7 +17,6 @@ def test_calibrate_from_real_kernels():
     """LatencyModel.calibrate fits the measured fast/slow kernels and the
     planner built on it behaves like the paper's: CPU preferred at small
     N when transfers are expensive."""
-    import jax
     import jax.numpy as jnp
 
     from repro.kernels.host_expert import HostExpert

@@ -3,14 +3,12 @@ placement, int8 slow tier (core/expert_cache.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import reduced_model
 from repro.configs import get_config
 from repro.core import FiddlerEngine, HardwareSpec
 from repro.core.expert_cache import (
-    AdaptivePlacement,
     LRUExpertCache,
     QuantizedHostExpert,
     dequantize_expert,

@@ -9,7 +9,7 @@ from repro.kernels import ref
 from repro.kernels.expert_mlp import expert_mlp
 from repro.kernels.host_expert import HostExpert, host_expert_mlp, to_bf16
 from repro.kernels.moe_gmm import moe_gmm
-from repro.kernels.ops import expert_mlp_op, moe_gmm_op
+from repro.kernels.ops import expert_mlp_op
 
 SHAPES = [(8, 64, 128), (64, 128, 256), (130, 256, 640), (1, 128, 128),
           (257, 128, 384)]

@@ -3,7 +3,6 @@ oracle, ref-vs-sharded equivalence on a trivial mesh."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -49,7 +48,6 @@ def test_expert_ranks_property(ids):
 
 
 def test_dispatch_matches_naive_loop():
-    cfg = _cfg()
     E, d, f, k = 4, 32, 64, 2
     key = jax.random.PRNGKey(5)
     ks = jax.random.split(key, 5)

@@ -1,17 +1,14 @@
 """Perf-knob (distributed/opts.py) correctness: every optimization must be
 numerics-preserving (or bf16-level for the bf16 knob)."""
-import importlib
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.distributed import opts
 from repro.kernels.ref import flash_attention_ref
 from repro.models.attention import chunked_attention
-from repro.models.moe import init_moe, moe_block_ref
 from repro.models.ssm import init_ssm_block, ssm_block
 
 

@@ -1,6 +1,5 @@
 """Property tests for popularity profiling and expert placement."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import (

@@ -1,6 +1,5 @@
 """Property tests for Algorithm 1 (the paper's planner) with hypothesis."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import HardwareSpec, LatencyModel

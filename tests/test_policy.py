@@ -1,0 +1,458 @@
+"""SchedulerPolicy API: scheduler invariants, preemption equivalence,
+and the policy seam over every backend.
+
+Property tests (hypothesis, with the tests/_hypothesis_fallback shim):
+
+* FIFOPolicy reproduces the pre-redesign admission loop exactly
+  (head-of-line blocking on the queue head's arrival);
+* priority requests never wait behind a preemptible lower class;
+* no token is lost or duplicated across preempt/re-admit;
+* ledger expert counts / tokens_out only ever reflect active slots.
+
+Plus concrete equivalence tests: a preempted request's final output
+equals its unpreempted output under greedy decoding (whole-prompt and
+chunked re-prefill), and FIFOPolicy runs bit-identically to the engine
+default.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_model
+from repro.core import FiddlerEngine
+from repro.serving.backend import FiddlerBackend, ModelBackend, SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.policy import (
+    AutoscalePolicy,
+    FIFOPolicy,
+    PriorityPolicy,
+    QueueView,
+    SchedulerView,
+    SlotView,
+    get_policy,
+    slo_priority,
+)
+
+
+def _reference_generation(model, params, prompt, n_new, max_seq=64):
+    logits, cache = model.prefill(params, jnp.asarray([prompt], jnp.int32),
+                                  max_seq=max_seq, cache_dtype=jnp.float32)
+    out = [int(jnp.argmax(logits[0]))]
+    for t in range(n_new - 1):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray([[out[-1]]], jnp.int32),
+            jnp.int32(len(prompt) + t), max_seq=max_seq)
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def _queue_view(i, arrival, priority=1, deadline=None, emitted=0):
+    return QueueView(index=i, rid=f"q{i}", arrival=arrival,
+                     priority=priority, slo_class="standard",
+                     deadline=deadline, prompt_len=4, max_new_tokens=8,
+                     emitted=emitted)
+
+
+def _slot_view(i, rid="s", phase="decode", priority=1, started=0.0):
+    return SlotView(index=i, rid=None if rid is None else f"{rid}{i}",
+                    phase=phase if rid is not None else "idle",
+                    priority=priority, slo_class="standard", deadline=None,
+                    pos=8, prompt_len=4, emitted=4, steps_left=4,
+                    started=started)
+
+
+def _view(clock, queue, slots, slot_limit=None, rate=0.0):
+    return SchedulerView(clock=clock, queue=tuple(queue), slots=tuple(slots),
+                         slot_limit=len(slots) if slot_limit is None
+                         else slot_limit,
+                         max_slots=len(slots), arrival_rate=rate)
+
+
+# ---------------------------------------------------------------------------
+# Property: FIFO admission == pre-redesign head-of-line-blocking loop
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=10.0), max_size=8),
+       st.floats(min_value=0.0, max_value=10.0))
+def test_fifo_admission_is_headblocking_prefix(arrivals, clock):
+    queue = [_queue_view(i, a) for i, a in enumerate(arrivals)]
+    order = list(FIFOPolicy().admission_order(
+        _view(clock, queue, [_slot_view(0, rid=None)])))
+    # the old loop admitted queue[0], queue[1], ... and stopped at the
+    # first request whose arrival the clock had not reached
+    want = []
+    for i, a in enumerate(arrivals):
+        if a > clock:
+            break
+        want.append(i)
+    assert order == want
+
+
+# ---------------------------------------------------------------------------
+# Property: priority requests never wait behind a preemptible lower class
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=3),
+                          st.floats(min_value=0.0, max_value=5.0)),
+                min_size=1, max_size=8))
+def test_priority_order_never_behind_lower_class(entries):
+    clock = 10.0  # everything has arrived
+    queue = [_queue_view(i, a, priority=p)
+             for i, (p, a) in enumerate(entries)]
+    pol = PriorityPolicy()
+    order = list(pol.admission_order(_view(clock, queue,
+                                           [_slot_view(0, rid=None)])))
+    assert sorted(order) == list(range(len(entries)))
+    prios = [entries[i][0] for i in order]
+    assert prios == sorted(prios, reverse=True)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=1,
+                max_size=6),
+       st.integers(min_value=0, max_value=3))
+def test_priority_preempts_iff_strictly_lower_victim(slot_prios, waiter_prio):
+    """With a full pool and one arrived waiter, a victim is chosen exactly
+    when some decoding slot has strictly lower priority — and it is the
+    longest-running such slot at the lowest priority."""
+    clock = 1.0
+    queue = [_queue_view(0, 0.0, priority=waiter_prio)]
+    slots = [_slot_view(i, priority=p, started=float(-i))
+             for i, p in enumerate(slot_prios)]
+    victims = list(PriorityPolicy().preempt(_view(clock, queue, slots)))
+    lower = [i for i, p in enumerate(slot_prios) if p < waiter_prio]
+    if not lower:
+        assert victims == []
+    else:
+        assert len(victims) == 1
+        v = victims[0]
+        assert slot_prios[v] < waiter_prio
+        best = min(lower, key=lambda i: (slot_prios[i], slots[i].started))
+        assert v == best
+    # a free live slot absorbs the waiter instead
+    slots_with_free = slots + [_slot_view(len(slots), rid=None)]
+    assert list(PriorityPolicy().preempt(
+        _view(clock, queue, slots_with_free))) == []
+
+
+def test_slo_class_priorities():
+    assert slo_priority("interactive") > slo_priority("standard") \
+        > slo_priority("batch")
+    assert Request(rid="r", prompt=[1], slo_class="interactive") \
+        .effective_priority == slo_priority("interactive")
+    assert Request(rid="r", prompt=[1], slo_class="interactive",
+                   priority=0).effective_priority == 0
+
+
+def test_get_policy_coercions():
+    assert isinstance(get_policy(None), FIFOPolicy)
+    assert isinstance(get_policy("priority"), PriorityPolicy)
+    assert isinstance(get_policy(AutoscalePolicy), AutoscalePolicy)
+    pol = PriorityPolicy(preemption=False)
+    assert get_policy(pol) is pol
+    with pytest.raises(ValueError):
+        get_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# Property: no token lost or duplicated across preempt/re-admit (simulation)
+# ---------------------------------------------------------------------------
+
+
+def _sim_engine(n_slots=2, policy="fifo", max_seq=64, prefill_chunk=4,
+                seed=0):
+    cfg = reduced_model("mixtral-8x7b")[0]
+    fe = FiddlerEngine(cfg, policy="fiddler", seed=seed)  # param-less
+    return fe, ContinuousEngine(SimulatedBackend(fe, max_seq=max_seq),
+                                n_slots=n_slots, max_seq=max_seq,
+                                prefill_chunk=prefill_chunk, policy=policy)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.integers(min_value=0, max_value=2),   # priority
+                          st.integers(min_value=1, max_value=10),  # prompt len
+                          st.integers(min_value=1, max_value=6)),  # max_new
+                min_size=1, max_size=10),
+       st.sampled_from(["fifo", "priority", "autoscale"]),
+       st.integers(min_value=1, max_value=3))
+def test_no_token_lost_or_duplicated(specs, policy, n_slots):
+    fe, eng = _sim_engine(n_slots=n_slots, policy=policy)
+    t = 0.0
+    for i, (prio, plen, max_new) in enumerate(specs):
+        t += 0.01 * (i % 3)
+        eng.submit(Request(rid=f"r{i}", prompt=[1] * plen,
+                           max_new_tokens=max_new, priority=prio,
+                           arrival=t))
+    done = eng.run(max_steps=50_000, on_exhausted="raise")
+    assert sorted(r.rid for r in done) == [f"r{i}" for i in
+                                           range(len(specs))]
+    for r, (prio, plen, max_new) in zip(sorted(done, key=lambda r: r.rid),
+                                        specs):
+        # fake logits never emit EOS: exactly max_new tokens, no dup/loss
+        assert len(r.output) == max_new, (r.rid, r.output)
+        assert len(r.token_times) == len(r.output)
+        assert (np.diff(r.token_times) > 0).all()
+    # ledger charges exactly the live decodes: every token beyond each
+    # request's prefill-produced first token is a decode_step_multi token
+    emitted = sum(len(r.output) for r in done)
+    assert fe.ledger.tokens_out == emitted - len(done)
+
+
+def test_ledger_counts_only_active_slots_under_autoscale():
+    """Slot-pool growth/shrink must never charge idle rows: tokens_out
+    advances by exactly the live decode count even while the pool is
+    resized mid-run."""
+    fe, eng = _sim_engine(n_slots=6, policy=AutoscalePolicy(
+        min_slots=1, service_time=0.05))
+    assert eng.slot_limit == 1 and eng._alloc == 1  # cold start: minimum
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(16):
+        t += float(rng.exponential(1 / 20.0))
+        eng.submit(Request(rid=f"r{i}", prompt=[1, 2, 3], max_new_tokens=5,
+                           arrival=t))
+    done = eng.run(max_steps=50_000, on_exhausted="raise")
+    assert len(done) == 16
+    assert eng._alloc > 1, "autoscale never grew the pool"
+    emitted = sum(len(r.output) for r in done)
+    assert fe.ledger.tokens_out == emitted - len(done)
+
+
+# ---------------------------------------------------------------------------
+# FIFOPolicy ≡ engine default (bit-identical outputs and timings)
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_policy_identical_to_default():
+    cfg, model, params = reduced_model("qwen3-0.6b")
+    prompts = [[1, 17, 23, 9], [1, 40, 11], [1, 7, 7, 7, 2, 30], [1, 300, 5]]
+
+    def run_engine(policy):
+        eng = ContinuousEngine(ModelBackend(model, params, max_seq=64),
+                               n_slots=2, max_seq=64, policy=policy)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=f"r{i}", prompt=p, max_new_tokens=5,
+                               arrival=float(i) * 1e-4))
+        return {r.rid: r for r in eng.run()}
+
+    a, b = run_engine(None), run_engine(FIFOPolicy())
+    assert set(a) == set(b)
+    for rid in a:
+        assert a[rid].output == b[rid].output
+        # wall clocks differ between runs; the *token sequence* and the
+        # reference match is the bitwise contract here
+        want = _reference_generation(model, params,
+                                     prompts[int(rid[1:])], 5)
+        assert a[rid].output == want[: len(a[rid].output)]
+
+
+def test_fifo_policy_identical_timings_on_sim_clock():
+    """On the simulated clock the FIFO policy must reproduce the default
+    engine's timings exactly, not just its tokens."""
+    def run_engine(policy):
+        fe, eng = _sim_engine(n_slots=2, policy=policy, seed=3)
+        rng = np.random.default_rng(7)
+        t = 0.0
+        for i in range(8):
+            t += float(rng.exponential(1 / 8.0))
+            eng.submit(Request(rid=f"r{i}", prompt=[1] * (3 + i % 4),
+                               max_new_tokens=4, arrival=t))
+        return {r.rid: r for r in eng.run(on_exhausted="raise")}
+
+    a, b = run_engine(None), run_engine("fifo")
+    for rid in a:
+        assert a[rid].output == b[rid].output
+        assert a[rid].token_times == b[rid].token_times
+        assert a[rid].ttft == b[rid].ttft and a[rid].latency == b[rid].latency
+
+
+# ---------------------------------------------------------------------------
+# Preemption equivalence: preempted ≡ unpreempted under greedy decoding
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("prefill_chunk", [None, 2])
+def test_preempted_output_matches_unpreempted(prefill_chunk):
+    """A low-priority decode evicted for a high-priority arrival and
+    re-admitted via (chunked) re-prefill of prompt + emitted tokens must
+    produce exactly its unpreempted greedy output."""
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    fe = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                       host_precision="fp32")
+    eng = ContinuousEngine(FiddlerBackend(fe, max_seq=64), n_slots=1,
+                           max_seq=64, prefill_chunk=prefill_chunk,
+                           policy=PriorityPolicy())
+    low = Request(rid="low", prompt=[1, 17, 23, 9], max_new_tokens=8,
+                  slo_class="batch", arrival=0.0)
+    # arrives (on the sim clock) mid-decode of `low`, forcing a slot steal
+    high = Request(rid="high", prompt=[1, 40, 11], max_new_tokens=4,
+                   slo_class="interactive", arrival=1e-9)
+    eng.submit(low)
+    eng.submit(high)
+    done = {r.rid: r for r in eng.run(on_exhausted="raise")}
+    assert done["low"].preemptions >= 1, "low was never preempted"
+    for rid, req in done.items():
+        want = _reference_generation(model, params, req.prompt,
+                                     req.max_new_tokens)
+        assert req.output == want[: len(req.output)], (rid, req.output, want)
+        assert len(req.output) >= 1
+    # the interactive request overtook the preempted batch request
+    assert done["high"].token_times[-1] <= done["low"].token_times[-1]
+
+
+def test_priority_improves_high_class_p95_ttft():
+    """Acceptance: identical Poisson traces, overloaded pool — the
+    priority policy must beat FIFO on interactive-class p95 TTFT."""
+    from benchmarks.serve_load import simulate_once
+
+    kw = dict(rate_hz=32.0, n_slots=2, n_requests=24, seed=0,
+              interactive_frac=0.25, prompt_len=32, max_new=12)
+    fifo = simulate_once("mixtral-8x7b", "fiddler", "env1", sched="fifo",
+                         **kw)
+    prio = simulate_once("mixtral-8x7b", "fiddler", "env1", sched="priority",
+                         **kw)
+    assert prio["p95_ttft_interactive"] < fifo["p95_ttft_interactive"]
+
+
+# ---------------------------------------------------------------------------
+# Engine guards (satellites): step budget, prompt length, mixed temperature
+# ---------------------------------------------------------------------------
+
+
+def test_run_budget_exhaustion_warns_and_raises():
+    fe, eng = _sim_engine(n_slots=1)
+    for i in range(3):
+        eng.submit(Request(rid=f"r{i}", prompt=[1, 2], max_new_tokens=6))
+    with pytest.warns(RuntimeWarning, match="max_steps"):
+        eng.run(max_steps=2)
+    fe2, eng2 = _sim_engine(n_slots=1)
+    for i in range(3):
+        eng2.submit(Request(rid=f"r{i}", prompt=[1, 2], max_new_tokens=6))
+    with pytest.raises(RuntimeError, match="max_steps"):
+        eng2.run(max_steps=2, on_exhausted="raise")
+    # and a sufficient budget completes silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        done = eng2.run(on_exhausted="warn")
+    assert len(done) == 3
+
+
+def test_prompt_longer_than_max_seq_rejected():
+    fe, eng = _sim_engine(max_seq=16, prefill_chunk=None)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(rid="big", prompt=[1] * 16, max_new_tokens=2))
+    cfg, model, params = reduced_model("qwen3-0.6b")
+    se = ServingEngine(model, mode="model", params=params, max_seq=16)
+    with pytest.raises(ValueError, match="max_seq"):
+        se.submit(Request(rid="big", prompt=[1] * 20, max_new_tokens=2))
+    # the group runner guards too (requests enqueued before a reconfigure)
+    se.queue.append(Request(rid="big", prompt=[1] * 16, max_new_tokens=2,
+                            arrival=0.0))
+    with pytest.raises(ValueError, match="decode budget"):
+        se.run()
+
+
+def test_mixed_temperature_group_samples_per_request():
+    """A greedy request's tokens must be unaffected by a batch neighbor's
+    temperature (old behavior applied group[0].temperature to everyone, so
+    a hot first request made the whole batch stochastic)."""
+    cfg, model, params = reduced_model("qwen3-0.6b")
+
+    def run_pair(hot_temp):
+        eng = ServingEngine(model, mode="model", params=params, max_batch=2,
+                            max_seq=64, seed=0)
+        # hot request first: under the old bug its temperature governed
+        # the greedy request too
+        eng.submit(Request(rid="hot", prompt=[1, 40, 11], max_new_tokens=6,
+                           temperature=hot_temp))
+        eng.submit(Request(rid="cold", prompt=[1, 17, 23, 9],
+                           max_new_tokens=6, temperature=0.0))
+        return {r.rid: r for r in eng.run()}
+
+    sampled, all_greedy = run_pair(5.0), run_pair(0.0)
+    assert sampled["cold"].output == all_greedy["cold"].output
+    assert 1 <= len(sampled["hot"].output) <= 6
+
+
+def test_static_engine_priority_groups_first():
+    """ServingEngine consumes the policy for group formation: interactive
+    requests batch ahead of earlier-submitted bulk work."""
+    cfg, model, params = reduced_model("qwen3-0.6b")
+    eng = ServingEngine(model, mode="model", params=params, max_batch=1,
+                        max_seq=64, policy="priority")
+    eng.submit(Request(rid="bulk", prompt=[1, 5, 9], max_new_tokens=3,
+                       slo_class="batch"))
+    eng.submit(Request(rid="int", prompt=[1, 6, 2], max_new_tokens=3,
+                       slo_class="interactive"))
+    done = eng.run()
+    assert [r.rid for r in done] == ["int", "bulk"]
+    for r in done:
+        want = _reference_generation(model, params, r.prompt, 3)
+        assert r.output == want[: len(r.output)]
+
+
+@pytest.mark.parametrize("backend_kind", ["model", "fiddler"])
+def test_resize_cache_preserves_inflight_kv(backend_kind):
+    """Growing the slot pool mid-decode must preserve every in-flight
+    slot's KV: tokens decoded after the resize equal the unresized
+    reference.  Model caches are layer-major (blocks stacked
+    (n_periods, B, ...)) — the resize must grow the *batch* axis."""
+    if backend_kind == "model":
+        cfg, model, params = reduced_model("qwen3-0.6b")
+        backend = ModelBackend(model, params, max_seq=64)
+    else:
+        cfg, model, params = reduced_model("mixtral-8x7b")
+        fe = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                           host_precision="fp32")
+        backend = FiddlerBackend(fe, max_seq=64)
+    prompts = [[1, 17, 23, 9], [1, 40, 11]]
+    refs = [_reference_generation(model, params, p, 5) for p in prompts]
+
+    cache = backend.make_cache(2)
+    state = []  # (pos, last_token, output)
+    for slot, p in enumerate(prompts):
+        logits, staging = backend.prefill(p)
+        cache = backend.write_slot(cache, staging, slot)
+        tok = int(np.argmax(logits))
+        state.append([len(p), tok, [tok]])
+
+    def decode_all(cache, n_slots, steps):
+        for _ in range(steps):
+            tokens = np.full((n_slots,), 0, np.int32)
+            pos = np.zeros((n_slots,), np.int32)
+            active = np.zeros((n_slots,), bool)
+            for i, (pp, tt, _out) in enumerate(state):
+                tokens[i], pos[i], active[i] = tt, pp, True
+            logits, cache = backend.decode_slots(cache, tokens, pos, active)
+            nxt = np.asarray(np.argmax(logits, -1))
+            for i, s in enumerate(state):
+                s[0] += 1
+                s[1] = int(nxt[i])
+                s[2].append(int(nxt[i]))
+        return cache
+
+    cache = decode_all(cache, 2, 2)      # two steps at 2 slots
+    cache = backend.resize_cache(cache, 4)   # grow mid-decode
+    cache = decode_all(cache, 4, 2)      # two more steps at 4 slots
+    for i, ref in enumerate(refs):
+        assert state[i][2] == ref, (i, state[i][2], ref)
+
+
+def test_autoscale_target_respects_bounds():
+    pol = AutoscalePolicy(min_slots=2, service_time=0.5, headroom=1.0)
+    slots = [_slot_view(i, rid=None) for i in range(8)]
+    # unknown rate: hold the current pool (but never below min)
+    assert pol.target_slots(_view(0.0, [], slots, slot_limit=1)) == 2
+    assert pol.target_slots(_view(0.0, [], slots, slot_limit=5, rate=0.0)) == 5
+    # Little's law, clamped to [min, max]
+    assert pol.target_slots(_view(0.0, [], slots, rate=0.1)) == 2
+    assert pol.target_slots(_view(0.0, [], slots, rate=8.0)) == 4
+    assert pol.target_slots(_view(0.0, [], slots, rate=1000.0)) == 8

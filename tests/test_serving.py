@@ -1,8 +1,6 @@
 """Serving engine + beam search."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from conftest import reduced_model
 from repro.core import FiddlerEngine

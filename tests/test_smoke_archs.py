@@ -8,7 +8,6 @@ exercised only via the dry-run (ShapeDtypeStructs, no allocation).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import reduced_model

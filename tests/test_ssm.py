@@ -3,9 +3,7 @@ invariance, cache continuation."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import kv_cache as kvc

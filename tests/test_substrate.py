@@ -13,7 +13,7 @@ from repro.data.pipeline import (
     sample_prompts,
     synthetic_conversations,
 )
-from repro.data.tokenizer import BOS_ID, N_RESERVED, ByteTokenizer
+from repro.data.tokenizer import BOS_ID, ByteTokenizer
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
 

@@ -18,7 +18,7 @@ from conftest import reduced_model
 from repro.configs import get_config
 from repro.core import FiddlerEngine
 from repro.data.pipeline import make_batch_iter
-from repro.models import Model, lm_loss
+from repro.models import Model
 from repro.training.checkpoint import load_checkpoint, save_checkpoint
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import train
