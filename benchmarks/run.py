@@ -31,6 +31,7 @@ def main() -> None:
         roofline,
         serve_load,
         sparsity,
+        workload_shift,
     )
 
     print("name,us_per_call,derived")
@@ -44,6 +45,7 @@ def main() -> None:
         ("fig9_dataset_sensitivity", lambda: dataset_sensitivity.run(fast=fast)),
         ("appE_portability", lambda: portability.run(fast=fast)),
         ("serve_load_poisson", lambda: serve_load.run(fast=fast)),
+        ("workload_shift", lambda: workload_shift.run(fast=fast)),
         ("beyond_paper_extensions", lambda: extensions.run(fast=fast)),
         ("roofline", roofline.report),
     ]

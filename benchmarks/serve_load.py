@@ -145,43 +145,51 @@ def simulate_once(model_name: str, policy: str, env: str, *, rate_hz: float,
 
 
 def run(model: str = "mixtral-8x7b", env: str = "env1",
-        fast: bool = False) -> Dict[str, Dict[str, float]]:
+        fast: bool = False, smoke: bool = False
+        ) -> Dict[str, Dict[str, float]]:
+    """``smoke=True`` is CI's bench-smoke lane: pure simulation only (no
+    jitted reduced-numerics runs), a handful of requests — seconds, not
+    minutes — while still writing the full self-describing JSON record."""
     results: Dict[str, Dict[str, float]] = {}
 
     # -- reduced real numerics: orchestrator-policy axis (sched=fifo) --------
     rates = [2.0, 16.0] if fast else [2.0, 8.0, 32.0]
     slot_counts = [2] if fast else [2, 4]
     n_requests = 6 if fast else 16
-    for policy in POLICIES:
-        for rate in rates:
-            for n_slots in slot_counts:
-                r = serve_once(model, policy, env, rate_hz=rate,
-                               n_slots=n_slots, n_requests=n_requests)
-                key = f"serve_load/{env}/{policy}/rate{rate:g}_slots{n_slots}"
-                emit(key, r["mean_itl"] * 1e6,
-                     f"tok_per_s={r['throughput_tok_per_s']:.2f} "
-                     f"ttft={r['mean_ttft']:.4f}s "
-                     f"hit_rate={r['hit_rate']:.2f}")
-                results[key] = r
+    if not smoke:
+        for policy in POLICIES:
+            for rate in rates:
+                for n_slots in slot_counts:
+                    r = serve_once(model, policy, env, rate_hz=rate,
+                                   n_slots=n_slots, n_requests=n_requests)
+                    key = (f"serve_load/{env}/{policy}/"
+                           f"rate{rate:g}_slots{n_slots}")
+                    emit(key, r["mean_itl"] * 1e6,
+                         f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                         f"ttft={r['mean_ttft']:.4f}s "
+                         f"hit_rate={r['hit_rate']:.2f}")
+                    results[key] = r
 
-    # -- scheduler-policy axis, reduced real numerics ------------------------
-    sched_rate = 16.0 if fast else 32.0
-    for sched in (("fifo", "priority") if fast else SCHED_POLICIES):
-        r = serve_once(model, "fiddler", env, rate_hz=sched_rate, n_slots=2,
-                       n_requests=n_requests, sched=sched,
-                       interactive_frac=0.25)
-        key = f"serve_load/{env}/fiddler/sched_{sched}_rate{sched_rate:g}"
-        emit(key, r["mean_itl"] * 1e6,
-             f"tok_per_s={r['throughput_tok_per_s']:.2f} "
-             f"p95_ttft={r['p95_ttft']:.4f}s "
-             f"preempt={r['preemptions']:.0f}")
-        results[key] = r
+        # -- scheduler-policy axis, reduced real numerics --------------------
+        sched_rate = 16.0 if fast else 32.0
+        for sched in (("fifo", "priority") if fast else SCHED_POLICIES):
+            r = serve_once(model, "fiddler", env, rate_hz=sched_rate,
+                           n_slots=2, n_requests=n_requests, sched=sched,
+                           interactive_frac=0.25)
+            key = f"serve_load/{env}/fiddler/sched_{sched}_rate{sched_rate:g}"
+            emit(key, r["mean_itl"] * 1e6,
+                 f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                 f"p95_ttft={r['p95_ttft']:.4f}s "
+                 f"preempt={r['preemptions']:.0f}")
+            results[key] = r
 
     # -- paper-scale pure simulation: full-size Mixtral, heavy traffic -------
-    sim_rates = [8.0, 32.0] if fast else [8.0, 32.0, 64.0]
-    sim_requests = 16 if fast else 48
+    sim_rates = [16.0] if smoke else ([8.0, 32.0] if fast
+                                      else [8.0, 32.0, 64.0])
+    sim_requests = 4 if smoke else (16 if fast else 48)
     sim_slots = 4
-    for sched in SCHED_POLICIES:
+    sim_scheds = ("fifo",) if smoke else SCHED_POLICIES
+    for sched in sim_scheds:
         for rate in sim_rates:
             r = simulate_once(model, "fiddler", env, rate_hz=rate,
                               n_slots=sim_slots, n_requests=sim_requests,
@@ -195,14 +203,16 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
                  f"preempt={r['preemptions']:.0f}")
             results[key] = r
 
-    # self-describing record: a fast/dev run must not masquerade as the
-    # full sweep when it overwrites the file
+    # self-describing record: a fast/dev/smoke run must not masquerade as
+    # the full sweep when it overwrites the file
     record = {
         "_meta": {
-            "mode": "fast" if fast else "full",
+            "mode": "smoke" if smoke else ("fast" if fast else "full"),
             "model": model, "env": env,
-            "reduced_rates": rates, "reduced_slots": slot_counts,
-            "reduced_requests": n_requests,
+            # null in smoke mode: the reduced-numerics sweeps did not run
+            "reduced_rates": None if smoke else rates,
+            "reduced_slots": None if smoke else slot_counts,
+            "reduced_requests": None if smoke else n_requests,
             "sim_rates": sim_rates, "sim_requests": sim_requests,
             "sim_slots": sim_slots,
         },
@@ -215,4 +225,4 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
 if __name__ == "__main__":
     import sys
 
-    run(fast="--full" not in sys.argv)
+    run(fast="--full" not in sys.argv, smoke="--smoke" in sys.argv)

@@ -1,0 +1,184 @@
+"""Workload-shift benchmark: dynamic CPU↔GPU rebalancing vs frozen
+offline placement under a mid-trace routing-distribution shift.
+
+The paper profiles expert popularity offline and freezes the placement
+(§3.4); App. D measures what a calibration/workload mismatch costs.  This
+benchmark replays that failure mode *live*: a Poisson request stream runs
+through ``ContinuousEngine`` over a ``SimulatedBackend`` (full-size
+configs, paper-env hardware, simulated-seconds ledger), and mid-trace the
+routing distribution is switched to a per-layer permutation of the
+calibration popularity (the code→chat mismatch regime: same skew, different
+experts).  Placement was fit to the calibration profile, so post-shift the
+static engine's fast-tier hit rate collapses; with ``--rebalance`` the
+``Rebalancer`` (core/rebalance.py) tracks the live EWMA profile and
+migrates at most ``k`` experts per interval back toward the optimum —
+paying real transfer time into the ledger (no free migrations).
+
+Reported per phase: fast-tier hit rate, simulated per-token latency, and
+the migration overhead (count / bytes / seconds).  Results land in
+``BENCH_workload_shift.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import ENVS, emit
+from benchmarks.serve_load import poisson_requests
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.core.placement import hit_rate
+from repro.core.popularity import ExpertProfile, synthetic_profile
+from repro.serving.backend import SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+MAX_SEQ = 256
+PREFILL_CHUNK = 16
+# skewed popularity (low Dirichlet concentration): placement quality
+# matters, so a shift has something to break — App. D's regime, not the
+# near-uniform ShareGPT one
+CONCENTRATION = 0.5
+RESULTS_JSON = Path(__file__).resolve().parents[1] / "BENCH_workload_shift.json"
+
+
+def shifted_profile(calib: ExpertProfile, seed: int = 1) -> ExpertProfile:
+    """The post-shift routing distribution: each layer's popularity vector
+    permuted — same skew, different popular experts (the worst case for a
+    frozen placement at equal entropy)."""
+    rng = np.random.default_rng(seed)
+    L, E = calib.counts.shape
+    return ExpertProfile(np.stack(
+        [calib.counts[l][rng.permutation(E)] for l in range(L)]))
+
+
+def _phase(serving: ContinuousEngine, led, reqs: List[Request],
+           max_steps: int) -> Dict[str, float]:
+    """Run one traffic phase and report ledger deltas for exactly it."""
+    pre = (led.fast_hits, led.streams, led.slow_runs, led.sim_time,
+           led.tokens_out, led.migrations, led.migration_time,
+           led.migration_bytes)
+    for r in reqs:
+        serving.submit(r)
+    done = serving.run(max_steps=max_steps, on_exhausted="raise")
+    assert len(done) >= len(reqs), (len(done), len(reqs))
+    d_hits = led.fast_hits - pre[0]
+    d_streams = led.streams - pre[1]
+    d_slow = led.slow_runs - pre[2]
+    d_time = led.sim_time - pre[3]
+    d_tokens = led.tokens_out - pre[4]
+    return {
+        "hit_rate": d_hits / max(d_hits + d_streams + d_slow, 1),
+        "latency_per_token": d_time / max(d_tokens, 1),
+        "tokens": float(d_tokens),
+        "sim_seconds": d_time,
+        "migrations": float(led.migrations - pre[5]),
+        "migration_time": led.migration_time - pre[6],
+        "migration_bytes": led.migration_bytes - pre[7],
+    }
+
+
+def shift_once(model_name: str, env: str, *, dynamic: bool,
+               rate_hz: float = 16.0, n_slots: int = 4,
+               n_requests: int = 12, shift_requests: int = 24,
+               prompt_len: int = 32, max_new: int = 16,
+               rebalance_interval: int = 4, rebalance_k: int = 8,
+               seed: int = 0, max_steps: int = 100_000) -> Dict[str, Dict]:
+    """One trace: calibration-matched traffic, then the routing shift.
+
+    Placement is fit to the calibration profile; phase 2 draws routing
+    from the shifted profile.  ``dynamic=True`` attaches a Rebalancer."""
+    cfg = get_config(model_name)
+    L, E = cfg.n_layers, cfg.moe.n_experts
+    calib = synthetic_profile(L, E, seed=seed, concentration=CONCENTRATION)
+    shifted = shifted_profile(calib, seed=seed + 1)
+    eng = FiddlerEngine(
+        cfg, policy="fiddler", hw=ENVS[env], profile=calib,
+        expert_budget=L * E // 4, seed=seed,
+        rebalance_interval=rebalance_interval if dynamic else None,
+        rebalance_k=rebalance_k)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=MAX_SEQ),
+                               n_slots=n_slots, max_seq=MAX_SEQ,
+                               prefill_chunk=PREFILL_CHUNK)
+    led = eng.ledger
+
+    def stream(n, phase_seed, t0):
+        reqs = poisson_requests(rate_hz, n, prompt_len=prompt_len,
+                                max_new=max_new, seed=phase_seed)
+        for r in reqs:
+            r.arrival += t0
+        return reqs
+
+    phase1 = _phase(serving, led, stream(n_requests, seed + 10, 0.0),
+                    max_steps)
+    # --- the mid-trace routing shift: traffic keeps flowing, the router's
+    # distribution is now the permuted one; placement still fits calib ---
+    eng.profile = shifted
+    phase2 = _phase(serving, led,
+                    stream(shift_requests, seed + 11, led.sim_time),
+                    max_steps)
+    return {
+        "phase1": phase1,
+        "phase2": phase2,
+        "placement_hit_rate_calib": hit_rate(calib, eng.placement),
+        "placement_hit_rate_shifted": hit_rate(shifted, eng.placement),
+    }
+
+
+def run(model: str = "mixtral-8x7b", fast: bool = False,
+        smoke: bool = False) -> Dict[str, Dict]:
+    """Sweep static vs dynamic placement across paper envs.  ``smoke``
+    shrinks everything to a few requests (CI's bench-smoke lane)."""
+    if smoke:
+        envs, sizes = ["env1"], dict(n_requests=3, shift_requests=6,
+                                     max_new=8, prompt_len=16)
+    elif fast:
+        envs, sizes = ["env1"], dict(n_requests=8, shift_requests=16)
+    else:
+        envs, sizes = ["env1", "env2"], dict(n_requests=12,
+                                             shift_requests=32)
+    results: Dict[str, Dict] = {}
+    for env in envs:
+        for mode in ("static", "dynamic"):
+            r = shift_once(model, env, dynamic=(mode == "dynamic"), **sizes)
+            key = f"workload_shift/{env}/{mode}"
+            p2 = r["phase2"]
+            emit(key, p2["latency_per_token"] * 1e6,
+                 f"post_shift_hit_rate={p2['hit_rate']:.3f} "
+                 f"lat_per_tok={p2['latency_per_token'] * 1e3:.2f}ms "
+                 f"migrations={p2['migrations']:.0f} "
+                 f"mig_time={p2['migration_time'] * 1e3:.1f}ms")
+            results[key] = r
+    record = {
+        "_meta": {
+            "mode": "smoke" if smoke else ("fast" if fast else "full"),
+            "model": model, "envs": envs, "concentration": CONCENTRATION,
+            **sizes,
+        },
+        "results": results,
+        "summary": {
+            env: {
+                "static_post_shift_hit_rate":
+                    results[f"workload_shift/{env}/static"]["phase2"]["hit_rate"],
+                "dynamic_post_shift_hit_rate":
+                    results[f"workload_shift/{env}/dynamic"]["phase2"]["hit_rate"],
+                "static_post_shift_latency_per_token":
+                    results[f"workload_shift/{env}/static"]["phase2"]["latency_per_token"],
+                "dynamic_post_shift_latency_per_token":
+                    results[f"workload_shift/{env}/dynamic"]["phase2"]["latency_per_token"],
+                "dynamic_migration_time":
+                    results[f"workload_shift/{env}/dynamic"]["phase2"]["migration_time"],
+            } for env in envs
+        },
+    }
+    RESULTS_JSON.write_text(json.dumps(record, indent=2, sort_keys=True))
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(fast="--full" not in sys.argv, smoke="--smoke" in sys.argv)

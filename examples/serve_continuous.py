@@ -13,8 +13,18 @@ batch-class decode if no slot is free — and the preempted request still
 produces exactly its unpreempted greedy output (it is re-admitted via
 chunked prefill of its prompt + already-emitted tokens).
 
-  PYTHONPATH=src python examples/serve_continuous.py
+The engine also runs with dynamic placement rebalancing enabled
+(core/rebalance.py): an online EWMA profile tracks the live routing and
+a bounded number of experts migrate between tiers when it drifts —
+migration transfer time shows up in the ledger, numerics never change.
+
+  PYTHONPATH=src python examples/serve_continuous.py [--smoke]
+
+``--smoke`` (CI's examples-smoke lane) shrinks the run to its smallest
+configuration: fewer requests, shorter generations, seconds on CPU.
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,7 +38,7 @@ from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request
 
 
-def main():
+def main(smoke: bool = False):
     full = get_config("mixtral-8x7b")
     cfg = full.reduced()  # real numerics at reduced scale on CPU
     model = Model(cfg, param_dtype=jnp.float32)
@@ -37,8 +47,10 @@ def main():
 
     fe = FiddlerEngine(cfg, params, policy="fiddler", timing_cfg=full,
                        hw=HardwareSpec.paper_env1(), host_precision="fp32",
-                       expert_budget=cfg.n_layers * cfg.moe.n_experts // 4)
-    eng = ContinuousEngine(FiddlerBackend(fe, max_seq=96), n_slots=3,
+                       expert_budget=cfg.n_layers * cfg.moe.n_experts // 4,
+                       rebalance_interval=8, rebalance_k=2)
+    eng = ContinuousEngine(FiddlerBackend(fe, max_seq=96),
+                           n_slots=2 if smoke else 3,
                            max_seq=96, prefill_chunk=8, policy="priority")
 
     rng = np.random.default_rng(0)
@@ -46,6 +58,8 @@ def main():
              "orchestrate cpu and gpu", "mixture of experts serving",
              "continuous batching wins", "a longer prompt that needs "
              "several admission chunks before its first token"]
+    if smoke:
+        texts = texts[:2] + texts[-1:]
     t = 0.0
     for i, text in enumerate(texts):
         t += rng.exponential(1 / 8.0)  # 8 req/s Poisson load
@@ -53,9 +67,12 @@ def main():
         # the queued batch work (and may steal a busy decode slot)
         slo = "interactive" if i == len(texts) - 1 else "batch"
         eng.submit(Request(rid=f"req{i}", prompt=tok.encode(text)[:64],
-                           max_new_tokens=12, arrival=t, slo_class=slo))
+                           max_new_tokens=4 if smoke else 12, arrival=t,
+                           slo_class=slo))
 
-    for r in sorted(eng.run(), key=lambda r: r.rid):
+    done = eng.run()
+    assert len(done) == len(texts), (len(done), len(texts))
+    for r in sorted(done, key=lambda r: r.rid):
         print(f"{r.rid}[{r.slo_class}]: ttft={r.ttft * 1e3:7.2f}ms(sim) "
               f"itl={(r.itl or 0) * 1e3:6.2f}ms(sim) "
               f"tokens={len(r.output)} preempt={r.preemptions} "
@@ -63,8 +80,9 @@ def main():
     led = fe.ledger
     print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "
           f"streams={led.streams} slow={led.slow_runs} "
-          f"tokens_out={led.tokens_out}")
+          f"tokens_out={led.tokens_out} migrations={led.migrations} "
+          f"migration_time={led.migration_time * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

@@ -1,15 +1,4 @@
 """Config registry. Importing this package registers all architectures."""
-from repro.configs.base import (  # noqa: F401
-    INPUT_SHAPES,
-    InputShape,
-    ModelConfig,
-    MoEConfig,
-    SSMConfig,
-    applicable_shapes,
-    get_config,
-    list_archs,
-)
-
 # Register all architectures (import side effects).
 from repro.configs import (  # noqa: F401
     gemma2_9b,
@@ -24,6 +13,16 @@ from repro.configs import (  # noqa: F401
     recurrentgemma_2b,
     stablelm_3b,
     whisper_large_v3,
+)
+from repro.configs.base import (  # noqa: F401
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    applicable_shapes,
+    get_config,
+    list_archs,
 )
 
 ASSIGNED_ARCHS = [

@@ -12,4 +12,9 @@ from repro.core.placement import (  # noqa: F401
     place_worst,
 )
 from repro.core.planner import Decision, LayerPlan, plan_layer  # noqa: F401
-from repro.core.popularity import ExpertProfile, synthetic_profile  # noqa: F401
+from repro.core.popularity import (  # noqa: F401
+    ExpertProfile,
+    OnlineProfile,
+    synthetic_profile,
+)
+from repro.core.rebalance import MigrationPlan, Rebalancer  # noqa: F401

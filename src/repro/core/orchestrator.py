@@ -44,12 +44,14 @@ from repro.core.cost_model import (
     expert_weight_bytes,
 )
 from repro.core.placement import (
+    Placement,
     fast_tier_expert_budget,
     place_by_popularity,
     place_static_split,
 )
 from repro.core.planner import Decision, LayerPlan, plan_layer
-from repro.core.popularity import ExpertProfile, synthetic_profile
+from repro.core.popularity import ExpertProfile, OnlineProfile, synthetic_profile
+from repro.core.rebalance import MigrationPlan, Rebalancer, apply_plan
 from repro.kernels.host_expert import HostExpert
 from repro.kernels.ops import expert_mlp_op
 from repro.models.model import Model
@@ -72,6 +74,12 @@ class Ledger:
     stream_bytes: float = 0.0
     tokens_out: int = 0
     ttft: Optional[float] = None
+    # dynamic rebalancing (core/rebalance.py): promotions stream over the
+    # host link and their transfer time is charged to sim_time — these
+    # fields break the overhead out so benchmarks can report it honestly
+    migrations: int = 0             # experts promoted slow → fast
+    migration_bytes: float = 0.0
+    migration_time: float = 0.0     # seconds of sim_time spent migrating
     layer_log: List[Dict[str, float]] = field(default_factory=list)
 
     def tokens_per_second(self) -> float:
@@ -134,6 +142,7 @@ class FiddlerEngine:
         profile: Optional[ExpertProfile] = None,
         lat: Optional[LatencyModel] = None,
         expert_budget: Optional[int] = None,
+        placement: Optional["Placement"] = None,
         timing_cfg: Optional[ModelConfig] = None,
         seed: int = 0,
         overlap: bool = True,
@@ -142,11 +151,21 @@ class FiddlerEngine:
         lru_cache_experts: int = 0,
         adaptive: bool = False,
         quantize_slow: bool = False,
+        rebalance_interval: Optional[int] = None,
+        rebalance_k: int = 4,
+        rebalancer: Optional["Rebalancer"] = None,
     ):
         """``params=None`` → pure-simulation mode (routing drawn from the
         profile; only the ledger advances).  ``timing_cfg`` lets the real
         numerics run a reduced config while latency constants are derived
-        from the full-size config (benchmarks do this)."""
+        from the full-size config (benchmarks do this).
+
+        ``rebalance_interval`` enables dynamic placement rebalancing
+        (core/rebalance.py): an ``OnlineProfile`` tracks live routing and
+        every ``interval`` serving ticks at most ``rebalance_k`` experts
+        are swapped between tiers (the serving layer drives the ticks via
+        :meth:`maybe_rebalance`).  A prebuilt ``rebalancer`` overrides
+        both knobs."""
         assert policy in POLICIES, policy
         assert cfg.moe is not None, "Fiddler orchestrates MoE models"
         self.cfg = cfg
@@ -164,7 +183,19 @@ class FiddlerEngine:
                   else fast_tier_expert_budget(tcfg, hw))
         budget = min(budget, L * E)
         self.expert_budget = budget
-        if policy == "static_split":
+        if placement is not None:
+            # explicit placement (tests / replaying a rebalanced state);
+            # budget still bounds later rebalancing, so the placement must
+            # fit it — Rebalancer plans swap (never shed) residents
+            assert placement.on_fast.shape == (L, E), placement.on_fast.shape
+            assert placement.n_resident <= budget, (
+                f"explicit placement holds {placement.n_resident} experts "
+                f"but the fast-tier budget is {budget}")
+            assert policy != "static_split", (
+                "static_split derives its placement from the budget")
+            self.placement = placement
+            self.n_fast_layers = L
+        elif policy == "static_split":
             n_fast_layers = min(L, budget // E)
             self.placement = place_static_split(L, E, n_fast_layers)
             self.n_fast_layers = n_fast_layers
@@ -192,6 +223,23 @@ class FiddlerEngine:
         self.adaptive = (AdaptivePlacement(budget, refresh_every=16 * L)
                          if adaptive else None)
 
+        # --- dynamic rebalancing (core/rebalance.py) -------------------------
+        if rebalancer is None and rebalance_interval is not None:
+            rebalancer = Rebalancer(
+                profile=OnlineProfile(L, E, prior=self.profile),
+                budget=budget,
+                expert_bytes=expert_weight_bytes(self.tcfg),
+                transfer_lat=self.lat.transfer_lat(),
+                interval=rebalance_interval, k=rebalance_k)
+        if rebalancer is not None:
+            assert policy != "static_split", (
+                "dynamic rebalancing swaps individual experts; the "
+                "static_split baseline places whole layers")
+            assert self.adaptive is None, (
+                "rebalancer supersedes the AdaptivePlacement extension — "
+                "enable one or the other")
+        self.rebalancer = rebalancer
+
         # --- real-execution pools -------------------------------------------
         self._lru_pool: Dict[Any, Any] = {}
         self.model: Optional[Model] = None
@@ -202,6 +250,23 @@ class FiddlerEngine:
             self._split_params(params)
 
     # -- initialization (paper Fig. 2a) ---------------------------------------
+    def _expert_weights(self, li: int, e: int) -> Tuple[jnp.ndarray, ...]:
+        """Expert ``e`` of layer ``li``'s original fp32 weight triple —
+        the single source both tiers' representations are built from (so
+        migrating an expert can never compound tier rounding)."""
+        moe_p = self.layer_params[li]["moe"]
+        return (moe_p["w_gate"][e], moe_p["w_up"][e], moe_p["w_down"][e])
+
+    def _make_slow_expert(self, li: int, e: int):
+        """The slow-tier representation of one expert (bf16-emulated /
+        int8-quantized / fp32 per engine settings)."""
+        w = self._expert_weights(li, e)
+        if self.quantize_slow:
+            from repro.core.expert_cache import QuantizedHostExpert
+            return QuantizedHostExpert(*(np.asarray(m) for m in w))
+        return HostExpert(*(np.asarray(m) for m in w),
+                          precision=self.host_precision)
+
     def _split_params(self, params) -> None:
         blocks = params["blocks"][0]
         L = self.cfg.n_layers
@@ -211,18 +276,12 @@ class FiddlerEngine:
         self.fast_pool: List[Dict[int, Tuple[jnp.ndarray, ...]]] = []
         self.slow_pool: List[Dict[int, HostExpert]] = []
         for li in range(L):
-            moe_p = self.layer_params[li]["moe"]
             fast, slow = {}, {}
             for e in range(self.cfg.moe.n_experts):
-                w = (moe_p["w_gate"][e], moe_p["w_up"][e], moe_p["w_down"][e])
                 if self.placement.on_fast[li, e]:
-                    fast[e] = w  # stays device-resident
-                elif self.quantize_slow:
-                    from repro.core.expert_cache import QuantizedHostExpert
-                    slow[e] = QuantizedHostExpert(*(np.asarray(m) for m in w))
+                    fast[e] = self._expert_weights(li, e)  # device-resident
                 else:
-                    slow[e] = HostExpert(*(np.asarray(m) for m in w),
-                                         precision=self.host_precision)
+                    slow[e] = self._make_slow_expert(li, e)
             self.fast_pool.append(fast)
             self.slow_pool.append(slow)
 
@@ -256,6 +315,10 @@ class FiddlerEngine:
                 self.ledger.stream_bytes += swapped * expert_weight_bytes(self.tcfg)
 
     def _decide(self, li: int, counts: np.ndarray) -> LayerPlan:
+        if self.rebalancer is not None:
+            # every routing decision — real (router output) or simulated
+            # (profile draw) — feeds the live popularity estimate
+            self.rebalancer.observe(li, counts)
         on_fast = self._effective_on_fast(li)
         if self.policy == "fiddler":
             plan = plan_layer(counts, on_fast, self.lat)
@@ -293,6 +356,46 @@ class FiddlerEngine:
         self.ledger.slow_runs += int((plan.decisions == int(Decision.SLOW)).sum())
         self.ledger.layer_log.append(
             {"layer": li, "nonexpert": t_nonexp, "moe": t_moe})
+
+    # -- dynamic rebalancing (core/rebalance.py) --------------------------------
+    def maybe_rebalance(self) -> Optional[MigrationPlan]:
+        """One rebalancer tick — the serving layer calls this between
+        decode steps.  When the interval expires and the live profile has
+        drifted, applies the bounded migration plan and returns it."""
+        if self.rebalancer is None:
+            return None
+        plan = self.rebalancer.tick(self.placement)
+        if plan is not None:
+            self.apply_migrations(plan)
+        return plan
+
+    def apply_migrations(self, plan: MigrationPlan) -> None:
+        """Apply a migration plan incrementally: promotions move expert
+        weights slow→fast over a ``device_put`` (the FAST_STREAM link,
+        paper Fig. 3b) and are charged to the simulated-seconds ledger at
+        ``transfer_lat()`` each (no free migrations); demotions drop
+        fast-tier residency (freeing HBM costs nothing).  Each tier's
+        representation is rebuilt from the original fp32 params, so a
+        migrated expert is indistinguishable from one placed on that tier
+        at init — placement changes never change numerics (bit-identical
+        with ``host_precision="fp32"``; with lossy slow-tier storage the
+        usual per-tier rounding applies, never compounded by cycles)."""
+        if self.model is not None:
+            for li, e in plan.demotes:
+                self.fast_pool[li].pop(e)
+                self.slow_pool[li][e] = self._make_slow_expert(li, e)
+            for li, e in plan.promotes:
+                self.slow_pool[li].pop(e)
+                self.fast_pool[li][e] = jax.device_put(
+                    self._expert_weights(li, e))
+        self.placement = apply_plan(self.placement, plan)
+        n = plan.n_swaps
+        cost = n * self.lat.transfer_lat()
+        bytes_moved = n * expert_weight_bytes(self.tcfg)
+        self.ledger.sim_time += cost
+        self.ledger.migrations += n
+        self.ledger.migration_time += cost
+        self.ledger.migration_bytes += bytes_moved
 
     # -- simulated routing ------------------------------------------------------
     def _sample_counts(self, li: int, n_tokens: int) -> np.ndarray:

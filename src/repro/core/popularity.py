@@ -4,11 +4,18 @@ Fiddler profiles expert routing frequencies offline on calibration data and
 places the most popular experts on the fast tier.  The profile is a
 (n_layers, n_experts) count matrix; Appendix C normalises by the most
 popular expert and reports hit rates for best/worst/random placements.
+
+:class:`OnlineProfile` is the live counterpart: an EWMA of the routing
+distribution actually observed during serving, fed per MoE layer from the
+orchestrator's real (or simulated) routing decisions.  It is what the
+dynamic rebalancer (core/rebalance.py) re-places against when the live
+workload drifts away from the offline calibration set (paper App. D's
+distribution-shift failure mode).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -57,6 +64,69 @@ class ExpertProfile:
     def load(path: str) -> "ExpertProfile":
         with np.load(path) as z:
             return ExpertProfile(z["counts"].astype(np.float64))
+
+
+class OnlineProfile:
+    """EWMA of the live per-layer routing distribution.
+
+    Each :meth:`observe` call folds one layer's per-expert token counts
+    into that layer's running distribution estimate:
+
+        ema[l] = decay * ema[l] + (1 - decay) * counts / counts.sum()
+
+    Observations are normalised to a probability row first, so the
+    estimate is invariant to batch size (a 1-token decode step and a
+    64-token prefill chunk carry equal weight per observation).  The
+    update is O(n_experts) — cheap enough to run on every layer of every
+    serving step.
+
+    ``prior`` warm-starts the estimate from an offline calibration
+    profile (paper §3.4) so early rebalance decisions are anchored until
+    live evidence accumulates; ``decay`` sets the adaptation horizon
+    (effective window ≈ 1/(1-decay) observations per layer).
+    """
+
+    def __init__(self, n_layers: int, n_experts: int, *,
+                 decay: float = 0.95,
+                 prior: Optional[ExpertProfile] = None):
+        assert 0.0 < decay < 1.0, decay
+        self.decay = decay
+        self.updates = 0
+        if prior is not None:
+            assert prior.counts.shape == (n_layers, n_experts), (
+                prior.counts.shape, (n_layers, n_experts))
+            self._ema = prior.probabilities().astype(np.float64)
+        else:
+            # uninformative prior: uniform routing
+            self._ema = np.full((n_layers, n_experts), 1.0 / n_experts)
+
+    @property
+    def n_layers(self) -> int:
+        return self._ema.shape[0]
+
+    @property
+    def n_experts(self) -> int:
+        return self._ema.shape[1]
+
+    def observe(self, layer: int, counts: np.ndarray) -> None:
+        """Fold one layer's observed per-expert token counts in."""
+        counts = np.asarray(counts, np.float64)
+        tot = counts.sum()
+        if tot <= 0:
+            return
+        self._ema[layer] = (self.decay * self._ema[layer]
+                            + (1.0 - self.decay) * counts / tot)
+        self.updates += 1
+
+    def snapshot(self) -> ExpertProfile:
+        """The live estimate as an :class:`ExpertProfile` (rows are kept
+        proportional to routing probabilities, which is all the placement
+        and hit-rate machinery consumes)."""
+        return ExpertProfile(self._ema.copy())
+
+    def probabilities(self) -> np.ndarray:
+        tot = self._ema.sum(axis=1, keepdims=True)
+        return self._ema / np.maximum(tot, 1e-12)
 
 
 def profile_from_traces(n_layers: int, n_experts: int,

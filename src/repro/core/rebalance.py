@@ -1,0 +1,156 @@
+"""Dynamic CPU↔GPU expert rebalancing against the live routing profile.
+
+Fiddler places experts once, from an offline popularity profile, and
+freezes the placement (paper §3.4 / App. C: "popularity is almost
+universal across domains").  App. D shows where that assumption breaks —
+a routing-distribution shift between the calibration set and the live
+workload strands popular experts on the slow tier.  This module makes
+placement a living part of the serving loop:
+
+* an :class:`repro.core.popularity.OnlineProfile` tracks the routing
+  distribution the orchestrator actually observes (EWMA per layer, fed
+  from every forward/serving step);
+* a :class:`Rebalancer` periodically re-runs the paper's
+  popularity-greedy placement (§3.1) against the live profile and emits a
+  *bounded* :class:`MigrationPlan` — at most ``k`` expert swaps per
+  interval, chosen by expected fast-tier hit-rate gain per transferred
+  byte from the cost model (§3.3) — instead of a full re-place;
+* the engine applies the plan incrementally: promotions ride the
+  existing FAST_STREAM ``device_put`` path (paper Fig. 3b) and are
+  charged to the simulated-seconds ledger at ``transfer_lat()`` each;
+  demotions just drop fast-tier residency (freeing HBM costs nothing).
+
+The swap budget ``k`` bounds the per-interval transfer burst so
+rebalancing never stalls serving; the hit-rate-gain threshold keeps the
+placement stable when the live distribution matches the calibration one
+(no churn in the steady state).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.placement import Placement, place_by_popularity
+from repro.core.popularity import OnlineProfile
+
+
+@dataclass(frozen=True)
+class MigrationPlan:
+    """A bounded set of expert swaps: ``promotes[i]`` moves slow→fast
+    (streamed over the host link), ``demotes[i]`` drops fast-tier
+    residency.  ``est_gain`` is the expected fast-tier hit-rate gain
+    (mean over layers) under the live profile; ``transfer_bytes`` /
+    ``est_transfer_s`` are the promotion cost the ledger must be charged
+    (demotions are free)."""
+
+    promotes: Tuple[Tuple[int, int], ...]   # (layer, expert) slow → fast
+    demotes: Tuple[Tuple[int, int], ...]    # (layer, expert) fast → slow
+    est_gain: float
+    transfer_bytes: int
+    est_transfer_s: float
+
+    @property
+    def n_swaps(self) -> int:
+        return len(self.promotes)
+
+    @property
+    def gain_per_byte(self) -> float:
+        return self.est_gain / self.transfer_bytes if self.transfer_bytes \
+            else 0.0
+
+
+@dataclass
+class Rebalancer:
+    """Periodic bounded re-placement against an :class:`OnlineProfile`.
+
+    ``tick()`` is called once per serving step (the engines call it
+    between decode steps); every ``interval`` ticks it diffs the current
+    placement against the popularity-greedy target for the live profile
+    and returns a plan of at most ``k`` swaps — the top candidates by
+    hit-rate gain per transferred byte (every expert transfers
+    ``expert_bytes``, so within one model this ranks by gain; the
+    per-byte framing is what makes budgets comparable across
+    heterogeneous expert sizes).  Swaps whose per-layer probability gain
+    is ≤ ``min_gain`` are dropped, so a placement already matching the
+    live distribution is left alone.
+    """
+
+    profile: OnlineProfile
+    budget: int                   # fast-tier expert budget (placement size)
+    expert_bytes: int             # bytes streamed per promotion
+    transfer_lat: float           # seconds per promotion (cost model)
+    interval: int = 32            # ticks between re-plans
+    k: int = 4                    # max swaps per re-plan
+    min_gain: float = 1e-4        # min per-layer probability gain per swap
+    ticks: int = field(default=0, init=False)
+    plans: int = field(default=0, init=False)
+    swaps: int = field(default=0, init=False)
+
+    def __post_init__(self):
+        assert self.interval >= 1 and self.k >= 1, (self.interval, self.k)
+
+    def observe(self, layer: int, counts: np.ndarray) -> None:
+        self.profile.observe(layer, counts)
+
+    def tick(self, placement: Placement) -> Optional[MigrationPlan]:
+        """Advance the interval clock; on expiry, plan against the live
+        profile.  Returns None when it is not time yet or no swap clears
+        ``min_gain``."""
+        self.ticks += 1
+        if self.ticks % self.interval != 0:
+            return None
+        plan = self.plan(placement)
+        if plan is None:
+            return None
+        self.plans += 1
+        self.swaps += plan.n_swaps
+        return plan
+
+    def plan(self, placement: Placement) -> Optional[MigrationPlan]:
+        p = self.profile.probabilities()          # (L, E) live routing
+        current = placement.on_fast
+        target = place_by_popularity(self.profile.snapshot(),
+                                     self.budget).on_fast
+        # candidate promotions: in the live-optimal target, not resident —
+        # most popular first; demotions: resident but not in the target —
+        # least popular first.  Pairing i-th with i-th maximises the gain
+        # of each swap.
+        promos = sorted(zip(*np.nonzero(target & ~current)),
+                        key=lambda le: -p[le])
+        demos = sorted(zip(*np.nonzero(current & ~target)),
+                       key=lambda le: p[le])
+        L = p.shape[0]
+        promotes: List[Tuple[int, int]] = []
+        demotes: List[Tuple[int, int]] = []
+        gain = 0.0
+        for pr, de in zip(promos[: self.k], demos[: self.k]):
+            # expected hit-rate gain of this swap: each layer contributes
+            # 1/L to the mean hit rate (every token visits every layer)
+            g = (p[pr] - p[de]) / L
+            if g <= self.min_gain / L:
+                break  # candidates are sorted: later swaps gain even less
+            promotes.append((int(pr[0]), int(pr[1])))
+            demotes.append((int(de[0]), int(de[1])))
+            gain += g
+        if not promotes:
+            return None
+        n = len(promotes)
+        return MigrationPlan(
+            promotes=tuple(promotes), demotes=tuple(demotes),
+            est_gain=gain, transfer_bytes=n * self.expert_bytes,
+            est_transfer_s=n * self.transfer_lat)
+
+
+def apply_plan(placement: Placement, plan: MigrationPlan) -> Placement:
+    """The placement after ``plan``'s swaps (pure; engines charge the
+    transfer cost separately)."""
+    on = placement.on_fast.copy()
+    for le in plan.demotes:
+        assert on[le], f"demote of non-resident expert {le}"
+        on[le] = False
+    for le in plan.promotes:
+        assert not on[le], f"promote of already-resident expert {le}"
+        on[le] = True
+    return Placement(on)

@@ -14,10 +14,9 @@ SLO classes to the generated request stream, e.g.
 """
 import argparse
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import FiddlerEngine, HardwareSpec
@@ -53,7 +52,18 @@ def main(argv=None):
                     help="SLO class mix for the request stream, e.g. "
                          "'interactive=1,batch=3' (weights); default: all "
                          "standard")
+    ap.add_argument("--rebalance-interval", type=int, default=None,
+                    help="dynamic placement rebalancing: serving ticks "
+                         "between bounded expert-migration plans "
+                         "(default: off — static placement)")
+    ap.add_argument("--rebalance-k", type=int, default=4,
+                    help="max expert swaps per rebalance interval")
     args = ap.parse_args(argv)
+    if args.rebalance_interval is not None and args.policy in (
+            "model", "static_split"):
+        raise SystemExit(
+            "--rebalance-interval needs an expert-level orchestrator "
+            "policy (fiddler or offload)")
 
     full = get_config(args.arch)
     cfg = full.reduced()  # real numerics at reduced scale on CPU
@@ -70,7 +80,9 @@ def main(argv=None):
         fe = FiddlerEngine(cfg, params, policy=args.policy, timing_cfg=full,
                            hw=hw,
                            expert_budget=cfg.n_layers * cfg.moe.n_experts // 4
-                           if cfg.moe else 0)
+                           if cfg.moe else 0,
+                           rebalance_interval=args.rebalance_interval,
+                           rebalance_k=args.rebalance_k)
     if args.scheduler == "continuous":
         backend = (ModelBackend(model, params, max_seq=256) if fe is None
                    else FiddlerBackend(fe, max_seq=256))
@@ -113,7 +125,9 @@ def main(argv=None):
     if args.policy not in ("model",):
         led = eng.backend.ledger
         print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "
-              f"streams={led.streams} slow={led.slow_runs}")
+              f"streams={led.streams} slow={led.slow_runs} "
+              f"migrations={led.migrations} "
+              f"migration_time={led.migration_time:.4f}s")
 
 
 if __name__ == "__main__":

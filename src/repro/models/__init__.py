@@ -1,1 +1,1 @@
-from repro.models.model import Model, NO_PARALLEL, ParallelContext, lm_loss  # noqa: F401
+from repro.models.model import NO_PARALLEL, Model, ParallelContext, lm_loss  # noqa: F401

@@ -51,6 +51,15 @@ class ServingBackend:
         to admit future-arrival requests instead of busy-spinning."""
         raise NotImplementedError
 
+    # -- placement maintenance ----------------------------------------------
+    def maybe_rebalance(self) -> Any:
+        """One dynamic-rebalancing tick (core/rebalance.py).  The serving
+        engines call this between decode steps; backends whose execution
+        engine tracks live expert popularity migrate experts between
+        tiers here (charging transfer time to their clock).  Default:
+        placement is static — a no-op."""
+        return None
+
     # -- slot API (continuous batching) -------------------------------------
     def make_cache(self, n_slots: int) -> Any:
         raise NotImplementedError
@@ -223,6 +232,9 @@ class FiddlerBackend(ServingBackend):
         led = self.engine.ledger
         led.sim_time = max(led.sim_time, t)
 
+    def maybe_rebalance(self):
+        return self.engine.maybe_rebalance()
+
     # slot API
     def make_cache(self, n_slots: int) -> Any:
         return self.engine.make_decode_caches(n_slots, self.max_seq)
@@ -292,6 +304,9 @@ class SimulatedBackend(ServingBackend):
     def wait_until(self, t: float) -> None:
         led = self.engine.ledger
         led.sim_time = max(led.sim_time, t)
+
+    def maybe_rebalance(self):
+        return self.engine.maybe_rebalance()
 
     def _logits(self, n: Optional[int] = None) -> np.ndarray:
         row = np.zeros((self._vocab,), np.float32)

@@ -135,7 +135,8 @@ class ContinuousEngine:
                      pos=sl.pos,
                      prompt_len=len(sl.req.prompt) if sl.req else 0,
                      emitted=len(sl.req.output) if sl.req else 0,
-                     steps_left=sl.steps_left, started=sl.started)
+                     steps_left=sl.steps_left, started=sl.started,
+                     arrival=sl.req.arrival if sl.req else None)
             for i, sl in enumerate(self.slots))
         return SchedulerView(
             clock=now, queue=q, slots=s,
@@ -304,13 +305,16 @@ class ContinuousEngine:
     def step(self) -> None:
         """One scheduler tick: observe arrivals → resize the live pool →
         preempt → admit → advance prefills one chunk → one decode step
-        for every decoding slot."""
+        for every decoding slot → one placement-rebalance tick (dynamic
+        backends may migrate experts between tiers here, charging the
+        transfer to their clock — see core/rebalance.py)."""
         self._update_rate(self.clock())
         self._autoscale()
         self._preempt()
         self._admit()
         self._prefill_step()
         self._decode_step()
+        self.backend.maybe_rebalance()
 
     def _admissible(self) -> bool:
         now = self.clock()

@@ -152,6 +152,9 @@ class ServingEngine:
                 break
             pos = S + step
             logits, cache = self._backend.decode_group(cache, tok, pos)
+            # placement-rebalance tick between decode steps (no-op for
+            # static backends — see core/rebalance.py)
+            self._backend.maybe_rebalance()
         t_end = self._clock()
         for r in group:
             r.latency = t_end - r.arrival

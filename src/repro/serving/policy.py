@@ -37,7 +37,9 @@ Shipped policies
 * :class:`FIFOPolicy` — exact pre-redesign behavior (the default).
 * :class:`PriorityPolicy` — deadline/SLO classes ahead of FIFO,
   preempting the longest-running lower-priority decode when a
-  higher-priority arrival is waiting without a free slot.
+  higher-priority arrival is waiting without a free slot; optional
+  starvation aging (``aging_time``) promotes long-waiting batch work
+  into the interactive tier so no request waits unboundedly.
 * :class:`AutoscalePolicy` — sizes the live slot pool against the
   arrival-rate EWMA (Little's law with a configurable service-time
   estimate).
@@ -102,6 +104,7 @@ class SlotView:
     emitted: int
     steps_left: int
     started: Optional[float]     # backend-clock time of admission
+    arrival: Optional[float] = None  # request's original arrival (aging)
 
     @property
     def free(self) -> bool:
@@ -165,7 +168,8 @@ class FIFOPolicy(SchedulerPolicy):
 
 
 class PriorityPolicy(SchedulerPolicy):
-    """SLO/deadline-aware admission with optional preemption.
+    """SLO/deadline-aware admission with optional preemption and
+    starvation aging.
 
     Arrived requests are ordered by (priority desc, deadline asc, arrival
     asc) so a higher class never waits behind a lower one.  When a
@@ -173,36 +177,79 @@ class PriorityPolicy(SchedulerPolicy):
     longest-running strictly-lower-priority decode is evicted; the engine
     re-admits it later via chunked prefill of its prompt + emitted
     tokens, so no token is lost and in-flight decodes never stall behind
-    the re-prefill."""
+    the re-prefill.
+
+    ``aging_time`` bounds starvation: a request that has waited longer
+    than it (backend-clock seconds since arrival) is treated as
+    ``interactive``-tier for every decision.  An aged batch request then
+    sorts ahead of *later-arrived* interactive work (equal priority,
+    earlier arrival) so it takes the next free slot, and — because aging
+    also applies to the slot side of the preemption test — its decode
+    cannot be stolen by fresh interactive arrivals (preemption needs
+    *strictly* lower victim priority).  Aging also caps the request's
+    effective *deadline* at its aging expiry (``arrival + aging_time``,
+    which is already in the past), so deadline-bearing interactive
+    traffic cannot sort ahead of it forever either.  Under sustained
+    interactive overload every batch request's wait is therefore bounded
+    by ``aging_time`` plus one generation length, instead of unbounded
+    (the ROADMAP's starvation open item) — assuming sane deadlines
+    (``deadline >= arrival``; a request whose deadline predates an aged
+    request's expiry is even more overdue and legitimately precedes
+    it)."""
 
     name = "priority"
 
-    def __init__(self, preemption: bool = True):
+    def __init__(self, preemption: bool = True,
+                 aging_time: Optional[float] = None):
+        assert aging_time is None or aging_time > 0, aging_time
         self.preemption = preemption
+        self.aging_time = aging_time
 
-    @staticmethod
-    def _key(q: QueueView):
-        return (-q.priority,
-                q.deadline if q.deadline is not None else math.inf,
+    def _aged(self, arrival: Optional[float], clock: float) -> bool:
+        return (self.aging_time is not None and arrival is not None
+                and clock - arrival >= self.aging_time)
+
+    def _aged_priority(self, priority: int, arrival: Optional[float],
+                       clock: float) -> int:
+        if self._aged(arrival, clock):
+            return max(priority, SLO_CLASSES["interactive"])
+        return priority
+
+    def _key(self, q: QueueView, clock: float):
+        # an aged request is overdue: its effective deadline is its aging
+        # expiry (<= clock, so it precedes any still-future deadline —
+        # without this, a stream of deadline-bearing interactive requests
+        # would sort ahead of an aged batch request forever)
+        deadline = q.deadline if q.deadline is not None else math.inf
+        if self._aged(q.arrival, clock):
+            deadline = min(deadline, q.arrival + self.aging_time)
+        return (-self._aged_priority(q.priority, q.arrival, clock),
+                deadline,
                 q.arrival if q.arrival is not None else -math.inf,
                 q.index)
 
     def admission_order(self, view: SchedulerView) -> Sequence[int]:
-        arrived = sorted(view.arrived_queue(), key=self._key)
+        arrived = sorted(view.arrived_queue(),
+                         key=lambda q: self._key(q, view.clock))
         return [q.index for q in arrived]
 
     def preempt(self, view: SchedulerView) -> Sequence[int]:
         if not self.preemption:
             return ()
-        waiters = sorted(view.arrived_queue(), key=self._key)
+        waiters = sorted(view.arrived_queue(),
+                         key=lambda q: self._key(q, view.clock))
         if not waiters:
             return ()
         free = view.free_live_slots()
-        # longest-running first among the lowest priorities
+
+        def slot_prio(s: SlotView) -> int:
+            return self._aged_priority(s.priority, s.arrival, view.clock)
+
+        # longest-running first among the lowest (aged) priorities
         candidates = sorted(
             (s for s in view.slots[: view.slot_limit]
              if s.phase == "decode"),
-            key=lambda s: (s.priority,
+            key=lambda s: (slot_prio(s),
                            s.started if s.started is not None else math.inf))
         victims = []
         taken = set()
@@ -210,10 +257,11 @@ class PriorityPolicy(SchedulerPolicy):
             if free > 0:
                 free -= 1  # a free slot serves this waiter; no eviction
                 continue
+            wp = self._aged_priority(w.priority, w.arrival, view.clock)
             for s in candidates:
                 if s.index in taken:
                     continue
-                if s.priority < w.priority:
+                if slot_prio(s) < wp:
                     taken.add(s.index)
                     victims.append(s.index)
                     break

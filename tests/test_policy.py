@@ -22,7 +22,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import reduced_model
-from repro.core import FiddlerEngine
+from repro.configs import get_config
+from repro.core import FiddlerEngine, HardwareSpec
 from repro.serving.backend import FiddlerBackend, ModelBackend, SimulatedBackend
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request, ServingEngine
@@ -456,3 +457,164 @@ def test_autoscale_target_respects_bounds():
     assert pol.target_slots(_view(0.0, [], slots, rate=0.1)) == 2
     assert pol.target_slots(_view(0.0, [], slots, rate=8.0)) == 4
     assert pol.target_slots(_view(0.0, [], slots, rate=1000.0)) == 8
+
+
+# ---------------------------------------------------------------------------
+# Starvation aging: batch-class requests age into the interactive tier
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(),                            # batch?
+                          st.floats(min_value=0.0, max_value=20.0)),  # arrival
+                min_size=2, max_size=8),
+       st.floats(min_value=0.5, max_value=5.0),  # aging_time
+       st.floats(min_value=0.0, max_value=40.0))  # clock
+def test_aged_batch_precedes_later_arrivals(entries, aging_time, clock):
+    """Any batch request that has waited >= aging_time must be admitted
+    before every request — of any class — that arrived strictly later
+    (aged requests join the interactive tier and tie-break by arrival),
+    so no request's wait grows without bound."""
+    queue = [_queue_view(i, a, priority=slo_priority(
+                 "batch" if is_batch else "interactive"))
+             for i, (is_batch, a) in enumerate(entries)]
+    pol = PriorityPolicy(aging_time=aging_time)
+    order = list(pol.admission_order(_view(clock, queue,
+                                           [_slot_view(0, rid=None)])))
+    rank = {qi: pos for pos, qi in enumerate(order)}
+    for i, (is_batch, a) in enumerate(entries):
+        if not (is_batch and a <= clock and clock - a >= aging_time):
+            continue  # not an aged, arrived batch request
+        for j, (_, b) in enumerate(entries):
+            if b <= clock and b > a:
+                assert rank[i] < rank[j], (i, j, entries, clock)
+
+
+def test_aging_bounds_batch_wait_under_interactive_overload():
+    """Sustained interactive overload on one slot: without aging the
+    batch request is served dead last; with aging it overtakes every
+    interactive request that arrived after its aging deadline (and its
+    decode, once running, is not stolen by fresh interactive arrivals)."""
+    AGING = 0.5
+
+    def run(aging_time):
+        # full-size sim on paper-env1: service time (≈100ms/step) dwarfs
+        # the 10ms arrival gap, so the interactive stream truly overloads
+        # the single slot
+        cfg = get_config("mixtral-8x7b")
+        fe = FiddlerEngine(cfg, policy="fiddler",
+                           hw=HardwareSpec.paper_env1(), seed=0)
+        eng = ContinuousEngine(SimulatedBackend(fe, max_seq=64), n_slots=1,
+                               max_seq=64, prefill_chunk=4,
+                               policy=PriorityPolicy(preemption=True,
+                                                     aging_time=aging_time))
+        # batch request lands just after the interactive stream starts;
+        # one interactive arrival every 250 sim-ms with ~1s service each
+        # keeps the queue permanently non-empty (sustained overload)
+        eng.submit(Request(rid="starved", prompt=[1] * 4, max_new_tokens=4,
+                           arrival=0.05, slo_class="batch"))
+        for i in range(24):
+            eng.submit(Request(rid=f"int{i:02d}", prompt=[1] * 4,
+                               max_new_tokens=4, arrival=0.25 * i,
+                               slo_class="interactive"))
+        done = eng.run(max_steps=50_000, on_exhausted="raise")
+        assert len(done) == 25
+        return {r.rid: r for r in done}
+
+    aged = run(AGING)
+    unaged = run(None)
+    # without aging: every interactive request beats the batch one
+    assert all(unaged["starved"].ttft > r.ttft
+               for rid, r in unaged.items() if rid != "starved")
+    # with aging the wait is bounded: strictly earlier first token than
+    # the no-aging run, and every interactive request that arrived after
+    # the aging deadline is served no earlier than the aged batch request
+    assert aged["starved"].ttft < unaged["starved"].ttft
+    batch_first = aged["starved"].token_times[0]
+    expiry = 0.05 + AGING  # batch arrival + aging_time
+    later = [r for rid, r in aged.items()
+             if rid != "starved" and r.arrival > expiry]
+    assert later, "overload stream ended before the aging deadline"
+    assert all(r.token_times[0] >= batch_first for r in later)
+
+
+@pytest.mark.parametrize("backend_kind", ["model", "fiddler"])
+def test_resize_cache_shrink_preserves_leading_slots(backend_kind):
+    """The shrink path of ``resize_cache``: dropping trailing rows must
+    preserve every surviving slot's KV bit-for-bit — tokens decoded after
+    the shrink equal the unresized reference."""
+    if backend_kind == "model":
+        cfg, model, params = reduced_model("qwen3-0.6b")
+        backend = ModelBackend(model, params, max_seq=64)
+    else:
+        cfg, model, params = reduced_model("mixtral-8x7b")
+        fe = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                           host_precision="fp32")
+        backend = FiddlerBackend(fe, max_seq=64)
+    prompts = [[1, 17, 23, 9], [1, 40, 11]]
+    refs = [_reference_generation(model, params, p, 5) for p in prompts]
+
+    cache = backend.make_cache(4)        # over-allocated pool
+    state = []
+    for slot, p in enumerate(prompts):
+        logits, staging = backend.prefill(p)
+        cache = backend.write_slot(cache, staging, slot)
+        tok = int(np.argmax(logits))
+        state.append([len(p), tok, [tok]])
+
+    def decode_all(cache, n_slots, steps):
+        for _ in range(steps):
+            tokens = np.full((n_slots,), 0, np.int32)
+            pos = np.zeros((n_slots,), np.int32)
+            active = np.zeros((n_slots,), bool)
+            for i, (pp, tt, _out) in enumerate(state):
+                tokens[i], pos[i], active[i] = tt, pp, True
+            logits, cache = backend.decode_slots(cache, tokens, pos, active)
+            nxt = np.asarray(np.argmax(logits, -1))
+            for i, s in enumerate(state):
+                s[0] += 1
+                s[1] = int(nxt[i])
+                s[2].append(int(nxt[i]))
+        return cache
+
+    cache = decode_all(cache, 4, 2)          # two steps at 4 slots
+    cache = backend.resize_cache(cache, 2)   # shrink to the live pool
+    cache = decode_all(cache, 2, 2)          # two more steps at 2 slots
+    for i, ref in enumerate(refs):
+        assert state[i][2] == ref, (i, state[i][2], ref)
+
+
+def test_simulated_backend_resize_cache_roundtrip():
+    fe, eng = _sim_engine()
+    backend = eng.backend
+    cache = backend.make_cache(2)
+    assert backend.resize_cache(cache, 6) == {"n_slots": 6}
+    assert backend.resize_cache(cache, 1) == {"n_slots": 1}
+
+
+def test_aged_batch_not_starved_by_deadline_traffic():
+    """Aging must neutralise the deadline tie-breaker too: an aged batch
+    request (deadline None → effective deadline = its aging expiry, in
+    the past) precedes deadline-bearing interactive requests that
+    arrived after it, instead of losing the (priority, deadline) sort to
+    every future deadline forever."""
+    clock, aging = 10.0, 1.0
+    queue = [_queue_view(0, 0.0, priority=slo_priority("batch"))]
+    for i in range(1, 4):  # later interactive arrivals with deadlines
+        queue.append(QueueView(
+            index=i, rid=f"q{i}", arrival=1.0 + i,
+            priority=slo_priority("interactive"), slo_class="interactive",
+            deadline=clock + i, prompt_len=4, max_new_tokens=8, emitted=0))
+    pol = PriorityPolicy(aging_time=aging)
+    order = list(pol.admission_order(_view(clock, queue,
+                                           [_slot_view(0, rid=None)])))
+    assert order[0] == 0, order
+    # a request whose deadline predates the aged expiry is more overdue
+    # still, and legitimately goes first
+    queue.append(QueueView(
+        index=4, rid="q4", arrival=0.5,
+        priority=slo_priority("interactive"), slo_class="interactive",
+        deadline=0.6, prompt_len=4, max_new_tokens=8, emitted=0))
+    order = list(pol.admission_order(_view(clock, queue,
+                                           [_slot_view(0, rid=None)])))
+    assert order[0] == 4 and order[1] == 0, order
