@@ -22,6 +22,7 @@ def main() -> None:
     from benchmarks import (
         beam_search,
         dataset_sensitivity,
+        dispatch_overlap,
         e2e_latency,
         extensions,
         microbench,
@@ -46,6 +47,7 @@ def main() -> None:
         ("appE_portability", lambda: portability.run(fast=fast)),
         ("serve_load_poisson", lambda: serve_load.run(fast=fast)),
         ("workload_shift", lambda: workload_shift.run(fast=fast)),
+        ("dispatch_overlap", lambda: dispatch_overlap.run(fast=fast)),
         ("beyond_paper_extensions", lambda: extensions.run(fast=fast)),
         ("roofline", roofline.report),
     ]

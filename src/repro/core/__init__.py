@@ -17,4 +17,8 @@ from repro.core.popularity import (  # noqa: F401
     OnlineProfile,
     synthetic_profile,
 )
-from repro.core.rebalance import MigrationPlan, Rebalancer  # noqa: F401
+from repro.core.rebalance import (  # noqa: F401
+    MigrationPlan,
+    PrefetchQueue,
+    Rebalancer,
+)

@@ -176,6 +176,17 @@ class LatencyModel:
         return int(lo)
 
 
+def link_idle_time(t_nonexpert: float, t_moe: float,
+                   t_stream: float) -> float:
+    """Seconds of one charged layer during which the host↔device link is
+    idle: the layer's wall-clock (non-expert + MoE) minus the time
+    FAST_STREAM weight transfers keep the link busy.  Asynchronous
+    migration prefetches (core/rebalance.py ``PrefetchQueue``) ride
+    exactly this window — the paper's idle-resource observation applied
+    to the link instead of the GPU."""
+    return max(0.0, t_nonexpert + t_moe - t_stream)
+
+
 def measure(fn: Callable[[], None], iters: int = 5, warmup: int = 2) -> float:
     for _ in range(warmup):
         fn()

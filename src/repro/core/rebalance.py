@@ -20,6 +20,15 @@ placement a living part of the serving loop:
   charged to the simulated-seconds ledger at ``transfer_lat()`` each;
   demotions just drop fast-tier residency (freeing HBM costs nothing).
 
+With the engine's ``async_prefetch`` mode (default when overlap is on),
+promotion transfers are not charged serially between steps: they enter a
+:class:`PrefetchQueue` and ride the host link while it would otherwise
+sit idle under fast-tier compute (the paper's idle-GPU observation,
+applied to the link).  Only the remainder that cannot hide — a promoted
+expert routed before its transfer finished, or a flush — is charged to
+``sim_time`` (``Ledger.migration_exposed``); the hidden part accrues to
+``Ledger.migration_overlapped``.
+
 The swap budget ``k`` bounds the per-interval transfer burst so
 rebalancing never stalls serving; the hit-rate-gain threshold keeps the
 placement stable when the live distribution matches the calibration one
@@ -141,6 +150,81 @@ class Rebalancer:
             promotes=tuple(promotes), demotes=tuple(demotes),
             est_gain=gain, transfer_bytes=n * self.expert_bytes,
             est_transfer_s=n * self.transfer_lat)
+
+
+@dataclass
+class _Pending:
+    """One in-flight promotion transfer: ``remaining`` link-seconds until
+    expert ``expert`` of layer ``layer`` is actually resident."""
+
+    layer: int
+    expert: int
+    remaining: float
+
+
+class PrefetchQueue:
+    """FIFO of promotion transfers riding idle link time.
+
+    ``apply_migrations`` pushes each promotion's ``transfer_lat()`` here
+    instead of charging it to ``sim_time``; the engine's per-layer charge
+    then (a) *forces* any transfer whose target expert is about to
+    execute — the remainder serialises, i.e. is exposed — and (b)
+    *drains* the queue with the layer's idle link seconds (layer
+    wall-clock minus the time FAST_STREAM transfers keep the link busy) —
+    that part is overlapped, hidden under compute the clock already
+    charged.  The link is a single serial resource, so draining is FIFO.
+    """
+
+    def __init__(self) -> None:
+        self._q: List[_Pending] = []
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def backlog(self) -> float:
+        """Link-seconds of transfer still in flight."""
+        return sum(p.remaining for p in self._q)
+
+    def push(self, layer: int, expert: int, seconds: float) -> None:
+        self._q.append(_Pending(int(layer), int(expert), float(seconds)))
+
+    def force(self, layer: int, used) -> float:
+        """Complete every pending transfer targeting ``layer`` whose
+        expert is in ``used`` (it executes *now*, so the rest of its
+        transfer serialises).  FIFO ordering: everything queued ahead of
+        a forced transfer must finish first — the link is serial.
+        Returns the exposed seconds."""
+        last = -1
+        for i, p in enumerate(self._q):
+            if p.layer == layer and p.expert in used:
+                last = i
+        if last < 0:
+            return 0.0
+        exposed = sum(p.remaining for p in self._q[: last + 1])
+        del self._q[: last + 1]
+        return exposed
+
+    def drain(self, idle: float) -> float:
+        """Consume up to ``idle`` link-seconds FIFO; returns the
+        overlapped seconds actually hidden."""
+        overlapped = 0.0
+        while self._q and idle > 0.0:
+            p = self._q[0]
+            d = min(p.remaining, idle)
+            p.remaining -= d
+            idle -= d
+            overlapped += d
+            if p.remaining <= 1e-15:
+                self._q.pop(0)
+        return overlapped
+
+    def flush(self) -> float:
+        """Complete everything now (serialising); returns exposed
+        seconds."""
+        exposed = self.backlog
+        self._q.clear()
+        return exposed
 
 
 def apply_plan(placement: Placement, plan: MigrationPlan) -> Placement:

@@ -4,9 +4,15 @@
   expert_mlp       fused gated-SiLU expert MLP (VMEM-tiled) — the TPU
                    analogue of the paper's AVX512_BF16 CPU kernel
   moe_gmm          grouped per-expert matmul with count-guarded tiles
+                   (+ moe_gmm_mlp: three of them fused into a gated MLP)
   flash_attention  causal/windowed flash attention (VMEM-resident scores)
   host_expert      the slow-tier bf16 kernel (numpy; paper Fig. 3c path)
   ops              jit'd wrappers;  ref — pure-jnp oracles
 """
 from repro.kernels.host_expert import HostExpert, host_expert_mlp  # noqa: F401
-from repro.kernels.ops import expert_mlp_op, moe_gmm_op  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    expert_mlp_op,
+    grouped_gated_mlp_op,
+    grouped_gather_mlp_op,
+    moe_gmm_op,
+)

@@ -75,6 +75,21 @@ def moe_gmm(xs: jnp.ndarray, ws: jnp.ndarray, counts: jnp.ndarray, *,
     return out[:, :C, :f]
 
 
+def moe_gmm_mlp(xs: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                w_down: jnp.ndarray, counts: jnp.ndarray, *,
+                interpret: bool = True, **block_kw) -> jnp.ndarray:
+    """Grouped gated SiLU MLP as three grouped matmuls on the MXU:
+    ``silu(gmm(xs, w_gate)) * gmm(xs, w_up)`` then ``gmm(·, w_down)`` —
+    the Pallas path of ``ops.grouped_gated_mlp_op``, sharing
+    ``ref.grouped_gated_mlp_ref``'s oracle semantics (rows ≥ counts[e]
+    are zeroed by every gmm, and silu(0)·0 = 0 keeps them zero between
+    stages).  xs: (E, C, d) → (E, C, d)."""
+    h = jax.nn.silu(moe_gmm(xs, w_gate, counts, interpret=interpret,
+                            **block_kw))
+    h = h * moe_gmm(xs, w_up, counts, interpret=interpret, **block_kw)
+    return moe_gmm(h, w_down, counts, interpret=interpret, **block_kw)
+
+
 def _gmm_kernel_3d(counts_ref, x_ref, w_ref, o_ref, acc_ref):
     e = pl.program_id(0)
     ic = pl.program_id(1)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.expert_mlp import expert_mlp
-from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.moe_gmm import moe_gmm, moe_gmm_mlp
 
 # On this container Pallas runs in interpret mode (Python) — correct but
 # slow, so the jitted reference is the default execution path and the
@@ -53,3 +53,71 @@ def moe_gmm_op(xs: jnp.ndarray, ws: jnp.ndarray, counts: jnp.ndarray, *,
     if use_pallas:
         return moe_gmm(xs, ws, counts, interpret=INTERPRET)
     return _moe_gmm_jnp(xs, ws, counts)
+
+
+@jax.jit
+def _grouped_gated_mlp_jnp(xs, w_gate, w_up, w_down, counts):
+    return ref.grouped_gated_mlp_ref(xs, w_gate, w_up, w_down, counts)
+
+
+@jax.jit
+def _grouped_uniform_mlp_jnp(xs, w_gate, w_up, w_down):
+    return ref.grouped_gated_mlp_ref(xs, w_gate, w_up, w_down, None)
+
+
+def grouped_gated_mlp_op(xs: jnp.ndarray, w_gate: jnp.ndarray,
+                         w_up: jnp.ndarray, w_down: jnp.ndarray,
+                         counts: Optional[jnp.ndarray], *,
+                         use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """Fast-tier grouped gated MLP over a capacity-bucketed dispatch
+    buffer: one kernel launch for a whole expert group instead of one
+    ``expert_mlp_op`` per expert.  xs: (E, C, d); counts: (E,) int32 →
+    (E, C, d) with rows ≥ counts[e] zeroed; ``counts=None`` means every
+    expert uses all C rows (single compiled branch — the cheap form for
+    large uniform row counts).  Per-expert slices are bit-identical to
+    ``expert_mlp_op`` on fp32 (exact-row-count GEMMs, see ref.py) — the
+    orchestrator's grouped/eager equivalence relies on this."""
+    if use_pallas is None:
+        use_pallas = USE_PALLAS
+    if use_pallas:
+        if counts is None:
+            counts = jnp.full(xs.shape[0], xs.shape[1], jnp.int32)
+        return moe_gmm_mlp(xs, w_gate, w_up, w_down, counts,
+                           interpret=INTERPRET)
+    if counts is None:
+        return _grouped_uniform_mlp_jnp(xs, w_gate, w_up, w_down)
+    return _grouped_gated_mlp_jnp(xs, w_gate, w_up, w_down, counts)
+
+
+@jax.jit
+def _grouped_gather_mlp_jnp(xs, slots, w_gate, w_up, w_down, counts):
+    return ref.grouped_gated_mlp_ref(xs, w_gate[slots], w_up[slots],
+                                     w_down[slots], counts)
+
+
+@jax.jit
+def _grouped_gather_uniform_jnp(xs, slots, w_gate, w_up, w_down):
+    return ref.grouped_gated_mlp_ref(xs, w_gate[slots], w_up[slots],
+                                     w_down[slots], None)
+
+
+def grouped_gather_mlp_op(xs: jnp.ndarray, slots: jnp.ndarray,
+                          w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                          w_down: jnp.ndarray,
+                          counts: Optional[jnp.ndarray], *,
+                          use_pallas: Optional[bool] = None) -> jnp.ndarray:
+    """``grouped_gated_mlp_op`` with the expert-weight gather fused into
+    the same launch: ``slots`` (G,) int32 indexes rows of the per-layer
+    *stacked* fast-pool arrays ``w_gate/w_up/w_down`` (E_fast, d, f), so
+    dispatching G active experts out of a larger resident stack is still
+    one kernel call with FLOPs proportional to the active group."""
+    if use_pallas is None:
+        use_pallas = USE_PALLAS
+    if use_pallas:
+        if counts is None:
+            counts = jnp.full(xs.shape[0], xs.shape[1], jnp.int32)
+        return moe_gmm_mlp(xs, w_gate[slots], w_up[slots], w_down[slots],
+                           counts, interpret=INTERPRET)
+    if counts is None:
+        return _grouped_gather_uniform_jnp(xs, slots, w_gate, w_up, w_down)
+    return _grouped_gather_mlp_jnp(xs, slots, w_gate, w_up, w_down, counts)

@@ -34,6 +34,55 @@ def moe_gmm_ref(xs: jnp.ndarray, ws: jnp.ndarray,
     return jnp.where(mask, out, 0.0).astype(xs.dtype)
 
 
+def grouped_gated_mlp_ref(xs: jnp.ndarray, w_gate: jnp.ndarray,
+                          w_up: jnp.ndarray, w_down: jnp.ndarray,
+                          counts: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Grouped gated SiLU MLP: out[e] = expert_mlp_ref(xs[e], ...) with
+    rows ≥ counts[e] zeroed — one fused call for a whole capacity-bucketed
+    MoE dispatch buffer (the orchestrator's fast-tier hot path).
+
+    xs: (E, C, d); w_gate/w_up: (E, d, f); w_down: (E, f, d);
+    counts: (E,) int32 → (E, C, d); ``counts=None`` means every expert
+    uses all C rows (the orchestrator's uniform count-class launches).
+    fp32 accumulation.
+
+    Deliberately ``lax.map`` over experts with a ``lax.switch`` over the
+    C+1 possible row counts, so each expert's GEMMs run at **exactly its
+    true row count** — not the padded capacity.  This is what makes every
+    per-expert slice *bit-identical* to :func:`expert_mlp_ref`, the
+    equivalence the orchestrator's grouped dispatch is tested against:
+    XLA's CPU GEMM picks kernels (and reduction orders) that depend on
+    the row dimension M, so both a batched (E, C, ·) dot_general and a
+    padded-to-C 2D GEMM would perturb results at the ~1e-7 level.  Still
+    one kernel launch from the host's perspective; the switch costs C+1
+    compiled branches per (E, C) signature — callers keep C small (the
+    orchestrator buckets decode-sized capacities and dispatches large
+    uniform row counts through the ``counts=None`` form, which compiles
+    a single branch).
+    """
+    if counts is None:
+        return jax.lax.map(lambda a: expert_mlp_ref(*a),
+                           (xs, w_gate, w_up, w_down))
+
+    C = xs.shape[1]
+
+    def one(args):
+        x, wg, wu, wd, n = args
+
+        def branch(m):
+            def f(_):
+                if m == 0:
+                    return jnp.zeros_like(x)
+                y = expert_mlp_ref(x[:m], wg, wu, wd)
+                return jnp.zeros_like(x).at[:m].set(y)
+            return f
+
+        return jax.lax.switch(jnp.clip(n, 0, C),
+                              [branch(m) for m in range(C + 1)], None)
+
+    return jax.lax.map(one, (xs, w_gate, w_up, w_down, counts))
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True,
                         window: int | None = None,

@@ -60,6 +60,14 @@ class ServingBackend:
         placement is static — a no-op."""
         return None
 
+    def finalize(self) -> None:
+        """End-of-run settlement.  The serving engines call this when a
+        run drains; backends with asynchronous migration prefetches
+        (core/rebalance.py ``PrefetchQueue``) force the in-flight
+        transfers to completion here so ledger accounting adds up
+        (overlapped + exposed == migration_time).  Default: no-op."""
+        return None
+
     # -- slot API (continuous batching) -------------------------------------
     def make_cache(self, n_slots: int) -> Any:
         raise NotImplementedError
@@ -235,6 +243,9 @@ class FiddlerBackend(ServingBackend):
     def maybe_rebalance(self):
         return self.engine.maybe_rebalance()
 
+    def finalize(self) -> None:
+        self.engine.flush_prefetch()
+
     # slot API
     def make_cache(self, n_slots: int) -> Any:
         return self.engine.make_decode_caches(n_slots, self.max_seq)
@@ -307,6 +318,9 @@ class SimulatedBackend(ServingBackend):
 
     def maybe_rebalance(self):
         return self.engine.maybe_rebalance()
+
+    def finalize(self) -> None:
+        self.engine.flush_prefetch()
 
     def _logits(self, n: Optional[int] = None) -> np.ndarray:
         row = np.zeros((self._vocab,), np.float32)

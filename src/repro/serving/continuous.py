@@ -352,4 +352,7 @@ class ContinuousEngine:
                 raise RuntimeError(msg)
             if on_exhausted == "warn":
                 warnings.warn(msg, RuntimeWarning, stacklevel=2)
+        # settle in-flight migration prefetches so ledger accounting of
+        # this run is complete (core/rebalance.py PrefetchQueue)
+        self.backend.finalize()
         return self.finished

@@ -191,4 +191,6 @@ class ServingEngine:
                 self._backend.wait_until(latest)
             self._run_group(group)
             finished.extend(group)
+        # settle in-flight migration prefetches (async rebalancing)
+        self._backend.finalize()
         return finished

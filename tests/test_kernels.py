@@ -51,6 +51,55 @@ def test_moe_gmm_pallas_vs_ref(E, C, d, f, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("E,C,d,f", [(4, 32, 64, 128), (3, 17, 96, 200)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_moe_gmm_mlp_pallas_vs_ref(E, C, d, f, dtype):
+    from repro.kernels.moe_gmm import moe_gmm_mlp
+
+    k = jax.random.split(jax.random.PRNGKey(E * 13 + C), 4)
+    xs = (jax.random.normal(k[0], (E, C, d)) * 0.1).astype(dtype)
+    wg = (jax.random.normal(k[1], (E, d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(k[2], (E, d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(k[3], (E, f, d)) * 0.05).astype(dtype)
+    counts = jnp.asarray(
+        np.random.default_rng(E).integers(0, C + 1, E), jnp.int32)
+    got = moe_gmm_mlp(xs, wg, wu, wd, counts, block_c=16, block_f=64,
+                      block_k=64, interpret=True)
+    want = ref.grouped_gated_mlp_ref(xs, wg, wu, wd, counts)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_grouped_gated_mlp_bit_identical_to_per_expert():
+    """The grouped fast-tier MLP must reproduce the per-expert op bit for
+    bit on fp32 — the orchestrator's grouped dispatch rewrite (and its
+    pre/post-change equivalence guarantee) rests on this."""
+    from repro.kernels.ops import grouped_gated_mlp_op, grouped_gather_mlp_op
+
+    E, C, d, f = 4, 8, 32, 64
+    k = jax.random.split(jax.random.PRNGKey(5), 4)
+    wg = jax.random.normal(k[0], (E, d, f)) * 0.05
+    wu = jax.random.normal(k[1], (E, d, f)) * 0.05
+    wd = jax.random.normal(k[2], (E, f, d)) * 0.05
+    counts = np.array([1, 8, 3, 5], np.int32)
+    xs = np.zeros((E, C, d), np.float32)
+    rng = np.random.default_rng(0)
+    for e in range(E):
+        xs[e, :counts[e]] = rng.standard_normal((counts[e], d)) * 0.1
+    out = np.asarray(grouped_gated_mlp_op(
+        jnp.asarray(xs), wg, wu, wd, jnp.asarray(counts), use_pallas=False))
+    gathered = np.asarray(grouped_gather_mlp_op(
+        jnp.asarray(xs), jnp.arange(E, dtype=jnp.int32), wg, wu, wd,
+        jnp.asarray(counts), use_pallas=False))
+    np.testing.assert_array_equal(out, gathered)
+    for e in range(E):
+        want = np.asarray(expert_mlp_op(
+            jnp.asarray(xs[e, :counts[e]]), wg[e], wu[e], wd[e],
+            use_pallas=False))
+        np.testing.assert_array_equal(out[e, :counts[e]], want)
+        np.testing.assert_array_equal(out[e, counts[e]:], 0.0)
+
+
 @pytest.mark.parametrize("s,d,f", SHAPES[:3])
 def test_host_expert_vs_ref(s, d, f):
     rng = np.random.default_rng(0)

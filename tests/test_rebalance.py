@@ -130,12 +130,17 @@ def test_apply_plan_validates_swaps():
 
 
 def test_migrations_charge_simulated_clock():
+    """Synchronous mode (``async_prefetch=False``): every promotion
+    charges ``transfer_lat()`` serially into sim_time at apply time.
+    (The async default defers the charge to idle link windows — covered
+    by tests/test_dispatch.py.)"""
     cfg = get_config("mixtral-8x7b")
     L, E = cfg.n_layers, cfg.moe.n_experts
     calib = synthetic_profile(L, E, seed=0, concentration=0.5)
     eng = FiddlerEngine(cfg, policy="fiddler", hw=HardwareSpec.paper_env1(),
                         profile=calib, expert_budget=L * E // 4,
-                        rebalance_interval=1, rebalance_k=4)
+                        rebalance_interval=1, rebalance_k=4,
+                        async_prefetch=False)
     # drift the live profile hard: routing now prefers the *least*
     # calibrated-popular experts
     eng.profile = ExpertProfile(1.0 / np.maximum(calib.counts, 1.0))
@@ -150,6 +155,8 @@ def test_migrations_charge_simulated_clock():
     assert led.sim_time - t0 == pytest.approx(
         plan.n_swaps * eng.lat.transfer_lat())
     assert led.migration_time == pytest.approx(led.sim_time - t0)
+    assert led.migration_exposed == pytest.approx(led.migration_time)
+    assert led.migration_overlapped == 0.0
     assert led.migration_bytes == plan.n_swaps * expert_weight_bytes(cfg)
 
 
