@@ -1,12 +1,17 @@
 """Serving + beam-search demo (the paper's scenario ⓒ, 11.57× result).
 
-Serves batched requests through the ServingEngine, then runs beam search
-over the Fiddler orchestrator with increasing widths and shows how the
-planner's decisions shift from slow-tier execution to weight streaming as
-per-expert input sizes grow (paper §3.2).
+Serves batched requests through the ServingEngine, runs a **gang-scheduled
+beam group** through the continuous engine — the group claims its slots
+atomically, the beams share their prompt-prefix KV blocks (paged layout,
+models/paged_kv.py) and every reshuffle is a zero-copy block-table
+permutation — then sweeps beam widths over the orchestrator to show how
+the planner's decisions shift from slow-tier execution to weight
+streaming as per-expert input sizes grow (paper §3.2).
 
-    PYTHONPATH=src python examples/serve_beam_search.py
+    PYTHONPATH=src python examples/serve_beam_search.py [--smoke]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,51 +20,85 @@ from repro.configs import get_config
 from repro.core import FiddlerEngine, HardwareSpec
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import Model
+from repro.serving.backend import FiddlerBackend
 from repro.serving.beam_search import beam_search_fiddler
+from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request, ServingEngine
 
 
-def main():
+def main(smoke: bool = False):
     cfg = get_config("mixtral-8x7b").reduced()
     full = get_config("mixtral-8x7b")
     model = Model(cfg, param_dtype=jnp.float32)
     params = model.init(jax.random.PRNGKey(0))
     tok = ByteTokenizer(cfg.vocab_size)
+    n_new = 4 if smoke else 8
 
     # --- batched serving --------------------------------------------------
     print("== batched serving through the orchestrator ==")
     fe = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=40,
                        timing_cfg=full, hw=HardwareSpec.paper_env1())
     eng = ServingEngine(fe, mode="fiddler", max_batch=4, max_seq=96)
-    for i, text in enumerate(["USER: hi", "USER: what is moe?",
-                              "USER: explain experts", "USER: fast inference",
-                              "USER: how to serve?"]):
+    texts = ["USER: hi", "USER: what is moe?"] if smoke else [
+        "USER: hi", "USER: what is moe?", "USER: explain experts",
+        "USER: fast inference", "USER: how to serve?"]
+    for i, text in enumerate(texts):
         eng.submit(Request(rid=f"r{i}", prompt=tok.encode(text),
-                           max_new_tokens=8))
+                           max_new_tokens=n_new))
     for r in eng.run():
         print(f"  {r.rid}: ttft={r.ttft*1e3:7.1f}ms "
               f"latency={r.latency*1e3:7.1f}ms (simulated) "
               f"out={tok.decode(r.output)!r}")
 
+    # --- gang-scheduled beam group in the continuous engine ----------------
+    print("== beam group + interactive traffic, continuous engine ==")
+    width = 2 if smoke else 4
+    fe = FiddlerEngine(cfg, params, policy="fiddler", expert_budget=40,
+                       timing_cfg=full, hw=HardwareSpec.paper_env1())
+    backend = FiddlerBackend(fe, max_seq=96)
+    ceng = ContinuousEngine(backend, n_slots=width + 2, max_seq=96,
+                            prefill_chunk=8)
+    ceng.submit(Request(rid="beam", prompt=tok.encode("USER: tell me about"),
+                        beam_width=width, max_new_tokens=n_new))
+    ceng.submit(Request(rid="chat", prompt=tok.encode("USER: hello"),
+                        max_new_tokens=n_new, slo_class="interactive"))
+    done = {r.rid: r for r in ceng.run(max_steps=400)}
+    b = done["beam"]
+    stats_src = ceng.cache[0].meta
+    print(f"  beam({width}): best score={b.beam_scores[0]:.3f} "
+          f"latency={b.latency*1e3:.1f}ms(sim) "
+          f"out={tok.decode(b.output)!r}")
+    print(f"  chat: out={tok.decode(done['chat'].output)!r}")
+    print(f"  block pool after drain: {stats_src.blocks_in_use()} in use "
+          f"(gang retired → all blocks returned)")
+
     # --- beam search, width sweep ------------------------------------------
     print("== beam search: planner decisions vs width ==")
     prompt = np.asarray([tok.encode("USER: tell me about")], np.int32)
     n_total = cfg.n_layers * cfg.moe.n_experts
-    for width in (1, 4, 8, 16):
+    for width in ((1, 4) if smoke else (1, 4, 8, 16)):
         # small fast-tier budget (1/4 of experts) so the planner has real
         # choices; latency constants come from the FULL-size model
         fe = FiddlerEngine(cfg, params, policy="fiddler",
                            expert_budget=n_total // 4,
                            timing_cfg=full, hw=HardwareSpec.paper_env1())
-        res = beam_search_fiddler(fe, prompt, width=width, n_new=6,
+        res = beam_search_fiddler(fe, prompt, width=width, n_new=n_new,
                                   max_seq=96)
         led = fe.ledger
         total = max(led.fast_hits + led.streams + led.slow_runs, 1)
+        blocks = ""
+        if res.block_stats:
+            blocks = (f"  kv_blocks unique={res.block_stats['unique_blocks']}"
+                      f"/dense={res.block_stats['dense_blocks']}")
         print(f"  width={width:2d}  best={res.scores[0]:8.3f} "
               f"sim={led.sim_time*1e3:8.1f}ms  "
               f"decisions: resident={led.fast_hits/total:.0%} "
-              f"stream={led.streams/total:.0%} slow={led.slow_runs/total:.0%}")
+              f"stream={led.streams/total:.0%} "
+              f"slow={led.slow_runs/total:.0%}{blocks}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest configuration (CI)")
+    main(smoke=ap.parse_args().smoke)

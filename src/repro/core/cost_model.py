@@ -176,6 +176,18 @@ class LatencyModel:
         return int(lo)
 
 
+def kv_read_entries(kv_len, kv_unique=None) -> float:
+    """KV entries one layer step reads from memory.  Dense layout: every
+    slot streams its own cache (``sum(kv_len)``).  Paged layout with
+    prefix sharing: ``kv_unique`` — the distinct written block entries —
+    overrides it, so a beam group's shared prompt is charged once.  The
+    attention *flop* term stays per-token (every beam's query still
+    scores against its full context); only the bytes dedup."""
+    if kv_unique is not None:
+        return float(kv_unique)
+    return float(np.sum(kv_len)) if np.ndim(kv_len) else float(kv_len)
+
+
 def link_idle_time(t_nonexpert: float, t_moe: float,
                    t_stream: float) -> float:
     """Seconds of one charged layer during which the host↔device link is

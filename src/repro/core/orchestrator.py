@@ -64,6 +64,7 @@ from repro.core.cost_model import (
     HardwareSpec,
     LatencyModel,
     expert_weight_bytes,
+    kv_read_entries,
     link_idle_time,
 )
 from repro.core.placement import (
@@ -88,9 +89,11 @@ from repro.kernels.ops import (
 )
 from repro.models.model import Model
 from repro.models.moe import route
+from repro.models.paged_kv import PAGE_SIZE, PagedLayerCache
 
 POLICIES = ("fiddler", "offload", "static_split")
 DISPATCH_MODES = ("grouped", "eager")
+KV_LAYOUTS = ("paged", "dense")
 
 # Default cap on Ledger.layer_log: a ring buffer of the most recent
 # per-layer charges — long serving sweeps used to grow it one dict per
@@ -190,19 +193,23 @@ def nonexpert_layer_bytes(cfg: ModelConfig, bytes_per_param: int = 2) -> int:
 
 
 def nonexpert_layer_time(cfg: ModelConfig, hw: HardwareSpec, n_tokens: int,
-                         kv_len, tier: str = "fast") -> float:
+                         kv_len, tier: str = "fast",
+                         kv_unique: Optional[float] = None) -> float:
     """``kv_len`` is either a scalar — one sequence's KV read once
     (prefill: queries stream against the same cache) — or an array of
     per-token KV lengths (decode: every row reads its own cache; the
     continuous path has mixed per-slot positions, the static path equal
-    ones)."""
+    ones).  ``kv_unique`` (paged layout) dedups the KV *bytes* read to
+    the distinct block entries — a beam group's shared prompt streams
+    from memory once — while the attention flop term stays per-token
+    (see cost_model.kv_read_entries)."""
     d, q, kv = cfg.d_model, cfg.q_dim, cfg.kv_dim
     wbytes = nonexpert_layer_bytes(cfg)
     if np.ndim(kv_len):
-        kv_read = float(np.sum(kv_len))   # each slot reads its own KV
-        attn_kv = kv_read
+        kv_read = kv_read_entries(kv_len, kv_unique)
+        attn_kv = float(np.sum(kv_len))   # per-beam score/value flops
     else:
-        kv_read = float(kv_len)
+        kv_read = kv_read_entries(kv_len, kv_unique)
         attn_kv = float(n_tokens) * float(kv_len)
     kv_bytes = 2 * kv_read * kv * 2  # K+V read, bf16
     flops = 2 * n_tokens * (d * q + 2 * d * kv + q * d)
@@ -323,6 +330,8 @@ class FiddlerEngine:
         rebalancer: Optional["Rebalancer"] = None,
         dispatch_mode: str = "grouped",
         async_prefetch: Optional[bool] = None,
+        kv_layout: str = "paged",
+        kv_block_size: int = PAGE_SIZE,
     ):
         """``params=None`` → pure-simulation mode (routing drawn from the
         profile; only the ledger advances).  ``timing_cfg`` lets the real
@@ -343,9 +352,20 @@ class FiddlerEngine:
         experts on a host worker pool.  ``async_prefetch`` (default:
         follows ``overlap``) makes rebalancer promotions ride idle link
         time instead of charging ``transfer_lat()`` serially — see
-        :class:`PrefetchQueue`."""
+        :class:`PrefetchQueue`.
+
+        ``kv_layout``: "paged" (default) stores serving KV in per-layer
+        block pools with refcounted copy-on-write block tables
+        (models/paged_kv.py) — slot forks and beam reshuffles are table
+        permutations with zero KV data movement, beams share their
+        prompt-prefix blocks, and decode KV bytes are charged by
+        *unique* blocks.  "dense" keeps the per-slot ring buffers
+        (models/kv_cache.py), bit-identical on fp32 and kept for
+        equivalence tests — the kv-layout analogue of
+        ``dispatch_mode="eager"``."""
         assert policy in POLICIES, policy
         assert dispatch_mode in DISPATCH_MODES, dispatch_mode
+        assert kv_layout in KV_LAYOUTS, kv_layout
         assert cfg.moe is not None, "Fiddler orchestrates MoE models"
         self.cfg = cfg
         self.policy = policy
@@ -356,6 +376,8 @@ class FiddlerEngine:
         self.rng = np.random.default_rng(seed)
         self.overlap = overlap
         self.dispatch_mode = dispatch_mode
+        self.kv_layout = kv_layout
+        self.kv_block_size = kv_block_size
         self.async_prefetch = (overlap if async_prefetch is None
                                else async_prefetch)
         self._prefetch = PrefetchQueue()
@@ -566,11 +588,11 @@ class FiddlerEngine:
         return plan
 
     def _charge(self, li: int, plan: LayerPlan, n_tokens: int,
-                kv_len: int) -> None:
+                kv_len: int, kv_unique: Optional[float] = None) -> None:
         tier = ("fast" if (self.policy != "static_split"
                            or li < self.n_fast_layers) else "slow")
         t_nonexp = nonexpert_layer_time(self.tcfg, self.hw, n_tokens,
-                                        kv_len, tier)
+                                        kv_len, tier, kv_unique=kv_unique)
         t_moe = plan.est_overlapped if self.overlap else plan.est_total
         if len(self._prefetch):
             # an in-flight promotion whose expert executes at this layer
@@ -648,8 +670,14 @@ class FiddlerEngine:
         self.ledger.migration_time += cost
         self.ledger.migration_bytes += bytes_moved
         if self.async_prefetch:
+            # rank in-flight transfers by live routing popularity: the
+            # promotion most likely to be routed next rides the link
+            # first (PR 4 follow-on — prefetch *ordering*)
+            probs = (self.rebalancer.profile.probabilities()
+                     if self.rebalancer is not None else None)
             for li, e in plan.promotes:
-                self._prefetch.push(li, e, self.lat.transfer_lat())
+                w = float(probs[li, e]) if probs is not None else 0.0
+                self._prefetch.push(li, e, self.lat.transfer_lat(), weight=w)
         else:
             self.ledger.sim_time += cost
             self.ledger.migration_exposed += cost
@@ -932,10 +960,84 @@ class FiddlerEngine:
         """Copy a freshly-prefilled batch-1 cache into row ``slot`` of the
         multi-slot caches (request joins the in-flight batch)."""
         for li in range(self.cfg.n_layers):
-            caches[li] = jax.tree.map(
-                lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
-                caches[li], slot_caches[li])
+            if isinstance(caches[li], PagedLayerCache):
+                caches[li].copy_in(slot, slot_caches[li])
+            else:
+                caches[li] = jax.tree.map(
+                    lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
+                    caches[li], slot_caches[li])
         return caches
+
+    def fork_slot(self, caches: List[Any], src: int, dst: int) -> List[Any]:
+        """Slot ``dst`` becomes a fork of ``src`` (beam-group member
+        creation).  Paged: a block-table copy with refcount bumps — the
+        beams *share* the prompt-prefix blocks until a divergent write
+        triggers copy-on-write.  Dense: a full KV row copy."""
+        for li in range(self.cfg.n_layers):
+            if isinstance(caches[li], PagedLayerCache):
+                caches[li].fork_slot(src, dst)
+            else:
+                caches[li] = jax.tree.map(
+                    lambda a: a.at[dst].set(a[src]), caches[li])
+        return caches
+
+    def reorder_slots(self, caches: List[Any], slots: List[int],
+                      src_of: List[int]) -> List[Any]:
+        """Beam reshuffle over a subset of slots: ``slots[i]`` continues
+        the sequence currently held by ``src_of[i]``.  Paged: a pure
+        block-table permutation + refcount bumps — **zero KV data
+        movement** (the pool arrays are untouched).  Dense: a gather/
+        scatter row copy."""
+        for li in range(self.cfg.n_layers):
+            if isinstance(caches[li], PagedLayerCache):
+                caches[li].reorder_slots(slots, src_of)
+            else:
+                di = jnp.asarray(slots)
+                si = jnp.asarray(src_of)
+                caches[li] = jax.tree.map(
+                    lambda a: a.at[di].set(a[si]), caches[li])
+        return caches
+
+    def reorder_cache(self, caches: List[Any], idx) -> List[Any]:
+        """Whole-batch beam reshuffle (row ``i`` continues ``idx[i]``) —
+        table-only under the paged layout."""
+        idx = [int(i) for i in np.asarray(idx)]
+        return self.reorder_slots(caches, list(range(len(idx))), idx)
+
+    def release_slot(self, caches: List[Any], slot: int) -> List[Any]:
+        """Return a retired slot's KV blocks to the pool (paged; dense
+        rows are simply overwritten by the next occupant)."""
+        for li in range(self.cfg.n_layers):
+            if isinstance(caches[li], PagedLayerCache):
+                caches[li].release_slot(slot)
+        return caches
+
+    def resize_decode_caches(self, caches: List[Any],
+                             n_slots: int) -> List[Any]:
+        """Grow/shrink the paged slot tables (slot autoscaling); the
+        serving layer's dense resize goes through the backend's
+        make-and-copy path instead."""
+        for li in range(self.cfg.n_layers):
+            assert isinstance(caches[li], PagedLayerCache), (
+                "resize_decode_caches is the paged path")
+            caches[li].resize(n_slots)
+        return caches
+
+    def kv_block_stats(self, caches: List[Any],
+                       slots: Optional[List[int]] = None
+                       ) -> Optional[Dict[str, int]]:
+        """Unique-vs-dense block accounting of the first layer's pool
+        (all layers share one table structure) — what the beam benchmark
+        reports.  None under the dense layout."""
+        if not caches or not isinstance(caches[0], PagedLayerCache):
+            return None
+        m = caches[0].meta
+        return {
+            "unique_blocks": m.blocks_in_use(slots),
+            "dense_blocks": m.dense_blocks(slots),
+            "unique_tokens": m.unique_tokens(slots),
+            "dense_tokens": m.dense_tokens(slots),
+        }
 
     def prefill_chunk(self, tokens: jnp.ndarray, caches: Optional[List[Any]],
                       pos_offset: int, max_seq: int
@@ -991,6 +1093,9 @@ class FiddlerEngine:
 
     def _init_layer_cache(self, li, B, max_seq):
         from repro.models import kv_cache as kvc
+        if self.kv_layout == "paged":
+            return PagedLayerCache(self.cfg, li, B, max_seq, jnp.float32,
+                                   block_size=self.kv_block_size)
         return kvc.init_attn_cache(self.cfg, li, B, max_seq, jnp.float32)
 
     def _run_layer(self, li, x, positions, mode, cache, max_seq, kv_len,
@@ -1001,14 +1106,23 @@ class FiddlerEngine:
         p = self.layer_params[li]
         h, cache = attention_block(
             p["attn"], rmsnorm(p["norm1"], x, cfg.norm_eps), positions, cfg,
-            li, mode=mode, cache=cache, max_seq=max_seq)
+            li, mode=mode, cache=cache, max_seq=max_seq, active=row_mask)
         x = x + h
         B, S, d = x.shape
         normed = rmsnorm(p["norm2"], x, cfg.norm_eps).reshape(-1, d)
         moe_out, counts, plan = self._run_moe_layer(li, normed,
                                                     row_mask=row_mask)
         n_real = B * S if row_mask is None else int(np.sum(row_mask))
-        self._charge(li, plan, n_tokens=n_real, kv_len=kv_len)
+        kv_unique = None
+        if (isinstance(cache, PagedLayerCache)
+                and mode in ("decode", "decode_multi")):
+            # paged decode reads each distinct block once — a beam
+            # group's shared prefix is charged a single memory pass
+            live = (None if row_mask is None
+                    else np.nonzero(np.asarray(row_mask, bool))[0])
+            kv_unique = cache.meta.unique_tokens(live)
+        self._charge(li, plan, n_tokens=n_real, kv_len=kv_len,
+                     kv_unique=kv_unique)
         x = x + moe_out.reshape(B, S, d)
         return x, cache
 
@@ -1057,11 +1171,15 @@ class FiddlerEngine:
             self._charge(li, plan, n_tokens=n_tokens, kv_len=kv_len)
         return self.ledger.sim_time - t0
 
-    def simulate_decode_multi(self, kv_lens: np.ndarray) -> float:
+    def simulate_decode_multi(self, kv_lens: np.ndarray,
+                              kv_unique: Optional[float] = None) -> float:
         """Charge one continuous-batching decode step: one token per live
         slot, each reading its own KV length.  Mirrors
         ``decode_step_multi``'s accounting without weights — the
-        ``SimulatedBackend`` serving path."""
+        ``SimulatedBackend`` serving path.  ``kv_unique`` (paged-layout
+        accounting, see cost_model.kv_read_entries) dedups the KV bytes
+        read to the distinct block entries — how simulated beam groups
+        charge their shared prompt prefix once."""
         kv_lens = np.asarray(kv_lens, np.int64)
         n = int(kv_lens.shape[0])
         assert n >= 1, "simulate_decode_multi needs at least one live slot"
@@ -1069,7 +1187,8 @@ class FiddlerEngine:
         for li in range(self.cfg.n_layers):
             counts = self._sample_counts(li, n)
             plan = self._decide(li, counts)
-            self._charge(li, plan, n_tokens=n, kv_len=kv_lens)
+            self._charge(li, plan, n_tokens=n, kv_len=kv_lens,
+                         kv_unique=kv_unique)
         self.ledger.tokens_out += n
         return self.ledger.sim_time - t0
 

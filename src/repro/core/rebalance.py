@@ -155,15 +155,19 @@ class Rebalancer:
 @dataclass
 class _Pending:
     """One in-flight promotion transfer: ``remaining`` link-seconds until
-    expert ``expert`` of layer ``layer`` is actually resident."""
+    expert ``expert`` of layer ``layer`` is actually resident.
+    ``weight`` is the expert's live routing popularity — the transmission
+    priority."""
 
     layer: int
     expert: int
     remaining: float
+    weight: float = 0.0
 
 
 class PrefetchQueue:
-    """FIFO of promotion transfers riding idle link time.
+    """Popularity-ordered queue of promotion transfers riding idle link
+    time.
 
     ``apply_migrations`` pushes each promotion's ``transfer_lat()`` here
     instead of charging it to ``sim_time``; the engine's per-layer charge
@@ -172,7 +176,14 @@ class PrefetchQueue:
     *drains* the queue with the layer's idle link seconds (layer
     wall-clock minus the time FAST_STREAM transfers keep the link busy) —
     that part is overlapped, hidden under compute the clock already
-    charged.  The link is a single serial resource, so draining is FIFO.
+    charged.
+
+    The link is a single serial resource, so entries transmit in queue
+    order — but the *order* is ours to choose: entries are kept sorted by
+    ``weight`` (the promoted expert's ``OnlineProfile`` popularity),
+    descending, so the promotion most likely to be routed next lands
+    first and is least likely to be forced into exposed serial time.
+    Equal weights (and the default ``weight=0``) preserve FIFO.
     """
 
     def __init__(self) -> None:
@@ -186,8 +197,19 @@ class PrefetchQueue:
         """Link-seconds of transfer still in flight."""
         return sum(p.remaining for p in self._q)
 
-    def push(self, layer: int, expert: int, seconds: float) -> None:
-        self._q.append(_Pending(int(layer), int(expert), float(seconds)))
+    def push(self, layer: int, expert: int, seconds: float,
+             weight: float = 0.0) -> None:
+        item = _Pending(int(layer), int(expert), float(seconds),
+                        float(weight))
+        # stable descending insert: after every entry with weight >= ours,
+        # so equal weights (including the default 0) keep arrival order.
+        # A part-sent head that gets displaced is simply paused — the
+        # remaining link-seconds are conserved, so the ledger accounting
+        # is unchanged.
+        i = len(self._q)
+        while i > 0 and self._q[i - 1].weight < item.weight:
+            i -= 1
+        self._q.insert(i, item)
 
     def force(self, layer: int, used) -> float:
         """Complete every pending transfer targeting ``layer`` whose

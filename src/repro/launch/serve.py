@@ -58,7 +58,21 @@ def main(argv=None):
                          "(default: off — static placement)")
     ap.add_argument("--rebalance-k", type=int, default=4,
                     help="max expert swaps per rebalance interval")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"],
+                    help="serving KV layout: paged (block pool + "
+                         "copy-on-write tables; beam forks/reshuffles are "
+                         "zero-copy) or dense ring buffers")
+    ap.add_argument("--beam-width", type=int, default=1,
+                    help=">1 submits every request as a gang-scheduled "
+                         "beam group of this width (continuous scheduler "
+                         "runs them alongside ordinary traffic)")
     args = ap.parse_args(argv)
+    if args.beam_width > 1 and args.beam_width > args.slots \
+            and args.scheduler == "continuous":
+        raise SystemExit(
+            f"--beam-width {args.beam_width} needs at least that many "
+            f"--slots (got {args.slots})")
     if args.rebalance_interval is not None and args.policy in (
             "model", "static_split"):
         raise SystemExit(
@@ -82,7 +96,8 @@ def main(argv=None):
                            expert_budget=cfg.n_layers * cfg.moe.n_experts // 4
                            if cfg.moe else 0,
                            rebalance_interval=args.rebalance_interval,
-                           rebalance_k=args.rebalance_k)
+                           rebalance_k=args.rebalance_k,
+                           kv_layout=args.kv_layout)
     if args.scheduler == "continuous":
         backend = (ModelBackend(model, params, max_seq=256) if fe is None
                    else FiddlerBackend(fe, max_seq=256))
@@ -116,12 +131,14 @@ def main(argv=None):
         slo = classes[int(rng.choice(len(classes), p=probs))]
         eng.submit(Request(rid=f"req{i}",
                            prompt=tok.encode(conv["text"])[:48],
-                           max_new_tokens=args.max_new, slo_class=slo))
+                           max_new_tokens=args.max_new, slo_class=slo,
+                           beam_width=args.beam_width))
     for r in eng.run():
         unit = "s(sim)" if args.policy != "model" else "s"
+        beam = (f" beams={r.beam_width}" if r.beam_width > 1 else "")
         print(f"{r.rid}[{r.slo_class}]: ttft={r.ttft:.4f}{unit} "
               f"latency={r.latency:.4f}{unit} tokens={len(r.output)} "
-              f"preempt={r.preemptions}")
+              f"preempt={r.preemptions}{beam}")
     if args.policy not in ("model",):
         led = eng.backend.ledger
         print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "

@@ -21,10 +21,12 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import kv_cache as kvc
 from repro.models.layers import Params, apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
+from repro.models.paged_kv import PagedLayerCache
 
 NEG_INF = -1e30
 
@@ -212,6 +214,7 @@ def attention_block(
     causal: bool = True,
     rope: bool = True,
     kv_chunk: Optional[int] = None,
+    active: Optional[np.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
     """Self-attention with optional cache. Returns (out, new_cache).
 
@@ -219,6 +222,15 @@ def attention_block(
     * prefill → fresh prompt at positions 0..S-1, writes the ring buffer.
     * decode  → one token; ``positions`` is (B, 1) with identical scalar
                 value per row (static-batched decode).
+
+    ``cache`` is either the dense ring-buffer pytree (kv_cache.py — the
+    jit-traceable layout) or a :class:`PagedLayerCache` (paged_kv.py):
+    paged caches write through their block table (copy-on-write on shared
+    blocks) and attention reads the gathered dense view, which keeps the
+    two layouts bit-identical on fp32.  ``active`` (host bool mask, paged
+    only) skips writes of padding rows so idle serving slots never
+    allocate blocks; the dense layout keeps its write-everything scatter
+    (idle rows are unread padding there).
     """
     B, S, _ = x.shape
     window = None
@@ -228,6 +240,7 @@ def attention_block(
         window = w
 
     q, k, v = qkv_proj(params, x, cfg, positions, rope=rope)
+    paged = isinstance(cache, PagedLayerCache)
 
     if mode == "train":
         out = chunked_attention(
@@ -236,7 +249,11 @@ def attention_block(
         new_cache = None
     elif mode == "prefill":
         assert cache is not None
-        new_cache = kvc.write_prefill(cache, k, v)
+        if paged:
+            cache.write_prefill(k, v)
+            new_cache = cache
+        else:
+            new_cache = kvc.write_prefill(cache, k, v)
         out = chunked_attention(
             q, k, v, positions, positions, causal=causal, window=window,
             attn_softcap=cfg.attn_softcap, kv_chunk=kv_chunk)
@@ -245,22 +262,37 @@ def attention_block(
         # attend against the whole cache (earlier chunks + this one; intra-
         # chunk causality falls out of the position mask)
         assert cache is not None
-        new_cache = kvc.write_prefill_chunk(cache, k, v, positions)
+        if paged:
+            cache.write_prefill_chunk(k, v, np.asarray(positions), active)
+            new_cache, kv_read = cache, cache.view()
+        else:
+            new_cache = kvc.write_prefill_chunk(cache, k, v, positions)
+            kv_read = new_cache
         out = decode_attention(
-            q, new_cache, positions, window=window,
+            q, kv_read, positions, window=window,
             attn_softcap=cfg.attn_softcap)
     elif mode == "decode":
         assert cache is not None and S == 1
-        new_cache = kvc.write_decode(cache, k, v, positions[0, 0])
+        if paged:
+            cache.write_decode(k, v, np.asarray(positions[:, 0]), active)
+            new_cache, kv_read = cache, cache.view()
+        else:
+            new_cache = kvc.write_decode(cache, k, v, positions[0, 0])
+            kv_read = new_cache
         out = decode_attention(
-            q, new_cache, positions, window=window,
+            q, kv_read, positions, window=window,
             attn_softcap=cfg.attn_softcap)
     elif mode == "decode_multi":
         # continuous batching: every row at its own position
         assert cache is not None and S == 1
-        new_cache = kvc.write_decode_multi(cache, k, v, positions[:, 0])
+        if paged:
+            cache.write_decode(k, v, np.asarray(positions[:, 0]), active)
+            new_cache, kv_read = cache, cache.view()
+        else:
+            new_cache = kvc.write_decode_multi(cache, k, v, positions[:, 0])
+            kv_read = new_cache
         out = decode_attention(
-            q, new_cache, positions, window=window,
+            q, kv_read, positions, window=window,
             attn_softcap=cfg.attn_softcap)
     else:
         raise ValueError(mode)

@@ -1,8 +1,17 @@
-"""KV / recurrent-state cache structures.
+"""KV / recurrent-state cache structures — the **dense** layout.
 
 Caches are plain pytrees (dict of arrays) so they flow through jit/pjit and
 can be sharded with NamedSharding.  Attention layers use a (possibly
 windowed) ring buffer; SSM/RG-LRU layers carry recurrent state.
+
+This dense per-slot layout is what the jitted monolithic ``Model`` traces
+(and what ``FiddlerEngine(kv_layout="dense")`` keeps for bit-identity
+equivalence tests).  The orchestrated serving path defaults to the
+**paged** layout in :mod:`repro.models.paged_kv` — a per-layer block pool
+with refcounted copy-on-write block tables, so beam-group slot forks and
+reshuffles move no KV data and beams share their prompt-prefix blocks.
+The two layouts are bit-identical on fp32: the paged gather view
+reproduces these ring buffers exactly.
 
 Layout (attention): per layer
     k: (B, W, n_kv, head_dim)

@@ -437,7 +437,12 @@ class Model:
     def reorder_cache(self, cache: Params, idx) -> Params:
         """Reorder the batch dimension of a cache (beam-search reshuffle).
         Block caches are scan-stacked (n_periods, B, …) → batch is axis 1;
-        tail caches are per-layer (B, …) → axis 0; cross_kv is stacked."""
+        tail caches are per-layer (B, …) → axis 0; cross_kv is stacked.
+
+        This is the dense layout's reshuffle — a full KV row gather.  The
+        orchestrated serving path's paged layout (models/paged_kv.py via
+        ``FiddlerEngine.reorder_cache``) does the same reshuffle as a
+        block-table permutation with zero KV data movement."""
         idx = jnp.asarray(idx)
         out = dict(cache)
         out["blocks"] = jax.tree.map(lambda a: jnp.take(a, idx, axis=1),
@@ -447,6 +452,40 @@ class Model:
         if "cross_kv" in cache:
             out["cross_kv"] = jax.tree.map(
                 lambda a: jnp.take(a, idx, axis=1), cache["cross_kv"])
+        return out
+
+    def fork_slot(self, cache: Params, src: int, dst: int) -> Params:
+        """Slot ``dst`` becomes a KV copy of ``src`` (beam-group member
+        creation on the dense layout — same axis contract as
+        ``write_slot``)."""
+        out = dict(cache)
+        out["blocks"] = jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]),
+                                     cache["blocks"])
+        out["tail"] = jax.tree.map(lambda a: a.at[dst].set(a[src]),
+                                   cache["tail"])
+        if "cross_kv" in cache:
+            out["cross_kv"] = jax.tree.map(
+                lambda a: a.at[:, dst].set(a[:, src]), cache["cross_kv"])
+        return out
+
+    def reorder_slots(self, cache: Params, slots, src_of) -> Params:
+        """Beam reshuffle over a slot subset: ``slots[i]`` continues the
+        sequence held by ``src_of[i]`` (sources may repeat; the gather of
+        the source rows happens before any scatter, so aliasing is
+        safe)."""
+        di = jnp.asarray(list(slots))
+        si = jnp.asarray(list(src_of))
+        out = dict(cache)
+        out["blocks"] = jax.tree.map(
+            lambda a: a.at[:, di].set(jnp.take(a, si, axis=1)),
+            cache["blocks"])
+        out["tail"] = jax.tree.map(
+            lambda a: a.at[di].set(jnp.take(a, si, axis=0)),
+            cache["tail"])
+        if "cross_kv" in cache:
+            out["cross_kv"] = jax.tree.map(
+                lambda a: a.at[:, di].set(jnp.take(a, si, axis=1)),
+                cache["cross_kv"])
         return out
 
     # ---- backbone -----------------------------------------------------------

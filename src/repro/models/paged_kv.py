@@ -1,0 +1,392 @@
+"""Paged (block) KV-cache layout with refcounted copy-on-write sharing.
+
+The dense layout in :mod:`repro.models.kv_cache` gives every decode slot a
+private ``(W, n_kv, head_dim)`` ring buffer, so a beam reshuffle must
+*copy* whole cache rows and beams of one group hold W duplicates of their
+shared prompt prefix.  This module splits each layer's KV into fixed-size
+**blocks** drawn from a per-layer pool:
+
+* ``k``/``v``/``pos`` pools of shape ``(n_blocks, block_size, ...)``;
+* a host-side :class:`BlockMeta` — per-slot **block table** mapping the
+  slot's logical window offsets to pool blocks, plus per-block
+  **refcounts** and a free list;
+* **copy-on-write**: a write into a block with refcount > 1 first moves
+  the writer onto a private copy, so sharing is transparent to numerics;
+* **fork** (``fork_slot``) and **reshuffle** (``reorder_slots``) are
+  table permutations + refcount bumps — zero KV data movement, which is
+  what makes beam search a first-class serving workload instead of a
+  cache-copy storm (paper Fig. 6 regime).
+
+Block 0 is a reserved *null* block: never allocated, always empty
+(``pos == -1`` everywhere), the target of every unmapped table entry —
+so gathering a table row always yields a well-formed dense view.
+
+Bit-identity contract: :meth:`PagedLayerCache.view` reproduces the dense
+ring buffer exactly — logical offset ``p % window`` lives at block
+``off // block_size``, lane ``off % block_size``, freshly mapped blocks
+are cleared to the dense init state (zeros / ``pos == -1``) — so
+attention over the gathered view is bit-identical on fp32 to the dense
+layout (tested in tests/test_paged_kv.py).
+
+:class:`BlockMeta` is deliberately standalone (no device arrays): the
+pure-simulation serving backend and the beam-search benchmark use it to
+account **unique** blocks — shared prefix bytes are charged once, which
+is what makes paper-scale simulated beam numbers honest (see
+``core/cost_model.nonexpert_layer_time(kv_unique=...)``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.kv_cache import layer_window
+
+# Tokens per KV block.  16 keeps the per-slot table small while a beam
+# group's shared prompt still spans many whole (shareable) blocks.
+PAGE_SIZE = 16
+
+# src tag for a freshly-mapped block (caller must clear it to the dense
+# init state); an int src means copy-on-write from that block.
+FRESH = "fresh"
+
+WritePlan = Tuple[int, int, int, int, int, Union[None, str, int]]
+
+
+class BlockMeta:
+    """Host-side block table + refcounts for one layer('s ring window).
+
+    All bookkeeping is numpy/python — no device data — so the same class
+    backs the real paged cache (:class:`PagedLayerCache`) and the
+    pure-simulation unique-block accounting.
+    """
+
+    def __init__(self, n_slots: int, window: int, block_size: int = PAGE_SIZE):
+        assert n_slots >= 1 and window >= 1, (n_slots, window)
+        bs = max(1, min(int(block_size), int(window)))
+        self.block_size = bs
+        self.window = int(window)
+        self.blocks_per_slot = -(-self.window // bs)
+        # worst case every slot owns a private copy of each of its blocks,
+        # so ``n_slots * blocks_per_slot`` (+ the null block) always
+        # suffices — COW never needs more than one owner per table entry.
+        self.n_blocks = 1 + n_slots * self.blocks_per_slot
+        self.table = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        self.ref = np.zeros(self.n_blocks, np.int32)
+        self.fill = np.zeros(self.n_blocks, np.int32)  # written lanes per block
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return int(self.table.shape[0])
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def mapped_blocks(self, slots: Optional[Sequence[int]] = None) -> np.ndarray:
+        t = self.table if slots is None else self.table[np.asarray(slots, int)]
+        u = np.unique(t)
+        return u[u > 0]
+
+    def blocks_in_use(self, slots: Optional[Sequence[int]] = None) -> int:
+        """Distinct mapped blocks — what the pool actually holds."""
+        return int(self.mapped_blocks(slots).size)
+
+    def dense_blocks(self, slots: Optional[Sequence[int]] = None) -> int:
+        """Block count a dense per-slot layout would hold (table entries
+        counted *with* multiplicity — shared blocks once per referent)."""
+        t = self.table if slots is None else self.table[np.asarray(slots, int)]
+        return int((t > 0).sum())
+
+    def unique_tokens(self, slots: Optional[Sequence[int]] = None) -> int:
+        """Written KV entries over distinct blocks: the number of K/V rows
+        one attention step actually has to read from memory — shared
+        prefix entries count once (the honest beam charging)."""
+        return int(self.fill[self.mapped_blocks(slots)].sum())
+
+    def dense_tokens(self, slots: Optional[Sequence[int]] = None) -> int:
+        """Written KV entries counted per slot (dense accounting)."""
+        t = self.table if slots is None else self.table[np.asarray(slots, int)]
+        return int(self.fill[t].sum())  # fill[0] == 0: null entries add 0
+
+    # -- allocation ---------------------------------------------------------
+    def _alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("KV block pool exhausted")
+        b = self._free.pop()
+        self.ref[b] = 1
+        self.fill[b] = 0
+        return b
+
+    def _unref(self, b: int) -> None:
+        if b <= 0:
+            return
+        self.ref[b] -= 1
+        assert self.ref[b] >= 0, b
+        if self.ref[b] == 0:
+            self.fill[b] = 0
+            self._free.append(b)
+
+    def _writable(self, slot: int, j: int) -> Tuple[int, Union[None, str, int]]:
+        """Make table entry ``(slot, j)`` exclusively owned; returns
+        ``(block, src)`` with src None (already exclusive), FRESH (newly
+        mapped — clear before writing) or the old block id (copy-on-write
+        — copy its data before writing)."""
+        b = int(self.table[slot, j])
+        if b == 0:
+            nb = self._alloc()
+            self.table[slot, j] = nb
+            return nb, FRESH
+        if self.ref[b] == 1:
+            return b, None
+        nb = self._alloc()
+        self.fill[nb] = self.fill[b]
+        self.ref[b] -= 1  # still >= 1: another slot keeps the original
+        self.table[slot, j] = nb
+        return nb, b
+
+    # -- slot lifecycle (the zero-copy operations) --------------------------
+    def release_slot(self, slot: int) -> None:
+        for b in self.table[slot]:
+            self._unref(int(b))
+        self.table[slot] = 0
+
+    def fork_slot(self, src: int, dst: int) -> None:
+        """dst becomes a copy-on-write alias of src: table row copy +
+        refcount bumps, zero data movement."""
+        if src == dst:
+            return
+        row = self.table[src].copy()
+        for b in row:
+            if b > 0:
+                self.ref[b] += 1
+        self.release_slot(dst)
+        self.table[dst] = row
+
+    def reorder_slots(self, slots: Sequence[int], src_of: Sequence[int]) -> None:
+        """Beam reshuffle: slot ``slots[i]`` continues the sequence held
+        by ``src_of[i]`` — a pure table permutation with refcount bumps
+        (sources may repeat or alias destinations)."""
+        slots = np.asarray(slots, int)
+        rows = self.table[np.asarray(src_of, int)].copy()
+        for b in rows.ravel():
+            if b > 0:
+                self.ref[b] += 1
+        for s in slots:
+            self.release_slot(int(s))
+        self.table[slots] = rows
+
+    def resize(self, n_slots: int) -> int:
+        """Grow/shrink the table to ``n_slots`` rows; returns how many
+        *new* pool blocks the owner must append to its device arrays."""
+        old = self.n_slots
+        if n_slots <= old:
+            for s in range(n_slots, old):
+                self.release_slot(s)
+            self.table = self.table[:n_slots].copy()
+            return 0
+        self.table = np.concatenate(
+            [self.table,
+             np.zeros((n_slots - old, self.blocks_per_slot), np.int32)])
+        need = n_slots * self.blocks_per_slot + 1 - self.n_blocks
+        if need <= 0:
+            return 0
+        start = self.n_blocks
+        self.n_blocks += need
+        self.ref = np.concatenate([self.ref, np.zeros(need, np.int32)])
+        self.fill = np.concatenate([self.fill, np.zeros(need, np.int32)])
+        self._free.extend(range(start, self.n_blocks))
+        return need
+
+    # -- writes -------------------------------------------------------------
+    def write_span(self, slot: int, start: int, end: int) -> List[WritePlan]:
+        """Plan the physical writes of logical positions ``[start, end)``
+        of ``slot`` (ring offsets ``p % window``; spans longer than the
+        window keep only the last ``window`` positions, like the dense
+        ring buffer).  Ensures every touched block is exclusively owned.
+        Returns ``(block, o0, o1, t0, t1, src)`` tuples: clipped-span
+        tokens ``[t0, t1)`` land in lanes ``[o0, o1)`` of ``block``; the
+        caller performs the FRESH clear / COW copy that ``src`` demands.
+        Pure-simulation users call this for the refcount/fill bookkeeping
+        and discard the plan."""
+        start = max(int(start), int(end) - self.window)
+        plans: List[WritePlan] = []
+        p, t = start, 0
+        while p < end:
+            off = p % self.window
+            j, o0 = divmod(off, self.block_size)
+            cap = min(self.block_size, self.window - j * self.block_size)
+            n = min(end - p, cap - o0)
+            b, src = self._writable(slot, j)
+            self.fill[b] = max(int(self.fill[b]), o0 + n)
+            plans.append((b, o0, o0 + n, t, t + n, src))
+            p += n
+            t += n
+        return plans
+
+    # -- invariants (property tests) ----------------------------------------
+    def check(self) -> None:
+        """Refcount/free-list consistency: every block's refcount equals
+        its table occurrences, freed blocks are exactly the unmapped
+        ones, and nothing leaks."""
+        occ = np.bincount(self.table.ravel(), minlength=self.n_blocks)
+        assert (self.ref[1:] == occ[1:]).all(), "refcount != table occurrences"
+        free = set(self._free)
+        assert len(free) == len(self._free), "free-list duplicates"
+        for b in range(1, self.n_blocks):
+            assert (self.ref[b] == 0) == (b in free), b
+        assert self.blocks_in_use() + self.n_free == self.n_blocks - 1
+
+
+class PagedLayerCache:
+    """One layer's paged KV: device block pools + a :class:`BlockMeta`.
+
+    Pool arrays are functionally updated jnp arrays; the table/refcounts
+    are host state, so this object lives in the orchestrator's python
+    serving loop (never inside jit) — the jitted monolithic ``Model``
+    keeps the dense layout."""
+
+    layout = "paged"
+
+    def __init__(self, cfg: ModelConfig, layer_idx: int, n_slots: int,
+                 max_seq: int, dtype=jnp.float32,
+                 block_size: int = PAGE_SIZE):
+        w = layer_window(cfg, layer_idx, max_seq)
+        self.meta = BlockMeta(n_slots, w, block_size)
+        bs = self.meta.block_size
+        nb = self.meta.n_blocks
+        self.k = jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype)
+        self.v = jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype)
+        self.pos = jnp.full((nb, bs), -1, jnp.int32)
+
+    @property
+    def window(self) -> int:
+        return self.meta.window
+
+    @property
+    def n_slots(self) -> int:
+        return self.meta.n_slots
+
+    # -- physical write helpers ---------------------------------------------
+    def _prepare(self, b: int, src) -> None:
+        """FRESH → clear to the dense init state (a recycled block holds
+        stale bytes); int → copy-on-write the source block's data."""
+        if src is None:
+            return
+        if src == FRESH:
+            self.k = self.k.at[b].set(0.0)
+            self.v = self.v.at[b].set(0.0)
+            self.pos = self.pos.at[b].set(-1)
+        else:
+            self.k = self.k.at[b].set(self.k[src])
+            self.v = self.v.at[b].set(self.v[src])
+            self.pos = self.pos.at[b].set(self.pos[src])
+
+    def write_decode(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                     pos: np.ndarray,
+                     active: Optional[np.ndarray] = None) -> None:
+        """One token per slot: k_new/v_new (B, 1, n_kv, hd), pos (B,).
+        Rows outside ``active`` are padding — skipped entirely, so idle
+        serving slots never allocate or COW blocks."""
+        pos = np.asarray(pos, np.int64)
+        rows = (range(pos.shape[0]) if active is None
+                else np.nonzero(np.asarray(active, bool))[0])
+        bids, lanes, ridx = [], [], []
+        for i in rows:
+            p = int(pos[i])
+            for b, o0, _o1, _t0, _t1, src in self.meta.write_span(i, p, p + 1):
+                self._prepare(b, src)
+                bids.append(b)
+                lanes.append(o0)
+                ridx.append(int(i))
+        if not bids:
+            return
+        bi, oi, ri = (np.asarray(bids), np.asarray(lanes), np.asarray(ridx))
+        self.k = self.k.at[bi, oi].set(k_new[ri, 0].astype(self.k.dtype))
+        self.v = self.v.at[bi, oi].set(v_new[ri, 0].astype(self.v.dtype))
+        self.pos = self.pos.at[bi, oi].set(
+            jnp.asarray(pos[ri], jnp.int32))
+
+    def write_prefill_chunk(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                            positions: np.ndarray,
+                            active: Optional[np.ndarray] = None) -> None:
+        """Append one contiguous chunk per slot: k_new/v_new (B, S, ...),
+        positions (B, S) int (each row contiguous ascending)."""
+        positions = np.asarray(positions, np.int64)
+        B, S = positions.shape
+        rows = (range(B) if active is None
+                else np.nonzero(np.asarray(active, bool))[0])
+        for i in rows:
+            p0, p1 = int(positions[i, 0]), int(positions[i, -1]) + 1
+            assert p1 - p0 == S, "chunk positions must be contiguous"
+            skip = max(p0, p1 - self.window) - p0  # ring: last window wins
+            for b, o0, o1, t0, t1, src in self.meta.write_span(i, p0, p1):
+                self._prepare(b, src)
+                self.k = self.k.at[b, o0:o1].set(
+                    k_new[i, skip + t0: skip + t1].astype(self.k.dtype))
+                self.v = self.v.at[b, o0:o1].set(
+                    v_new[i, skip + t0: skip + t1].astype(self.v.dtype))
+                self.pos = self.pos.at[b, o0:o1].set(
+                    jnp.arange(p0 + skip + t0, p0 + skip + t1, dtype=jnp.int32))
+
+    def write_prefill(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+        """Fresh prompt at positions 0..S-1 for every slot."""
+        B, S = k_new.shape[0], k_new.shape[1]
+        positions = np.broadcast_to(np.arange(S, dtype=np.int64)[None], (B, S))
+        self.write_prefill_chunk(k_new, v_new, positions)
+
+    # -- reads ---------------------------------------------------------------
+    def view(self) -> dict:
+        """The dense ``{"k", "v", "pos"}`` view the attention kernels
+        consume, gathered through the block table — bit-identical to the
+        dense ring buffer's arrays."""
+        tbl = jnp.asarray(self.meta.table)          # (B, blocks_per_slot)
+        B = tbl.shape[0]
+        w = self.window
+        k = self.k[tbl].reshape(B, -1, *self.k.shape[2:])[:, :w]
+        v = self.v[tbl].reshape(B, -1, *self.v.shape[2:])[:, :w]
+        pos = self.pos[tbl].reshape(B, -1)[:, :w]
+        return {"k": k, "v": v, "pos": pos}
+
+    # -- slot lifecycle -------------------------------------------------------
+    def fork_slot(self, src: int, dst: int) -> None:
+        self.meta.fork_slot(src, dst)           # zero KV data movement
+
+    def reorder_slots(self, slots, src_of) -> None:
+        self.meta.reorder_slots(slots, src_of)  # zero KV data movement
+
+    def release_slot(self, slot: int) -> None:
+        self.meta.release_slot(slot)
+
+    def copy_in(self, slot: int, src: "PagedLayerCache",
+                src_slot: int = 0) -> None:
+        """Splice a freshly-prefilled staging cache's slot into ``slot``
+        (continuous-batching join) — block-granular data copy, the paged
+        counterpart of the dense row copy in ``write_slot``."""
+        assert src.meta.block_size == self.meta.block_size, "page mismatch"
+        self.meta.release_slot(slot)
+        for j, sb in enumerate(src.meta.table[src_slot]):
+            sb = int(sb)
+            if sb == 0:
+                continue
+            b, how = self.meta._writable(slot, j)
+            assert how == FRESH, how  # the row was just released
+            self.k = self.k.at[b].set(src.k[sb].astype(self.k.dtype))
+            self.v = self.v.at[b].set(src.v[sb].astype(self.v.dtype))
+            self.pos = self.pos.at[b].set(src.pos[sb])
+            self.meta.fill[b] = src.meta.fill[sb]
+
+    def resize(self, n_slots: int) -> None:
+        need = self.meta.resize(n_slots)
+        if need:
+            self.k = jnp.concatenate(
+                [self.k, jnp.zeros((need,) + self.k.shape[1:], self.k.dtype)])
+            self.v = jnp.concatenate(
+                [self.v, jnp.zeros((need,) + self.v.shape[1:], self.v.dtype)])
+            self.pos = jnp.concatenate(
+                [self.pos, jnp.full((need,) + self.pos.shape[1:], -1,
+                                    self.pos.dtype)])

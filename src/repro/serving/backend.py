@@ -11,6 +11,10 @@ extracts the surface both schedulers need —
   cache that joins the multi-slot cache via ``write_slot``),
 * a **multi-slot decode step** (every slot at its own position, with an
   active mask so idle slots are padding, not load),
+* **slot lineage** for gang-scheduled beam groups — ``fork_slot`` /
+  ``reorder_slots`` / ``release_slot`` (+ ``block_stats``): block-table
+  aliases and permutations under the paged KV layout (zero data
+  movement), row copies under dense layouts,
 * **grouped prefill/decode** (the static-batch path),
 
 — so either scheduler runs over either execution engine.  TTFT/ITL
@@ -100,6 +104,34 @@ class ServingBackend:
         """One decode step over all slots.  tokens/pos/active: (n_slots,).
         Returns ((n_slots, V) logits, updated cache)."""
         raise NotImplementedError
+
+    # -- slot lineage (beam groups) ------------------------------------------
+    def fork_slot(self, cache: Any, src: int, dst: int) -> Any:
+        """Slot ``dst`` becomes a copy of ``src`` — beam-group member
+        creation after the shared prompt prefill.  Paged-KV backends
+        implement this as a block-table alias (copy-on-write, zero KV
+        data movement); dense backends copy the row."""
+        raise NotImplementedError
+
+    def reorder_slots(self, cache: Any, slots: Sequence[int],
+                      src_of: Sequence[int]) -> Any:
+        """Beam reshuffle: ``slots[i]`` continues the sequence held by
+        ``src_of[i]`` (sources may repeat).  Paged: table permutation +
+        refcount bumps only."""
+        raise NotImplementedError
+
+    def release_slot(self, cache: Any, slot: int) -> Any:
+        """A retired/evicted request leaves ``slot``: paged backends
+        return its KV blocks to the pool (refcount decrements).  Default:
+        no-op — dense rows are just overwritten by the next occupant."""
+        return cache
+
+    def block_stats(self, cache: Any,
+                    slots: Optional[Sequence[int]] = None
+                    ) -> Optional[dict]:
+        """Unique-vs-dense KV block accounting for ``slots`` (paged
+        backends; None otherwise) — what the beam benchmark reports."""
+        return None
 
     # -- group API (static batching) ----------------------------------------
     def prefill_group(self, prompts: np.ndarray
@@ -202,6 +234,12 @@ class ModelBackend(ServingBackend):
             jnp.asarray(pos, jnp.int32))
         return np.asarray(logits), cache
 
+    def fork_slot(self, cache, src, dst):
+        return self.model.fork_slot(cache, src, dst)
+
+    def reorder_slots(self, cache, slots, src_of):
+        return self.model.reorder_slots(cache, slots, src_of)
+
     # group API
     def prefill_group(self, prompts):
         return self._prefill_grp(self.params, jnp.asarray(prompts, jnp.int32))
@@ -264,11 +302,30 @@ class FiddlerBackend(ServingBackend):
     def write_slot(self, cache, slot_cache, slot):
         return self.engine.write_slot(cache, slot_cache, slot)
 
+    def resize_cache(self, cache, n_slots):
+        if self.engine.kv_layout == "paged":
+            # block tables grow/shrink in place; the pool only ever grows
+            return self.engine.resize_decode_caches(cache, n_slots)
+        return super().resize_cache(cache, n_slots)
+
     def decode_slots(self, cache, tokens, pos, active):
         logits, cache = self.engine.decode_step_multi(
             cache, jnp.asarray(tokens, jnp.int32)[:, None], pos,
             self.max_seq, active=active)
         return np.asarray(logits), cache
+
+    def fork_slot(self, cache, src, dst):
+        return self.engine.fork_slot(cache, src, dst)
+
+    def reorder_slots(self, cache, slots, src_of):
+        return self.engine.reorder_slots(cache, list(slots), list(src_of))
+
+    def release_slot(self, cache, slot):
+        return self.engine.release_slot(cache, slot)
+
+    def block_stats(self, cache, slots=None):
+        return self.engine.kv_block_stats(
+            cache, None if slots is None else list(slots))
 
     # group API
     def prefill_group(self, prompts):
@@ -296,7 +353,16 @@ class SimulatedBackend(ServingBackend):
 
     Logits are a fixed one-hot on a non-EOS token, so greedy decoding
     always runs each request to its ``max_new_tokens`` — the load pattern,
-    not the text, is what the simulation measures."""
+    not the text, is what the simulation measures.
+
+    KV accounting mirrors the paged layout: the cache carries a
+    :class:`BlockMeta` (models/paged_kv.py) — block table, refcounts,
+    copy-on-write — with no device data, so slot forks/reshuffles are
+    table-only and every decode step is charged by *unique* block entries
+    (``simulate_decode_multi(kv_unique=...)``).  Unforked workloads have
+    ``unique == sum(kv_len)`` exactly, so non-beam sweeps
+    (BENCH_serve_load.json) are unchanged; beam groups charge their
+    shared prompt prefix once — the honest paper-scale beam story."""
 
     FAKE_TOKEN = 5  # != EOS_ID(2), != PAD_ID(0)
 
@@ -327,12 +393,16 @@ class SimulatedBackend(ServingBackend):
         row[self.FAKE_TOKEN] = 1.0
         return row if n is None else np.tile(row, (n, 1))
 
-    # slot API — caches are just slot counts; only the ledger matters
+    # slot API — caches carry slot count + block-table metadata; only the
+    # ledger (and the table bookkeeping that feeds its KV charging) matters
     def make_cache(self, n_slots: int) -> Any:
-        return {"n_slots": n_slots}
+        from repro.models.paged_kv import BlockMeta
+        return {"n_slots": n_slots,
+                "meta": BlockMeta(n_slots, self.max_seq)}
 
     def resize_cache(self, cache: Any, n_slots: int) -> Any:
-        return {"n_slots": n_slots}
+        cache["meta"].resize(n_slots)
+        return {"n_slots": n_slots, "meta": cache["meta"]}
 
     def prefill(self, prompt):
         n = len(list(prompt))
@@ -345,13 +415,41 @@ class SimulatedBackend(ServingBackend):
         return self._logits(), {"staged": pos_offset + n}
 
     def write_slot(self, cache, slot_cache, slot):
+        meta = cache["meta"]
+        meta.release_slot(slot)
+        meta.write_span(slot, 0, int(slot_cache["staged"]))
         return cache
 
     def decode_slots(self, cache, tokens, pos, active):
         active = np.asarray(active, bool)
+        live = np.nonzero(active)[0]
+        meta = cache["meta"]
+        for i in live:
+            p = int(pos[i])
+            meta.write_span(int(i), p, p + 1)
         kv_lens = np.asarray(pos)[active].astype(np.int64) + 1
-        self.engine.simulate_decode_multi(kv_lens)
+        self.engine.simulate_decode_multi(
+            kv_lens, kv_unique=meta.unique_tokens(live))
         return self._logits(len(active)), cache
+
+    def fork_slot(self, cache, src, dst):
+        cache["meta"].fork_slot(src, dst)
+        return cache
+
+    def reorder_slots(self, cache, slots, src_of):
+        cache["meta"].reorder_slots(list(slots), list(src_of))
+        return cache
+
+    def release_slot(self, cache, slot):
+        cache["meta"].release_slot(slot)
+        return cache
+
+    def block_stats(self, cache, slots=None):
+        m = cache["meta"]
+        return {"unique_blocks": m.blocks_in_use(slots),
+                "dense_blocks": m.dense_blocks(slots),
+                "unique_tokens": m.unique_tokens(slots),
+                "dense_tokens": m.dense_tokens(slots)}
 
     # group API (static scheduler over the simulation)
     def prefill_group(self, prompts):

@@ -1,14 +1,31 @@
-"""Beam-search decoding (paper scenario ⓒ).
+"""Beam-search decoding (paper scenario ⓒ, the 11.57× Fig. 6 result).
 
 The beams form a decode batch of width W; per MoE layer the router sees
 W tokens, so per-expert input sizes grow with the width — exactly the
-regime where Fiddler's planner beats llama.cpp-style static splits (the
-paper's 11.57× result).  Works over either the monolithic ``Model`` or the
-``FiddlerEngine`` orchestrator (same decode-step signature shape).
+regime where Fiddler's planner beats llama.cpp-style static splits.
+
+Beam search is now a first-class *serving* workload riding the common
+``ServingBackend`` slot API instead of a standalone cache-copying loop:
+
+* the prompt is prefilled **once** and the other beams are created by
+  ``fork_slot`` — under the paged KV layout (models/paged_kv.py) a fork
+  is a block-table alias, so all beams *share* the prompt-prefix blocks;
+* every reshuffle is ``reorder_slots`` — a block-table permutation plus
+  refcount bumps, **zero KV data movement** (copy-on-write only when a
+  beam's next token diverges into a shared block);
+* the serving engines schedule a beam group as a gang: admitted,
+  preempted and re-admitted atomically (``Request(beam_width=W)`` through
+  ``ServingEngine``/``ContinuousEngine``).
+
+:func:`beam_search_slots` is the gang kernel both engines use;
+:func:`beam_search_fiddler` wraps it over a ``FiddlerBackend`` (kept for
+the examples/back-compat); :func:`beam_search_model` is the monolithic
+jitted reference (capacity-sufficient regime, dense cache reshuffles).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,23 +36,88 @@ from repro.serving.sampler import log_softmax
 
 @dataclass
 class BeamResult:
-    tokens: np.ndarray      # (width, n_new)
+    tokens: np.ndarray      # (width, n_new), scores-descending
     scores: np.ndarray      # (width,)
+    times: Optional[List[float]] = field(default=None)  # backend clock/token
+    block_stats: Optional[dict] = None  # unique-vs-dense KV blocks (paged)
 
 
-def _gather_cache(cache, idx: np.ndarray):
-    """Reorder the batch dimension of every cache leaf after beam reshuffle."""
-    arr = jnp.asarray(idx)
+def _top_w(scores: np.ndarray, logp: np.ndarray, width: int):
+    """Standard beam extension: (W,) scores + (W, V) log-probs → the top
+    ``width`` (parent, token, score) triples, score-descending."""
+    cand = scores[:, None] + logp
+    flat = cand.reshape(-1)
+    top = np.argsort(-flat)[:width]
+    beam_idx, tok_idx = np.divmod(top, logp.shape[-1])
+    return beam_idx, tok_idx.astype(np.int32), flat[top]
 
-    def g(leaf):
-        return jnp.take(leaf, arr, axis=0) if hasattr(leaf, "ndim") and leaf.ndim else leaf
 
-    return jax.tree.map(g, cache)
+def beam_search_slots(backend, prompt: Sequence[int], width: int,
+                      n_new: int, *,
+                      prefill_chunk: Optional[int] = None) -> BeamResult:
+    """Gang-scheduled beam search over any ``ServingBackend``.
+
+    One shared prompt prefill, ``width - 1`` slot forks, then batched
+    decode with table-only reshuffles.  Slots are released at the end, so
+    the backend's block pool returns to its pre-call state."""
+    prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
+    S = len(prompt)
+    cache = backend.make_cache(width)
+    if prefill_chunk is None:
+        logits, staging = backend.prefill(prompt)
+    else:
+        staging, done = None, 0
+        while done < S:
+            chunk = prompt[done: done + prefill_chunk]
+            logits, staging = backend.prefill_chunk(staging, chunk, done)
+            done += len(chunk)
+    cache = backend.write_slot(cache, staging, 0)
+    for j in range(1, width):
+        cache = backend.fork_slot(cache, 0, j)  # shared-prefix alias
+
+    logp = np.asarray(log_softmax(jnp.asarray(logits)[None]))[0]  # (V,)
+    first = np.argsort(-logp)[:width]
+    scores = logp[first]
+    tokens = first[:, None].astype(np.int32)    # (W, 1)
+    times = [backend.clock()]
+
+    for step in range(1, n_new):
+        pos = np.full(width, S + step - 1, np.int32)
+        logits, cache = backend.decode_slots(
+            cache, tokens[:, -1].astype(np.int32), pos,
+            np.ones(width, bool))
+        lp = np.asarray(log_softmax(jnp.asarray(logits)))
+        beam_idx, tok_idx, scores = _top_w(scores, lp, width)
+        tokens = np.concatenate([tokens[beam_idx], tok_idx[:, None]], axis=1)
+        # the reshuffle: slot i continues beam beam_idx[i] — table-only
+        # (zero KV copies) on paged backends
+        cache = backend.reorder_slots(cache, list(range(width)),
+                                      [int(b) for b in beam_idx])
+        times.append(backend.clock())
+
+    stats = backend.block_stats(cache, list(range(width)))
+    for j in range(width):
+        cache = backend.release_slot(cache, j)
+    return BeamResult(tokens=tokens, scores=scores, times=times,
+                      block_stats=stats)
+
+
+def beam_search_fiddler(engine, prompt: np.ndarray, width: int, n_new: int,
+                        max_seq: int) -> BeamResult:
+    """Beam search through the Fiddler orchestrator (real numerics +
+    simulated-latency ledger), on the gang-scheduled slot path."""
+    from repro.serving.backend import FiddlerBackend
+
+    backend = FiddlerBackend(engine, max_seq=max_seq)
+    return beam_search_slots(backend, np.asarray(prompt).reshape(-1),
+                             width, n_new)
 
 
 def beam_search_model(model, params, prompt: np.ndarray, width: int,
                       n_new: int, max_seq: int) -> BeamResult:
-    """prompt: (1, S) int32.  Standard length-normalised beam search."""
+    """prompt: (1, S) int32.  Monolithic jitted reference: beams are a
+    static batch, reshuffles gather whole cache rows
+    (``Model.reorder_cache`` — the dense layout's copying reshuffle)."""
     S = prompt.shape[1]
     prompts = np.repeat(prompt, width, axis=0)  # (W, S)
     prefill = jax.jit(lambda p, t: model.prefill(p, t, max_seq))
@@ -43,7 +125,6 @@ def beam_search_model(model, params, prompt: np.ndarray, width: int,
 
     logits, cache = prefill(params, jnp.asarray(prompts))
     logp = np.asarray(log_softmax(logits))  # (W, V)
-    V = logp.shape[-1]
     # first step: distinct top-W continuations of beam 0
     first = np.argsort(-logp[0])[:width]
     scores = logp[0, first]
@@ -54,41 +135,7 @@ def beam_search_model(model, params, prompt: np.ndarray, width: int,
         logits, cache = decode(params, cache,
                                jnp.asarray(tokens[:, -1:]), jnp.int32(pos))
         lp = np.asarray(log_softmax(logits))  # (W, V)
-        cand = scores[:, None] + lp           # (W, V)
-        flat = cand.reshape(-1)
-        top = np.argsort(-flat)[:width]
-        beam_idx, tok_idx = np.divmod(top, V)
-        scores = flat[top]
-        tokens = np.concatenate(
-            [tokens[beam_idx], tok_idx[:, None].astype(np.int32)], axis=1)
+        beam_idx, tok_idx, scores = _top_w(scores, lp, width)
+        tokens = np.concatenate([tokens[beam_idx], tok_idx[:, None]], axis=1)
         cache = model.reorder_cache(cache, beam_idx)
-    return BeamResult(tokens=tokens, scores=scores)
-
-
-def beam_search_fiddler(engine, prompt: np.ndarray, width: int, n_new: int,
-                        max_seq: int) -> BeamResult:
-    """Beam search through the Fiddler orchestrator (real numerics +
-    simulated-latency ledger)."""
-    S = prompt.shape[1]
-    prompts = np.repeat(prompt, width, axis=0)
-    logits, caches = engine.prefill(jnp.asarray(prompts), max_seq)
-    logp = np.asarray(log_softmax(logits))
-    V = logp.shape[-1]
-    first = np.argsort(-logp[0])[:width]
-    scores = logp[0, first]
-    tokens = first[:, None].astype(np.int32)
-
-    for step in range(1, n_new):
-        pos = S + step - 1
-        logits, caches = engine.decode_step(
-            caches, jnp.asarray(tokens[:, -1:]), pos, max_seq)
-        lp = np.asarray(log_softmax(logits))
-        cand = scores[:, None] + lp
-        flat = cand.reshape(-1)
-        top = np.argsort(-flat)[:width]
-        beam_idx, tok_idx = np.divmod(top, V)
-        scores = flat[top]
-        tokens = np.concatenate(
-            [tokens[beam_idx], tok_idx[:, None].astype(np.int32)], axis=1)
-        caches = [_gather_cache(c, beam_idx) for c in caches]
     return BeamResult(tokens=tokens, scores=scores)

@@ -28,17 +28,30 @@ carrying their generated tokens and are re-admitted through the (chunked)
 prefill path: the prompt plus all-but-the-last emitted token is
 re-prefilled, then decoding resumes from the last token — so greedy
 outputs are preemption-invariant and in-flight decodes never stall.
+
+**Beam groups** (``Request(beam_width=W)``) are gang-scheduled: the
+group claims W slots atomically (or waits), the prompt is prefilled once
+into the lead slot and the other beams are ``fork_slot`` aliases — under
+the paged KV layout the beams *share* their prompt-prefix blocks — and
+each decode step ends with a beam reshuffle via ``reorder_slots`` (a
+block-table permutation: zero KV data movement).  Preemption is atomic
+too: evicting any member returns the whole group (with its per-beam
+tokens and scores) to the queue; re-admission re-prefills every beam and
+resumes the search exactly where it stopped.  Beam groups interleave
+freely with ordinary requests in the same decode batch.
 """
 from __future__ import annotations
 
 import warnings
-from dataclasses import dataclass
-from typing import Any, List, Optional
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import EOS_ID, PAD_ID
 from repro.serving.backend import ServingBackend, as_backend
+from repro.serving.beam_search import _top_w
 from repro.serving.engine import Request
 from repro.serving.policy import (
     QueueView,
@@ -46,7 +59,7 @@ from repro.serving.policy import (
     SlotView,
     get_policy,
 )
-from repro.serving.sampler import greedy
+from repro.serving.sampler import greedy, log_softmax
 
 # EWMA weight for the inter-arrival-gap estimate feeding
 # SchedulerView.arrival_rate (AutoscalePolicy's input).
@@ -54,15 +67,31 @@ RATE_EWMA_ALPHA = 0.3
 
 
 @dataclass
+class _BeamGroup:
+    """Gang state of one in-flight beam group: W slots decoding in
+    lockstep, reshuffled together each step."""
+    req: Request
+    slots: List[int]                      # member slot indices (lead first)
+    scores: Optional[np.ndarray] = None   # (W,) cumulative log-probs
+    tokens: List[List[int]] = field(default_factory=list)  # per-beam emitted
+
+    def ready(self, slots: List["_Slot"]) -> bool:
+        """All members prefilled and decoding — the gang barrier."""
+        return all(slots[i].phase == "decode" for i in self.slots)
+
+
+@dataclass
 class _Slot:
     req: Optional[Request] = None
-    phase: str = "idle"        # idle | prefill | decode
+    phase: str = "idle"        # idle | prefill | reserved | decode
     pos: int = 0               # next decode position
     last_token: int = 0
     steps_left: int = 0
     staging: Any = None        # batch-1 cache being chunk-prefilled
     prefilled: int = 0         # prompt tokens already processed
     started: Optional[float] = None  # backend-clock admission time
+    group: Optional[_BeamGroup] = None  # beam-gang membership
+    resume_seq: Optional[List[int]] = None  # per-beam re-prefill sequence
 
 
 class ContinuousEngine:
@@ -113,6 +142,11 @@ class ContinuousEngine:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} >= "
                 f"max_seq {self.max_seq} leaves no decode budget")
+        if req.beam_width > self.n_slots:
+            raise ValueError(
+                f"request {req.rid}: beam_width {req.beam_width} exceeds "
+                f"the slot pool ({self.n_slots}) — the gang can never be "
+                f"admitted")
         if req.arrival is None:
             req.arrival = self.clock()
         self.queue.append(req)
@@ -126,9 +160,20 @@ class ContinuousEngine:
         now = self.clock()
         q = tuple(QueueView.from_request(i, r)
                   for i, r in enumerate(self.queue))
+        def _phase(sl: _Slot) -> str:
+            # a gang member that finished its re-prefill while siblings
+            # are still resuming is NOT decoding yet (the gang barrier
+            # holds it out of the batch) — and it is not evictable either
+            # (_evict refuses non-ready gangs), so don't advertise it to
+            # policies as a preemption candidate
+            if (sl.group is not None and sl.phase == "decode"
+                    and not sl.group.ready(self.slots)):
+                return "resume"
+            return sl.phase
+
         s = tuple(
             SlotView(index=i, rid=sl.req.rid if sl.req else None,
-                     phase=sl.phase,
+                     phase=_phase(sl),
                      priority=sl.req.effective_priority if sl.req else 0,
                      slo_class=sl.req.slo_class if sl.req else "standard",
                      deadline=sl.req.deadline if sl.req else None,
@@ -136,7 +181,9 @@ class ContinuousEngine:
                      prompt_len=len(sl.req.prompt) if sl.req else 0,
                      emitted=len(sl.req.output) if sl.req else 0,
                      steps_left=sl.steps_left, started=sl.started,
-                     arrival=sl.req.arrival if sl.req else None)
+                     arrival=sl.req.arrival if sl.req else None,
+                     gang=sl.group.req.rid if sl.group else None,
+                     gang_size=len(sl.group.slots) if sl.group else 1)
             for i, sl in enumerate(self.slots))
         return SchedulerView(
             clock=now, queue=q, slots=s,
@@ -165,6 +212,16 @@ class ContinuousEngine:
     def _autoscale(self) -> None:
         target = int(self.policy.target_slots(self._view()))
         target = max(1, min(self.n_slots, target))
+        # gang-admission floor: a beam group can never fit in fewer live
+        # slots than its width, so an arrived gang raises the pool to its
+        # width (bounded by n_slots) — otherwise a conservative policy
+        # target would deadlock it in the queue
+        now = self.clock()
+        gangs = [r.beam_width for r in self.queue
+                 if r.beam_width > 1
+                 and (r.arrival is None or r.arrival <= now)]
+        if gangs:
+            target = max(target, min(max(gangs), self.n_slots))
         if target > self._alloc:
             self.cache = self.backend.resize_cache(self.cache, target)
             self._alloc = target
@@ -172,13 +229,32 @@ class ContinuousEngine:
 
     def _evict(self, i: int) -> None:
         """Return slot ``i``'s request to the queue carrying its emitted
-        tokens; re-admission resumes it via the (chunked) prefill path."""
+        tokens; re-admission resumes it via the (chunked) prefill path.
+        A beam-gang member evicts the *whole group* atomically: the
+        per-beam tokens and scores are stashed on the request and every
+        member slot is released."""
         slot = self.slots[i]
-        if slot.req is None or slot.phase != "decode":
+        if slot.req is None:
+            return
+        if slot.group is not None:
+            grp = slot.group
+            if not grp.ready(self.slots):
+                return  # gangs are only preemptable once fully decoding
+            req = grp.req
+            req.preemptions += 1
+            req.beam_resume = {"tokens": [list(t) for t in grp.tokens],
+                               "scores": np.asarray(grp.scores).copy()}
+            for si in grp.slots:
+                self.cache = self.backend.release_slot(self.cache, si)
+                self.slots[si] = _Slot()
+            self.queue.append(req)
+            return
+        if slot.phase != "decode":
             return  # policies may only preempt decoding slots
         req = slot.req
         req.preemptions += 1
         self.queue.append(req)
+        self.cache = self.backend.release_slot(self.cache, i)
         self.slots[i] = _Slot()
 
     def _preempt(self) -> None:
@@ -187,6 +263,33 @@ class ContinuousEngine:
                 self._evict(int(i))
 
     # ------------------------------------------------------------------
+    def _admit_gang(self, req: Request, slots: List[int],
+                    now: float) -> None:
+        """Claim ``slots`` for a beam group atomically.  Fresh groups put
+        the lead slot into prefill (one shared prompt prefill; members
+        are forked from it on completion); resumed groups re-prefill
+        every beam's own sequence, then the gang barrier releases them
+        into lockstep decode together."""
+        grp = _BeamGroup(req=req, slots=list(slots))
+        resume = req.beam_resume
+        for j, i in enumerate(slots):
+            slot = self.slots[i]
+            slot.req = req
+            slot.group = grp
+            slot.staging = None
+            slot.prefilled = 0
+            slot.started = now
+            if resume is None:
+                slot.phase = "prefill" if j == 0 else "reserved"
+            else:
+                beam = resume["tokens"][j]
+                slot.phase = "prefill"
+                slot.resume_seq = list(req.prompt) + list(beam[:-1])
+        if resume is not None:
+            grp.tokens = [list(t) for t in resume["tokens"]]
+            grp.scores = np.asarray(resume["scores"]).copy()
+            req.beam_resume = None
+
     def _admit(self) -> None:
         now = self.clock()
         free = [i for i in range(self.slot_limit)
@@ -204,6 +307,13 @@ class ContinuousEngine:
             if id(req) in chosen or (req.arrival is not None
                                      and req.arrival > now):
                 continue  # not arrived (or duplicate index): skip
+            if req.beam_width > 1:
+                if len(free) < req.beam_width:
+                    continue  # gang admission: all W slots or none
+                chosen.add(id(req))
+                self._admit_gang(req, free[: req.beam_width], now)
+                free = free[req.beam_width:]
+                continue
             chosen.add(id(req))
             i = free.pop(0)
             slot = self.slots[i]
@@ -221,6 +331,47 @@ class ContinuousEngine:
         produced by the next decode step)."""
         return list(req.prompt) + list(req.output[:-1])
 
+    def _activate_group(self, lead: int, logits: np.ndarray) -> None:
+        """The lead slot's shared prompt prefill finished: pick the top-W
+        distinct continuations of beam 0, fork the lead slot's KV into
+        every member (block-table aliases under the paged layout — the
+        beams share the prompt prefix) and release the gang into decode."""
+        slot = self.slots[lead]
+        grp, req = slot.group, slot.req
+        W = len(grp.slots)
+        logp = np.asarray(log_softmax(jnp.asarray(logits)[None]))[0]
+        first = np.argsort(-logp)[:W]
+        grp.scores = logp[first]
+        grp.tokens = [[int(t)] for t in first]
+        now = self.clock()
+        req.ttft = now - req.arrival
+        req.token_times.append(now)
+        S = len(req.prompt)
+        for j, si in enumerate(grp.slots):
+            if si != lead:
+                self.cache = self.backend.fork_slot(self.cache, lead, si)
+            s = self.slots[si]
+            s.phase = "decode"
+            s.pos = S
+            s.last_token = grp.tokens[j][0]
+            s.steps_left = req.max_new_tokens - 1
+        if req.max_new_tokens <= 1:
+            self._retire_group(grp)
+
+    def _resume_group_slot(self, i: int) -> None:
+        """One beam's re-prefill finished (gang re-admission): restore
+        its decode state; the gang barrier (``_BeamGroup.ready``) holds
+        the group out of the decode batch until every beam is back."""
+        slot = self.slots[i]
+        grp = slot.group
+        j = grp.slots.index(i)
+        beam = grp.tokens[j]
+        slot.resume_seq = None
+        slot.phase = "decode"
+        slot.pos = len(grp.req.prompt) + len(beam) - 1
+        slot.last_token = beam[-1]
+        slot.steps_left = grp.req.max_new_tokens - len(beam)
+
     def _prefill_step(self) -> None:
         """Advance every prefilling slot by one chunk (or the whole prompt
         when chunking is off)."""
@@ -228,8 +379,14 @@ class ContinuousEngine:
             if slot.phase != "prefill":
                 continue
             req = slot.req
-            resume = len(req.output) > 0  # preempted: re-prefill emitted KV
-            seq = self._resume_tokens(req) if resume else req.prompt
+            if slot.group is not None:
+                group_resume = slot.resume_seq is not None
+                seq = slot.resume_seq if group_resume else req.prompt
+                resume = False
+            else:
+                group_resume = False
+                resume = len(req.output) > 0  # preempted: re-prefill KV
+                seq = self._resume_tokens(req) if resume else req.prompt
             if self.prefill_chunk is None:
                 logits, slot.staging = self.backend.prefill(seq)
                 slot.prefilled = len(seq)
@@ -244,6 +401,12 @@ class ContinuousEngine:
             # prefill complete: join the multi-slot batch
             self.cache = self.backend.write_slot(self.cache, slot.staging, i)
             slot.staging = None
+            if group_resume:
+                self._resume_group_slot(i)
+                continue
+            if slot.group is not None:
+                self._activate_group(i, logits)
+                continue
             slot.phase = "decode"
             if resume:
                 # decoding continues from the last emitted token; the
@@ -272,10 +435,58 @@ class ContinuousEngine:
         if slot.req is not None:
             slot.req.latency = self.clock() - slot.req.arrival
             self.finished.append(slot.req)
+        self.cache = self.backend.release_slot(self.cache, i)
         self.slots[i] = _Slot()
 
+    def _retire_group(self, grp: _BeamGroup) -> None:
+        """The group's step budget is exhausted: report the best beam as
+        ``output`` (all beams in ``beam_tokens``/``beam_scores``) and
+        free every member slot."""
+        req = grp.req
+        req.output = list(grp.tokens[0])   # scores are kept descending
+        req.beam_tokens = np.asarray([list(t) for t in grp.tokens],
+                                     np.int32)
+        req.beam_scores = np.asarray(grp.scores)
+        req.latency = self.clock() - req.arrival
+        self.finished.append(req)
+        for si in grp.slots:
+            self.cache = self.backend.release_slot(self.cache, si)
+            self.slots[si] = _Slot()
+
+    def _beam_step(self, grp: _BeamGroup, logits: np.ndarray,
+                   now: float) -> None:
+        """One lockstep extension of a live beam group: top-W over the
+        group's candidates, then the reshuffle — ``reorder_slots`` is a
+        block-table permutation under the paged layout, so no KV moves."""
+        rows = grp.slots
+        lp = np.asarray(log_softmax(jnp.asarray(logits[rows])))
+        beam_idx, tok_idx, grp.scores = _top_w(grp.scores, lp, len(rows))
+        grp.tokens = [grp.tokens[int(b)] + [int(t)]
+                      for b, t in zip(beam_idx, tok_idx)]
+        src = [rows[int(b)] for b in beam_idx]
+        if src != rows:
+            self.cache = self.backend.reorder_slots(self.cache, rows, src)
+        done = False
+        for j, si in enumerate(rows):
+            s = self.slots[si]
+            s.pos += 1
+            s.last_token = int(tok_idx[j])
+            s.steps_left -= 1
+            done = done or s.steps_left <= 0 or s.pos >= self.max_seq - 1
+        grp.req.token_times.append(now)
+        if done:
+            self._retire_group(grp)
+
     def _decode_step(self) -> None:
-        decoding = [s.phase == "decode" for s in self.slots[: self._alloc]]
+        def live(i: int) -> bool:
+            s = self.slots[i]
+            if s.phase != "decode":
+                return False
+            # gang barrier: a beam group only decodes once every member
+            # is back in the batch (relevant mid-resume)
+            return s.group is None or s.group.ready(self.slots)
+
+        decoding = [live(i) for i in range(self._alloc)]
         if not any(decoding):
             return
         tokens = np.full((self._alloc,), PAD_ID, np.int32)
@@ -289,10 +500,14 @@ class ContinuousEngine:
         next_tok = greedy(logits)
         now = self.clock()
         self.steps += 1
+        groups: Dict[int, _BeamGroup] = {}
         for i in range(self._alloc):
             if not decoding[i]:
                 continue
             s = self.slots[i]
+            if s.group is not None:
+                groups.setdefault(id(s.group), s.group)
+                continue
             tok = int(next_tok[i])
             s.req.output.append(tok)
             s.req.token_times.append(now)
@@ -301,6 +516,8 @@ class ContinuousEngine:
             s.steps_left -= 1
             if tok == EOS_ID or s.steps_left <= 0 or s.pos >= self.max_seq - 1:
                 self._retire(i)
+        for grp in groups.values():
+            self._beam_step(grp, logits, now)
 
     def step(self) -> None:
         """One scheduler tick: observe arrivals → resize the live pool →

@@ -40,12 +40,23 @@ class Request:
     priority: Optional[int] = None      # None → derived from slo_class
     slo_class: str = "standard"         # batch | standard | interactive
     deadline: Optional[float] = None    # absolute backend-clock deadline
+    # beam search: width > 1 makes this a gang-scheduled beam group — it
+    # occupies ``beam_width`` decode slots at once (admitted, preempted
+    # and re-admitted atomically), the beams share the prompt prefill
+    # (one prefill + slot forks) and ``output`` becomes the best beam
+    # (all beams land in ``beam_tokens``/``beam_scores``).  Beam search
+    # is a log-prob argmax search: ``temperature`` is ignored.
+    beam_width: int = 1
     # outputs
     output: List[int] = field(default_factory=list)
     token_times: List[float] = field(default_factory=list)
     ttft: Optional[float] = None
     latency: Optional[float] = None
     preemptions: int = 0                # times evicted mid-decode
+    beam_tokens: Optional[np.ndarray] = None   # (width, n_new) all beams
+    beam_scores: Optional[np.ndarray] = None   # (width,) length-norm-free
+    # gang-eviction stash: per-beam tokens + scores for atomic re-admission
+    beam_resume: Optional[dict] = None
 
     @property
     def effective_priority(self) -> int:
@@ -161,7 +172,9 @@ class ServingEngine:
 
     def _next_group(self) -> List[Request]:
         """Form the next batch: the policy orders the queue (everything is
-        treated as arrived — static batches wait for stragglers below)."""
+        treated as arrived — static batches wait for stragglers below).
+        A beam request (``beam_width > 1``) always forms a group of its
+        own: its gang of beams *is* the batch."""
         horizon = max([self._clock()]
                       + [r.arrival for r in self.queue
                          if r.arrival is not None])
@@ -174,14 +187,45 @@ class ServingEngine:
                  if 0 <= int(i) < len(self.queue)]
         if not order:                      # inert policy: fall back to FIFO
             order = list(range(len(self.queue)))
-        picked = list(dict.fromkeys(int(i) for i in order))[: self.max_batch]
+        ordered = list(dict.fromkeys(int(i) for i in order))
+        picked: List[int] = []
+        for i in ordered:
+            if self.queue[i].beam_width > 1:
+                if not picked:
+                    picked = [i]           # singleton gang group
+                break                      # gang boundary: close the batch
+            picked.append(i)
+            if len(picked) >= self.max_batch:
+                break
         group = [self.queue[i] for i in picked]
         taken = set(picked)
         self.queue = [r for i, r in enumerate(self.queue) if i not in taken]
         return group
 
+    def _run_beam(self, req: Request) -> None:
+        """One gang-scheduled beam group through the slot API (shared
+        prompt prefill + slot forks + table-only reshuffles — see
+        serving/beam_search.beam_search_slots)."""
+        from repro.serving.beam_search import beam_search_slots
+
+        n_steps = min(req.max_new_tokens, self.max_seq - len(req.prompt))
+        if n_steps <= 0:
+            raise ValueError(
+                f"beam group {req.rid} has no decode budget: prompt length "
+                f"{len(req.prompt)} >= max_seq {self.max_seq}")
+        res = beam_search_slots(self._backend, req.prompt, req.beam_width,
+                                n_steps)
+        req.output = [int(t) for t in res.tokens[0]]
+        req.beam_tokens = res.tokens
+        req.beam_scores = res.scores
+        req.token_times = list(res.times or [])
+        if req.token_times:
+            req.ttft = req.token_times[0] - req.arrival
+        req.latency = self._clock() - req.arrival
+
     def run(self) -> List[Request]:
-        """Drain the queue in static batches of ≤ max_batch."""
+        """Drain the queue in static batches of ≤ max_batch (a beam
+        request runs as its own gang batch)."""
         finished: List[Request] = []
         while self.queue:
             group = self._next_group()
@@ -189,7 +233,10 @@ class ServingEngine:
             latest = max(r.arrival for r in group if r.arrival is not None)
             if latest > self._backend.clock():
                 self._backend.wait_until(latest)
-            self._run_group(group)
+            if len(group) == 1 and group[0].beam_width > 1:
+                self._run_beam(group[0])
+            else:
+                self._run_group(group)
             finished.extend(group)
         # settle in-flight migration prefetches (async rebalancing)
         self._backend.finalize()

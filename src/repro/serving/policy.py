@@ -32,6 +32,13 @@ more than once per step); state that must persist across steps — e.g.
 the arrival-rate EWMA — lives in the engine and is surfaced through the
 view.
 
+Beam groups are *gangs*: ``QueueView.width`` is the number of slots a
+queued request needs at once, and ``SlotView.gang``/``gang_size`` mark
+slots that belong to one group.  The engine enforces gang mechanics —
+all-or-nothing admission, atomic whole-group eviction when any member is
+named a victim — so policies only need widths for capacity arithmetic
+(see :meth:`PriorityPolicy.preempt`).
+
 Shipped policies
 ----------------
 * :class:`FIFOPolicy` — exact pre-redesign behavior (the default).
@@ -75,6 +82,9 @@ class QueueView:
     prompt_len: int
     max_new_tokens: int
     emitted: int                 # >0 means a preempted request awaiting resume
+    width: int = 1               # decode slots the request needs at once
+    #                              (beam groups: gang admission — all
+    #                              ``width`` slots or none)
 
     def arrived(self, clock: float) -> bool:
         return self.arrival is None or self.arrival <= clock
@@ -87,7 +97,8 @@ class QueueView:
                    priority=req.effective_priority, slo_class=req.slo_class,
                    deadline=req.deadline, prompt_len=len(req.prompt),
                    max_new_tokens=req.max_new_tokens,
-                   emitted=len(req.output))
+                   emitted=len(req.output),
+                   width=getattr(req, "beam_width", 1))
 
 
 @dataclass(frozen=True)
@@ -105,6 +116,10 @@ class SlotView:
     steps_left: int
     started: Optional[float]     # backend-clock time of admission
     arrival: Optional[float] = None  # request's original arrival (aging)
+    gang: Optional[str] = None   # beam-group id (rid) this slot belongs to
+    gang_size: int = 1           # slots the gang occupies (evicting any
+    #                              member frees all of them — the engine
+    #                              evicts gangs atomically)
 
     @property
     def free(self) -> bool:
@@ -254,17 +269,39 @@ class PriorityPolicy(SchedulerPolicy):
         victims = []
         taken = set()
         for w in waiters:
-            if free > 0:
-                free -= 1  # a free slot serves this waiter; no eviction
-                continue
+            # gang-aware accounting: a beam group needs ``width`` slots
+            # at once, and evicting any member of a victim gang frees the
+            # whole gang (the engine evicts gangs atomically).  Victims
+            # for one waiter are collected tentatively and committed only
+            # if the waiter can actually be served — otherwise a wide
+            # gang would evict lower-priority work every tick without
+            # ever being admitted (preempt/re-admit livelock).
+            need = max(1, w.width) - min(free, max(1, w.width))
             wp = self._aged_priority(w.priority, w.arrival, view.clock)
-            for s in candidates:
-                if s.index in taken:
-                    continue
-                if slot_prio(s) < wp:
-                    taken.add(s.index)
-                    victims.append(s.index)
+            local: list = []
+            local_taken: set = set()
+            while need > 0:
+                victim = next(
+                    (s for s in candidates
+                     if s.index not in taken
+                     and s.index not in local_taken
+                     and slot_prio(s) < wp), None)
+                if victim is None:
                     break
+                if victim.gang is not None:
+                    local_taken.update(s.index for s in view.slots
+                                       if s.gang == victim.gang)
+                else:
+                    local_taken.add(victim.index)
+                local.append(victim.index)
+                need -= max(1, victim.gang_size)
+            if need > 0:
+                continue  # unservable waiter: evict nobody on its behalf
+            free -= min(free, max(1, w.width))
+            free -= need  # need < 0: an oversized victim gang freed
+            #               surplus slots — credit them to later waiters
+            taken |= local_taken
+            victims.extend(local)
         return victims
 
 

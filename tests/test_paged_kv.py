@@ -1,0 +1,336 @@
+"""Paged KV layout: block-table/refcount invariants, paged-vs-dense
+fp32 bit-identity across every serving path, zero-copy beam reshuffles,
+and unique-block cost charging."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_model
+from repro.core import FiddlerEngine
+from repro.core.cost_model import kv_read_entries
+from repro.core.orchestrator import nonexpert_layer_time
+from repro.models.paged_kv import BlockMeta, PagedLayerCache
+from repro.serving.backend import FiddlerBackend
+from repro.serving.beam_search import beam_search_slots
+
+
+def _engine(layout, **kw):
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    kw.setdefault("expert_budget", 30)
+    return FiddlerEngine(cfg, params, policy="fiddler",
+                         host_precision="fp32", kv_layout=layout, **kw)
+
+
+# ---------------------------------------------------------------------------
+# BlockMeta unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_fork_shares_and_cow_diverges():
+    m = BlockMeta(3, 48, 16)
+    m.write_span(0, 0, 20)              # prompt: 2 blocks (16 + 4)
+    for j in (1, 2):
+        m.fork_slot(0, j)
+    m.check()
+    assert m.blocks_in_use() == 2       # fully shared
+    assert m.unique_tokens() == 20
+    assert m.dense_tokens() == 60       # per-beam accounting triples it
+    # divergent writes at pos 20: the shared partial block COWs per beam
+    # (the last referrer keeps the original)
+    for s in range(3):
+        m.write_span(s, 20, 21)
+    m.check()
+    assert m.blocks_in_use() == 4       # 1 shared full + 3 private
+    assert m.unique_tokens() == 16 + 3 * 5
+
+
+def test_reorder_is_refcount_only_and_recollapses():
+    m = BlockMeta(4, 64, 16)
+    m.write_span(0, 0, 30)
+    for j in range(1, 4):
+        m.fork_slot(0, j)
+    for s in range(4):
+        m.write_span(s, 30, 31)         # diverge
+    used = m.blocks_in_use()
+    free = m.n_free
+    # all beams continue beam 0 → re-collapse onto one lineage
+    m.reorder_slots([0, 1, 2, 3], [0, 0, 0, 0])
+    m.check()
+    assert m.blocks_in_use() < used
+    assert m.n_free > free              # COW copies returned to the pool
+    assert m.unique_tokens() == 31      # one surviving lineage
+
+
+def test_release_returns_pool_to_initial():
+    m = BlockMeta(4, 48, 16)
+    init = m.n_free
+    m.write_span(0, 0, 40)
+    for j in range(1, 4):
+        m.fork_slot(0, j)
+    m.write_span(2, 40, 41)
+    m.reorder_slots([0, 1], [2, 3])
+    for s in range(4):
+        m.release_slot(s)
+    m.check()
+    assert m.n_free == init
+    assert (m.table == 0).all()
+
+
+def test_ring_wrap_keeps_last_window():
+    m = BlockMeta(1, 32, 16)
+    m.write_span(0, 0, 32)
+    m.check()
+    assert m.unique_tokens() == 32
+    m.write_span(0, 32, 33)             # wraps: overwrites offset 0
+    m.check()
+    assert m.unique_tokens() == 32      # fill saturated at the window
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 3),
+                          st.integers(0, 3), st.integers(1, 8)),
+                min_size=1, max_size=40))
+def test_refcounts_never_leak_property(ops):
+    """Random fork/write/release/reorder/resize sequences: refcounts
+    always equal table occurrences, and releasing every slot returns the
+    free count to its (possibly resized) pool size."""
+    m = BlockMeta(4, 64, 16)
+    lengths = [0, 0, 0, 0]
+    for op, a, b, n in ops:
+        a %= m.n_slots
+        b %= m.n_slots
+        if op == 0:
+            start = lengths[a]
+            m.write_span(a, start, start + n)
+            lengths[a] = start + n
+        elif op == 1:
+            m.fork_slot(a, b)
+            lengths[b] = lengths[a]
+        elif op == 2:
+            m.release_slot(a)
+            lengths[a] = 0
+        elif op == 3:
+            src = [(a + i) % m.n_slots for i in range(m.n_slots)]
+            m.reorder_slots(list(range(m.n_slots)), src)
+            lengths = [lengths[s] for s in src]
+        elif op == 4:
+            m.resize(m.n_slots + (n % 3))
+            lengths += [0] * (m.n_slots - len(lengths))
+        else:
+            keep = max(1, m.n_slots - 1)
+            m.resize(keep)
+            lengths = lengths[:keep]
+        m.check()
+    for s in range(m.n_slots):
+        m.release_slot(s)
+    m.check()
+    assert m.blocks_in_use() == 0
+    assert m.n_free == m.n_blocks - 1
+
+
+# ---------------------------------------------------------------------------
+# Paged vs dense: fp32 bit-identity through the orchestrator
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_decode_bit_identical():
+    outs = {}
+    for layout in ("dense", "paged"):
+        e = _engine(layout)
+        logits, caches = e.prefill(
+            jnp.asarray([[1, 5, 2, 8], [1, 3, 3, 3]], jnp.int32), 32)
+        seq = [np.asarray(logits)]
+        toks = jnp.argmax(logits, -1)[:, None]
+        for t in range(3):
+            logits, caches = e.decode_step(caches, toks, 4 + t, 32)
+            seq.append(np.asarray(logits))
+            toks = jnp.argmax(logits, -1)[:, None]
+        outs[layout] = (seq, e.ledger.sim_time)
+    for a, b in zip(outs["dense"][0], outs["paged"][0]):
+        np.testing.assert_array_equal(a, b)
+    # unforked slots: unique-block charging equals dense charging exactly
+    assert outs["dense"][1] == outs["paged"][1]
+
+
+def test_chunked_prefill_decode_multi_bit_identical():
+    outs = {}
+    for layout in ("dense", "paged"):
+        e = _engine(layout)
+        caches = e.make_decode_caches(3, 32)
+        sc = None
+        for off in (0, 2):
+            lg, sc = e.prefill_chunk(
+                jnp.asarray([[7 + off, 9 + off]], jnp.int32), sc, off, 32)
+        caches = e.write_slot(caches, sc, 1)
+        toks = np.zeros((3, 1), np.int32)
+        toks[1] = int(np.argmax(lg[0]))
+        pos = np.array([0, 4, 0])
+        act = np.array([False, True, False])
+        seq = []
+        for t in range(3):
+            lg2, caches = e.decode_step_multi(caches, jnp.asarray(toks),
+                                              pos, 32, active=act)
+            seq.append(np.asarray(lg2)[act])
+            toks[1] = int(np.argmax(lg2[1]))
+            pos = pos + act
+        outs[layout] = seq
+    for a, b in zip(outs["dense"], outs["paged"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_beam_reshuffle_bit_identical_across_layouts():
+    res = {}
+    for layout in ("dense", "paged"):
+        be = FiddlerBackend(_engine(layout), max_seq=32)
+        res[layout] = beam_search_slots(be, [1, 5, 2, 8], width=3, n_new=4)
+    np.testing.assert_array_equal(res["dense"].tokens, res["paged"].tokens)
+    np.testing.assert_array_equal(res["dense"].scores, res["paged"].scores)
+    st_ = res["paged"].block_stats
+    assert st_ is not None
+    assert st_["unique_blocks"] < st_["dense_blocks"]
+    assert res["dense"].block_stats is None
+
+
+def test_whole_batch_reorder_cache_bit_identical():
+    """``FiddlerEngine.reorder_cache`` — the whole-batch reshuffle
+    counterpart of ``Model.reorder_cache`` — permutes every slot's
+    lineage identically under both layouts (table-only when paged)."""
+    idx = [2, 0, 0]
+    outs = {}
+    for layout in ("dense", "paged"):
+        e = _engine(layout)
+        logits, caches = e.prefill(
+            jnp.asarray([[1, 5, 2], [1, 9, 4], [1, 7, 7]], jnp.int32), 32)
+        toks = jnp.argmax(logits, -1)[:, None]
+        _, caches = e.decode_step(caches, toks, 3, 32)
+        caches = e.reorder_cache(caches, idx)
+        lg, _ = e.decode_step(caches, toks[np.asarray(idx)], 4, 32)
+        outs[layout] = np.asarray(lg)
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+
+
+def test_beam_reshuffle_zero_kv_copies():
+    """The acceptance criterion: a paged reshuffle is a block-table
+    permutation + refcount bump — the device pool arrays are the *same
+    objects* before and after (jnp arrays are immutable, so any data
+    movement would have produced new arrays), and no blocks are
+    allocated."""
+    e = _engine("paged")
+    be = FiddlerBackend(e, max_seq=32)
+    cache = be.make_cache(3)
+    _, sc = e.prefill_chunk(jnp.asarray([[1, 5, 2, 8]], jnp.int32),
+                            None, 0, 32)
+    cache = be.write_slot(cache, sc, 0)
+    for j in (1, 2):
+        cache = be.fork_slot(cache, 0, j)
+    ids = [(id(c.k), id(c.v), id(c.pos)) for c in cache]
+    free = [c.meta.n_free for c in cache]
+    tables = [c.meta.table.copy() for c in cache]
+    cache = be.reorder_slots(cache, [0, 1, 2], [2, 0, 0])
+    for c, i3, f, t in zip(cache, ids, free, tables):
+        assert (id(c.k), id(c.v), id(c.pos)) == i3, "reorder moved KV data"
+        assert c.meta.n_free == f, "reorder allocated/freed blocks"
+        np.testing.assert_array_equal(c.meta.table, t[[2, 0, 0]])
+        c.meta.check()
+    # fork is zero-copy too
+    ids = [(id(c.k), id(c.v), id(c.pos)) for c in cache]
+    cache = be.fork_slot(cache, 0, 1)
+    assert [(id(c.k), id(c.v), id(c.pos)) for c in cache] == ids
+
+
+def test_refcounts_drain_through_continuous_engine_with_preemption():
+    """Mid-group preemption through the real serving stack: a decoding
+    beam gang is evicted by an interactive arrival, re-admitted, and
+    finishes — afterwards every layer's block pool is back to its initial
+    free count (no refcount leaks anywhere in admit/fork/reshuffle/evict/
+    resume/retire)."""
+    from repro.configs import get_config
+    from repro.serving.continuous import ContinuousEngine
+    from repro.serving.engine import Request
+    from repro.serving.policy import PriorityPolicy
+
+    # full-size timing constants: sim seconds are paper-scale, so the
+    # interactive arrival lands mid-gang instead of after the whole run
+    e = _engine("paged", timing_cfg=get_config("mixtral-8x7b"))
+    be = FiddlerBackend(e, max_seq=48)
+    eng = ContinuousEngine(be, n_slots=2, max_seq=48, prefill_chunk=4,
+                           policy=PriorityPolicy(preemption=True))
+    initial = None
+    eng.submit(Request(rid="beam", prompt=[1, 5, 2], beam_width=2,
+                       max_new_tokens=8, slo_class="batch", arrival=0.0))
+    initial = [c.meta.n_blocks - 1 for c in eng.cache]
+    # lands mid-decode of the gang and steals its slots (gang eviction)
+    eng.submit(Request(rid="hot", prompt=[1, 9], max_new_tokens=2,
+                       slo_class="interactive", arrival=1e-4))
+    done = {r.rid: r for r in eng.run(max_steps=300)}
+    assert done["beam"].preemptions >= 1, "gang was never preempted"
+    assert done["beam"].beam_tokens.shape == (2, 8)
+    assert len(done["hot"].output) >= 1
+    for c, n in zip(eng.cache, initial):
+        c.meta.check()
+        assert c.meta.blocks_in_use() == 0
+        assert c.meta.n_free == n, "leaked blocks after drain"
+
+
+# ---------------------------------------------------------------------------
+# Unique-block cost charging
+# ---------------------------------------------------------------------------
+
+
+def test_kv_read_entries_dedups_bytes_only():
+    kv_lens = np.full(8, 1000, np.int64)
+    assert kv_read_entries(kv_lens) == 8000.0
+    assert kv_read_entries(kv_lens, kv_unique=1700) == 1700.0
+    assert kv_read_entries(500) == 500.0
+
+
+def test_unique_charging_reduces_beam_layer_time():
+    """At paper scale a wide beam group's KV reads are the dominant
+    memory term; charging unique blocks (shared prefix once) must be
+    strictly cheaper than dense per-beam reads — and never more."""
+    from repro.configs import get_config
+    from repro.core import HardwareSpec
+
+    cfg = get_config("mixtral-8x7b")
+    hw = HardwareSpec.paper_env1()
+    W, kv = 16, 4096
+    dense_lens = np.full(W, kv, np.int64)
+    t_dense = nonexpert_layer_time(cfg, hw, W, dense_lens)
+    shared = kv + W * 64  # prompt shared, 64 divergent tokens per beam
+    t_paged = nonexpert_layer_time(cfg, hw, W, dense_lens, kv_unique=shared)
+    assert t_paged < t_dense
+    # kv_unique == sum(kv_len) must be *exactly* the dense charge
+    t_same = nonexpert_layer_time(cfg, hw, W, dense_lens,
+                                  kv_unique=int(dense_lens.sum()))
+    assert t_same == t_dense
+
+
+def test_paged_cache_view_matches_dense_arrays():
+    """The gather view reproduces the dense ring buffer bit-for-bit —
+    including cleared never-written lanes."""
+    from repro.models import kv_cache as kvc
+
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    rng = np.random.default_rng(0)
+    B, S, max_seq = 2, 5, 32
+    k = jnp.asarray(rng.normal(size=(B, S, cfg.n_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, cfg.n_kv_heads, cfg.head_dim)),
+                    jnp.float32)
+    dense = kvc.init_attn_cache(cfg, 0, B, max_seq, jnp.float32)
+    dense = kvc.write_prefill(dense, k, v)
+    paged = PagedLayerCache(cfg, 0, B, max_seq, jnp.float32)
+    paged.write_prefill(k, v)
+    view = paged.view()
+    for key in ("k", "v", "pos"):
+        np.testing.assert_array_equal(np.asarray(dense[key]),
+                                      np.asarray(view[key]))
+
+
+@pytest.mark.parametrize("bad", ["blocked", "row"])
+def test_kv_layout_validated(bad):
+    cfg, model, params = reduced_model("mixtral-8x7b")
+    with pytest.raises(AssertionError):
+        FiddlerEngine(cfg, params, policy="fiddler", expert_budget=30,
+                      kv_layout=bad)

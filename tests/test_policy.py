@@ -588,8 +588,11 @@ def test_simulated_backend_resize_cache_roundtrip():
     fe, eng = _sim_engine()
     backend = eng.backend
     cache = backend.make_cache(2)
-    assert backend.resize_cache(cache, 6) == {"n_slots": 6}
-    assert backend.resize_cache(cache, 1) == {"n_slots": 1}
+    grown = backend.resize_cache(cache, 6)
+    assert grown["n_slots"] == 6 and grown["meta"].n_slots == 6
+    shrunk = backend.resize_cache(grown, 1)
+    assert shrunk["n_slots"] == 1 and shrunk["meta"].n_slots == 1
+    shrunk["meta"].check()
 
 
 def test_aged_batch_not_starved_by_deadline_traffic():
@@ -618,3 +621,49 @@ def test_aged_batch_not_starved_by_deadline_traffic():
     order = list(pol.admission_order(_view(clock, queue,
                                            [_slot_view(0, rid=None)])))
     assert order[0] == 4 and order[1] == 0, order
+
+
+# ---------------------------------------------------------------------------
+# Gang-aware preemption: capacity arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _gang_queue_view(i, width, priority=2, arrival=0.0):
+    return QueueView(index=i, rid=f"g{i}", arrival=arrival,
+                     priority=priority, slo_class="interactive",
+                     deadline=None, prompt_len=4, max_new_tokens=8,
+                     emitted=0, width=width)
+
+
+def test_preempt_skips_unservable_gang_waiter():
+    """A gang waiter that cannot be fully served — even after evicting
+    every lower-priority decode — must evict NOBODY (otherwise the
+    evicted requests thrash through re-prefill every tick while the gang
+    never admits)."""
+    pol = PriorityPolicy(preemption=True)
+    # 4 slots: two batch decodes (evictable), two interactive decodes
+    # (not evictable by an interactive waiter); width-4 gang queued
+    slots = [_slot_view(0, priority=0), _slot_view(1, priority=0),
+             _slot_view(2, priority=2), _slot_view(3, priority=2)]
+    view = _view(1.0, [_gang_queue_view(0, width=4)], slots)
+    assert list(pol.preempt(view)) == []
+    # width-2 is servable: exactly the two batch decodes are evicted
+    view2 = _view(1.0, [_gang_queue_view(0, width=2)], slots)
+    assert sorted(pol.preempt(view2)) == [0, 1]
+
+
+def test_preempt_credits_surplus_gang_slots():
+    """Evicting a width-3 gang for a width-1 waiter frees two surplus
+    slots; a second width-1 waiter must ride those instead of costing
+    another victim its decode."""
+    pol = PriorityPolicy(preemption=True)
+    gang = [SlotView(index=i, rid="beam", phase="decode", priority=0,
+                     slo_class="batch", deadline=None, pos=8, prompt_len=4,
+                     emitted=4, steps_left=4, started=0.0, arrival=0.0,
+                     gang="beam", gang_size=3) for i in range(3)]
+    single = _slot_view(3, priority=0, started=1.0)
+    waiters = [_gang_queue_view(0, width=1), _gang_queue_view(1, width=1)]
+    victims = list(pol.preempt(_view(2.0, waiters, gang + [single])))
+    # one gang member named (engine evicts the whole gang); the innocent
+    # width-1 batch decode in slot 3 is spared
+    assert len(victims) == 1 and victims[0] in (0, 1, 2)

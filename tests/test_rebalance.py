@@ -285,3 +285,66 @@ def test_dynamic_rebalancing_beats_static_after_shift():
     assert dynamic.ledger.migration_time > 0
     assert hit_rate(shifted, dynamic.placement) > \
         hit_rate(shifted, static.placement)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch ordering (PR 4 follow-on): hottest promotion lands first
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_queue_orders_by_popularity():
+    """The link is serial but the transmission *order* is ours: a pushed
+    transfer with higher popularity weight is drained (lands) before an
+    earlier, colder one; equal weights keep FIFO."""
+    from repro.core.rebalance import PrefetchQueue
+
+    q = PrefetchQueue()
+    q.push(0, 11, 1.0, weight=0.1)   # cold, pushed first
+    q.push(0, 22, 1.0, weight=0.9)   # hot, pushed second
+    q.push(0, 33, 1.0, weight=0.9)   # equally hot: FIFO after 22
+    assert q.drain(1.0) == 1.0       # exactly one transfer's worth
+    # the hot expert 22 landed: forcing it now exposes nothing, while the
+    # cold 11 is still queued (behind 33)
+    assert q.force(0, {22}) == 0.0
+    assert q.backlog == 2.0
+    assert q.force(0, {33}) == 1.0   # 33 next (FIFO among equal weights)
+    assert q.force(0, {11}) == 1.0
+    assert len(q) == 0
+
+
+def test_prefetch_queue_default_weight_keeps_fifo():
+    from repro.core.rebalance import PrefetchQueue
+
+    q = PrefetchQueue()
+    for e in (1, 2, 3):
+        q.push(0, e, 1.0)
+    q.drain(1.0)
+    assert q.force(0, {1}) == 0.0    # first pushed landed first
+    assert q.force(0, {2}) == 1.0
+
+
+def test_engine_prefetch_ranked_by_live_popularity():
+    """apply_migrations pushes promotions weighted by the OnlineProfile:
+    the queue holds them hottest-first regardless of plan order."""
+    cfg = get_config("mixtral-8x7b")
+    L, E = cfg.n_layers, cfg.moe.n_experts
+    eng = FiddlerEngine(cfg, policy="fiddler",
+                        hw=HardwareSpec.paper_env1(), seed=0,
+                        rebalance_interval=4, rebalance_k=8,
+                        async_prefetch=True)
+    # make the live profile heavily skewed, with a *different* skew per
+    # layer, so the plan promotes experts of clearly distinct popularity
+    rng = np.random.default_rng(3)
+    for li in range(L):
+        counts = np.ones(E)
+        counts[rng.permutation(E)[0]] = 20 + 40 * li  # p_top varies by layer
+        for _ in range(50):
+            eng.rebalancer.observe(li, counts)
+    plan = eng.rebalancer.plan(eng.placement)
+    assert plan is not None and plan.n_swaps >= 2
+    eng.apply_migrations(plan)
+    weights = [p.weight for p in eng._prefetch._q]
+    assert len(weights) == plan.n_swaps
+    assert weights == sorted(weights, reverse=True)
+    assert weights[0] > weights[-1], "needs distinct popularity to rank"
+    eng.flush_prefetch()
