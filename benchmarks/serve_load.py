@@ -18,7 +18,15 @@ Both sweep arrival rate × slot count across the orchestrator policies
 *and* the scheduler policies (``fifo`` / ``priority`` / ``autoscale`` —
 see serving/policy.py), reporting throughput (tokens / simulated second),
 mean/p95 TTFT overall and per SLO class, mean ITL, and preemption counts.
-Results are also dumped to ``BENCH_serve_load.json`` at the repo root.
+
+A shared-prefix axis (``serve_load_prefix/...`` keys, all modes
+including ``--smoke``) runs the cross-request prefix cache against a
+no-cache control on a same-preamble workload (``--prefix-pool N
+--prefix-len L``): a warm phase primes the index, then a high-rate
+flood measures p95 TTFT, matched tokens, peak unique/dense KV residency
+(sampled every scheduler tick) and leaked blocks — prefix hits must cut
+both TTFT and peak unique KV bytes.  Results are dumped to
+``BENCH_serve_load.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -59,20 +67,39 @@ def _reduced(model_name: str):
     return _model_cache[model_name]
 
 
+def _prefix_pools(prefix_pool: int, prefix_len: int,
+                  seed: int) -> List[List[int]]:
+    """Deterministic shared preambles (system prompts) for the
+    shared-prefix workload axis — the warm phase and the load generator
+    both derive the same pool from the seed."""
+    rng = np.random.default_rng(seed + 7919)
+    return [[1] + rng.integers(3, 250, size=prefix_len - 1).tolist()
+            for _ in range(prefix_pool)]
+
+
 def poisson_requests(rate_hz: float, n: int, *, prompt_len: int = 12,
                      max_new: int = 8, seed: int = 0,
-                     interactive_frac: float = 0.0) -> List[Request]:
+                     interactive_frac: float = 0.0, prefix_pool: int = 0,
+                     prefix_len: int = 0, t0: float = 0.0) -> List[Request]:
     """n requests with exponential inter-arrival gaps at ``rate_hz``
-    (simulated seconds) and random prompts; a ``interactive_frac``
-    fraction is tagged with the high-priority ``interactive`` SLO class
-    (the rest are ``batch``)."""
+    (simulated seconds, starting at ``t0``) and random prompts; a
+    ``interactive_frac`` fraction is tagged with the high-priority
+    ``interactive`` SLO class (the rest are ``batch``).  With
+    ``prefix_pool > 0`` every prompt is one of ``prefix_pool`` shared
+    ``prefix_len``-token preambles (round-robin) followed by a unique
+    ``prompt_len``-token tail — the cross-request prefix-cache workload."""
     rng = np.random.default_rng(seed)
-    t = 0.0
+    pools = _prefix_pools(prefix_pool, prefix_len, seed) if prefix_pool else []
+    t = t0
     reqs = []
     for i in range(n):
         t += rng.exponential(1.0 / rate_hz)
-        plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
-        prompt = [1] + rng.integers(3, 250, size=plen - 1).tolist()
+        if pools:
+            prompt = list(pools[i % len(pools)])
+            prompt += rng.integers(3, 250, size=prompt_len).tolist()
+        else:
+            plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
+            prompt = [1] + rng.integers(3, 250, size=plen - 1).tolist()
         slo = ("interactive" if rng.random() < interactive_frac else "batch")
         reqs.append(Request(rid=f"r{i}", prompt=prompt,
                             max_new_tokens=max_new, arrival=t,
@@ -126,26 +153,70 @@ def serve_once(model_name: str, policy: str, env: str, *, rate_hz: float,
 def simulate_once(model_name: str, policy: str, env: str, *, rate_hz: float,
                   n_slots: int, n_requests: int, seed: int = 0,
                   sched: str = "fifo", interactive_frac: float = 0.25,
-                  prompt_len: int = 64, max_new: int = 24
-                  ) -> Dict[str, float]:
+                  prompt_len: int = 64, max_new: int = 24,
+                  prefix_pool: int = 0, prefix_len: int = 0,
+                  prefix_cache: bool = True) -> Dict[str, float]:
     """Paper-scale pure simulation: full-size config, no params — the
-    ``simulate_*`` ledger path under the real scheduler."""
+    ``simulate_*`` ledger path under the real scheduler.
+
+    With ``prefix_pool > 0`` the workload is the shared-prefix axis:
+    ``prompt_len`` becomes the unique tail length behind a shared
+    ``prefix_len``-token preamble, a warm phase primes the prefix index
+    (one request per preamble, excluded from metrics — it runs in the
+    ``prefix_cache=False`` control too so both sides pay identical
+    warm-up work), and peak unique/dense KV residency is sampled every
+    scheduler tick."""
     cfg = get_config(model_name)
-    eng = FiddlerEngine(cfg, policy=policy, hw=ENVS[env], seed=seed)
+    eng = FiddlerEngine(cfg, policy=policy, hw=ENVS[env], seed=seed,
+                        prefix_cache=prefix_cache)
     serving = ContinuousEngine(SimulatedBackend(eng, max_seq=SIM_MAX_SEQ),
                                n_slots=n_slots, max_seq=SIM_MAX_SEQ,
                                prefill_chunk=SIM_PREFILL_CHUNK, policy=sched)
+    if prefix_pool:
+        for p, pre in enumerate(_prefix_pools(prefix_pool, prefix_len, seed)):
+            serving.submit(Request(rid=f"warm{p}", prompt=list(pre) + [3],
+                                   max_new_tokens=1))
+        serving.run(max_steps=100_000, on_exhausted="raise")
+    led = eng.ledger
+    l0 = (led.prefix_lookups, led.prefix_hits, led.prefix_tokens)
+    peak = {"unique": 0, "dense": 0}
+
+    def _sample(s: ContinuousEngine) -> None:
+        st = s.backend.block_stats(s.cache)
+        peak["unique"] = max(peak["unique"], st["unique_tokens"])
+        peak["dense"] = max(peak["dense"], st["dense_tokens"])
+
     for r in poisson_requests(rate_hz, n_requests, prompt_len=prompt_len,
                               max_new=max_new, seed=seed,
-                              interactive_frac=interactive_frac):
+                              interactive_frac=interactive_frac,
+                              prefix_pool=prefix_pool, prefix_len=prefix_len,
+                              t0=serving.clock()):
         serving.submit(r)
-    done = serving.run(max_steps=100_000, on_exhausted="raise")
+    done = [r for r in serving.run(max_steps=100_000, on_exhausted="raise",
+                                   on_step=_sample)
+            if not r.rid.startswith("warm")]
     assert len(done) == n_requests, (len(done), n_requests)
-    return _metrics(done, eng.ledger)
+    out = _metrics(done, led)
+    meta = serving.cache["meta"]
+    meta.check()
+    # K + V, bf16, every layer — bytes one KV-cache token entry occupies
+    kv_entry_bytes = 2 * cfg.kv_dim * 2 * cfg.n_layers
+    out.update({
+        "prefix_lookups": float(led.prefix_lookups - l0[0]),
+        "prefix_hits": float(led.prefix_hits - l0[1]),
+        "prefix_matched_tokens": float(led.prefix_tokens - l0[2]),
+        "peak_unique_kv_tokens": float(peak["unique"]),
+        "peak_dense_kv_tokens": float(peak["dense"]),
+        "peak_unique_kv_bytes": float(peak["unique"] * kv_entry_bytes),
+        "peak_dense_kv_bytes": float(peak["dense"] * kv_entry_bytes),
+        "leaked_blocks": float(meta.blocks_in_use()),
+    })
+    return out
 
 
 def run(model: str = "mixtral-8x7b", env: str = "env1",
-        fast: bool = False, smoke: bool = False
+        fast: bool = False, smoke: bool = False,
+        prefix_pool: int = 1, prefix_len: int = 96
         ) -> Dict[str, Dict[str, float]]:
     """``smoke=True`` is CI's bench-smoke lane: pure simulation only (no
     jitted reduced-numerics runs), a handful of requests — seconds, not
@@ -203,6 +274,28 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
                  f"preempt={r['preemptions']:.0f}")
             results[key] = r
 
+    # -- shared-prefix axis: cross-request prefix cache on vs off ------------
+    # Warm index, then a high-rate flood of same-preamble prompts: the
+    # cached run's TTFT and peak unique KV residency must both drop.
+    pre_rates = [32.0] if smoke else [8.0, 32.0]
+    pre_requests = 8 if smoke else 24
+    for rate in pre_rates:
+        for cache_on in (True, False):
+            r = simulate_once(model, "fiddler", env, rate_hz=rate,
+                              n_slots=sim_slots, n_requests=pre_requests,
+                              prompt_len=32, max_new=16,
+                              interactive_frac=0.0,
+                              prefix_pool=prefix_pool, prefix_len=prefix_len,
+                              prefix_cache=cache_on)
+            key = (f"serve_load_prefix/{env}/fiddler/"
+                   f"rate{rate:g}_{'cache' if cache_on else 'nocache'}")
+            emit(key, r["p95_ttft"] * 1e6,
+                 f"p95_ttft={r['p95_ttft']:.4f}s "
+                 f"matched_tok={r['prefix_matched_tokens']:.0f} "
+                 f"peak_unique_kv={r['peak_unique_kv_bytes'] / 2**20:.1f}MiB "
+                 f"leaked={r['leaked_blocks']:.0f}")
+            results[key] = r
+
     # self-describing record: a fast/dev/smoke run must not masquerade as
     # the full sweep when it overwrites the file
     record = {
@@ -215,6 +308,8 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
             "reduced_requests": None if smoke else n_requests,
             "sim_rates": sim_rates, "sim_requests": sim_requests,
             "sim_slots": sim_slots,
+            "prefix_rates": pre_rates, "prefix_requests": pre_requests,
+            "prefix_pool": prefix_pool, "prefix_len": prefix_len,
         },
         "results": results,
     }
@@ -223,6 +318,17 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
 
 
 if __name__ == "__main__":
-    import sys
+    import argparse
 
-    run(fast="--full" not in sys.argv, smoke="--smoke" in sys.argv)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full sweep (default is the fast dev subset)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI bench-smoke lane: pure simulation only")
+    ap.add_argument("--prefix-pool", type=int, default=1, metavar="N",
+                    help="shared preambles in the prefix-cache axis")
+    ap.add_argument("--prefix-len", type=int, default=96, metavar="L",
+                    help="shared preamble length (tokens)")
+    a = ap.parse_args()
+    run(fast=not a.full, smoke=a.smoke,
+        prefix_pool=a.prefix_pool, prefix_len=a.prefix_len)

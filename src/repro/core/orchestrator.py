@@ -89,7 +89,7 @@ from repro.kernels.ops import (
 )
 from repro.models.model import Model
 from repro.models.moe import route
-from repro.models.paged_kv import PAGE_SIZE, PagedLayerCache
+from repro.models.paged_kv import PAGE_SIZE, PagedLayerCache, PagedSlotStage
 
 POLICIES = ("fiddler", "offload", "static_split")
 DISPATCH_MODES = ("grouped", "eager")
@@ -160,6 +160,12 @@ class Ledger:
     migration_time: float = 0.0
     migration_overlapped: float = 0.0
     migration_exposed: float = 0.0
+    # cross-request prefix cache (models/paged_kv.PrefixIndex): admission
+    # lookups, hits, and prompt tokens whose KV was reused from resident
+    # blocks instead of being re-prefilled
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_tokens: int = 0
     # ring buffer of the most recent per-layer charges (0 disables, None
     # keeps everything — old unbounded behavior)
     layer_log_limit: Optional[int] = LAYER_LOG_LIMIT
@@ -332,6 +338,7 @@ class FiddlerEngine:
         async_prefetch: Optional[bool] = None,
         kv_layout: str = "paged",
         kv_block_size: int = PAGE_SIZE,
+        prefix_cache: bool = True,
     ):
         """``params=None`` → pure-simulation mode (routing drawn from the
         profile; only the ledger advances).  ``timing_cfg`` lets the real
@@ -362,7 +369,15 @@ class FiddlerEngine:
         *unique* blocks.  "dense" keeps the per-slot ring buffers
         (models/kv_cache.py), bit-identical on fp32 and kept for
         equivalence tests — the kv-layout analogue of
-        ``dispatch_mode="eager"``."""
+        ``dispatch_mode="eager"``.
+
+        ``prefix_cache`` (default on; paged layout only) indexes fully
+        written prompt blocks by content hash so later admissions splice
+        the longest shared prefix into their block table (refcount bump +
+        COW) and prefill only the unmatched tail; retired requests'
+        blocks stay resident for reuse and are reclaimed LRU under pool
+        pressure.  ``prefix_cache=False`` restores the exact pre-cache
+        admission numerics/accounting."""
         assert policy in POLICIES, policy
         assert dispatch_mode in DISPATCH_MODES, dispatch_mode
         assert kv_layout in KV_LAYOUTS, kv_layout
@@ -378,6 +393,7 @@ class FiddlerEngine:
         self.dispatch_mode = dispatch_mode
         self.kv_layout = kv_layout
         self.kv_block_size = kv_block_size
+        self.prefix_cache = bool(prefix_cache) and kv_layout == "paged"
         self.async_prefetch = (overlap if async_prefetch is None
                                else async_prefetch)
         self._prefetch = PrefetchQueue()
@@ -952,21 +968,79 @@ class FiddlerEngine:
     # -- slot-based serving path (continuous batching) ---------------------------
     def make_decode_caches(self, n_slots: int, max_seq: int) -> List[Any]:
         """Per-layer multi-slot KV caches for continuous batching."""
-        return [self._init_layer_cache(li, n_slots, max_seq)
-                for li in range(self.cfg.n_layers)]
+        caches = [self._init_layer_cache(li, n_slots, max_seq)
+                  for li in range(self.cfg.n_layers)]
+        if self.prefix_cache:
+            for c in caches:
+                c.meta.enable_prefix_cache()
+        return caches
+
+    def make_slot_stage(self, caches: List[Any],
+                        slot: int) -> List[PagedSlotStage]:
+        """Per-layer batch-1 staging views that chunk-prefill straight
+        into row ``slot`` of the multi-slot pools: the continuous-batching
+        join becomes a pure table splice (``write_slot`` no-op) instead
+        of a block-by-block device copy, and a prefix-matched admission's
+        tail chunks attend to the shared blocks already in the row."""
+        assert all(isinstance(c, PagedLayerCache) for c in caches)
+        return [PagedSlotStage(c, slot) for c in caches]
 
     def write_slot(self, caches: List[Any], slot_caches: List[Any],
                    slot: int) -> List[Any]:
-        """Copy a freshly-prefilled batch-1 cache into row ``slot`` of the
-        multi-slot caches (request joins the in-flight batch)."""
+        """Join a freshly-prefilled staging cache into row ``slot`` of the
+        multi-slot caches (request joins the in-flight batch).  Stages
+        from :meth:`make_slot_stage` already wrote through the target
+        pool, so their join moves zero device bytes; private batch-1
+        caches (whole-prompt prefill, dense layout) are copied in."""
         for li in range(self.cfg.n_layers):
+            sc = slot_caches[li]
+            if isinstance(sc, PagedSlotStage):
+                assert sc.parent is caches[li] and sc.slot == slot, (
+                    "stage does not belong to this cache row")
+                continue  # table already spliced in place
             if isinstance(caches[li], PagedLayerCache):
-                caches[li].copy_in(slot, slot_caches[li])
+                caches[li].copy_in(slot, sc)
             else:
                 caches[li] = jax.tree.map(
                     lambda b, s: b.at[slot].set(s[0].astype(b.dtype)),
-                    caches[li], slot_caches[li])
+                    caches[li], sc)
         return caches
+
+    def kv_match_prefix(self, caches: List[Any], slot: int,
+                        tokens: List[int]) -> int:
+        """Admission-time prefix-cache probe: the longest verified prefix
+        of ``tokens`` resident in *every* layer's index is spliced into
+        row ``slot`` (refcount bumps, zero data movement).  Returns the
+        number of prompt tokens covered — the caller prefills only the
+        tail.  At least one tail token is always left so the join still
+        produces first-token logits."""
+        if (not self.prefix_cache or not caches
+                or not isinstance(caches[0], PagedLayerCache)):
+            return 0
+        tokens = [int(t) for t in tokens]
+        self.ledger.prefix_lookups += 1
+        cands = [c.meta.match_prefix(tokens) for c in caches]
+        bs = caches[0].meta.block_size
+        n = min(min(len(x) for x in cands), (len(tokens) - 1) // bs)
+        if n <= 0:
+            return 0
+        for c, cand in zip(caches, cands):
+            c.meta.map_prefix(slot, cand[:n])
+        self.ledger.prefix_hits += 1
+        self.ledger.prefix_tokens += n * bs
+        return n * bs
+
+    def kv_register_prefix(self, caches: List[Any], slot: int,
+                           tokens: List[int]) -> None:
+        """Publish row ``slot``'s fully-written prompt blocks into every
+        layer's prefix index (post-join), making them matchable by later
+        admissions."""
+        if (not self.prefix_cache or not caches
+                or not isinstance(caches[0], PagedLayerCache)):
+            return
+        tokens = [int(t) for t in tokens]
+        for c in caches:
+            c.meta.register_prefix(slot, tokens)
 
     def fork_slot(self, caches: List[Any], src: int, dst: int) -> List[Any]:
         """Slot ``dst`` becomes a fork of ``src`` (beam-group member
@@ -1037,6 +1111,7 @@ class FiddlerEngine:
             "dense_blocks": m.dense_blocks(slots),
             "unique_tokens": m.unique_tokens(slots),
             "dense_tokens": m.dense_tokens(slots),
+            "cached_blocks": m.n_cached,
         }
 
     def prefill_chunk(self, tokens: jnp.ndarray, caches: Optional[List[Any]],

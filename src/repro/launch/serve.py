@@ -8,9 +8,17 @@ SchedulerPolicy seam: fifo / priority / autoscale) and ``--slo`` assigns
 SLO classes to the generated request stream, e.g.
 ``--slo interactive=1,batch=3`` for a 1:3 class mix.
 
+``--prefix-pool N --prefix-len L`` prepends one of N shared L-token
+preambles (system prompts) to every request: with the paged layout and
+continuous scheduler, the cross-request prefix cache (on by default,
+``--no-prefix-cache`` to disable) splices the resident preamble blocks
+into each later admission and only prefills the unique tail — the
+ledger reports lookups/hits/matched tokens.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
       --policy fiddler --requests 8 --max-new 16 --scheduler continuous \
-      --sched-policy priority --slo interactive=1,batch=3
+      --sched-policy priority --slo interactive=1,batch=3 \
+      --prefix-pool 1 --prefix-len 32
 """
 import argparse
 
@@ -23,6 +31,7 @@ from repro.core import FiddlerEngine, HardwareSpec
 from repro.data.pipeline import synthetic_conversations
 from repro.data.tokenizer import ByteTokenizer
 from repro.models import Model
+from repro.models.kv_cache import layer_window
 from repro.serving.backend import FiddlerBackend, ModelBackend
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request, ServingEngine
@@ -67,6 +76,20 @@ def main(argv=None):
                     help=">1 submits every request as a gang-scheduled "
                          "beam group of this width (continuous scheduler "
                          "runs them alongside ordinary traffic)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="cross-request prefix cache over the paged KV "
+                         "pool: prompts sharing a preamble reuse its "
+                         "resident blocks and only prefill the tail "
+                         "(paged layout + continuous scheduler; "
+                         "--no-prefix-cache disables)")
+    ap.add_argument("--prefix-pool", type=int, default=0, metavar="N",
+                    help="prepend one of N shared preambles (round-robin) "
+                         "to every prompt — a system-prompt workload that "
+                         "exercises the prefix cache (default: off)")
+    ap.add_argument("--prefix-len", type=int, default=96, metavar="L",
+                    help="shared preamble length in tokens "
+                         "(with --prefix-pool)")
     args = ap.parse_args(argv)
     if args.beam_width > 1 and args.beam_width > args.slots \
             and args.scheduler == "continuous":
@@ -97,7 +120,8 @@ def main(argv=None):
                            if cfg.moe else 0,
                            rebalance_interval=args.rebalance_interval,
                            rebalance_k=args.rebalance_k,
-                           kv_layout=args.kv_layout)
+                           kv_layout=args.kv_layout,
+                           prefix_cache=args.prefix_cache)
     if args.scheduler == "continuous":
         backend = (ModelBackend(model, params, max_seq=256) if fe is None
                    else FiddlerBackend(fe, max_seq=256))
@@ -127,10 +151,25 @@ def main(argv=None):
     probs = np.asarray(weights) / np.sum(weights)
     rng = np.random.default_rng(0)
 
+    # shared system-prompt preambles for the prefix-cache workload: a
+    # ring-wrapped row cannot serve as a shared prefix, so keep
+    # preamble + tail + decode inside the smallest layer KV window
+    # (reduced Mixtral runs 64-token sliding-window rings)
+    w_min = min(layer_window(cfg, li, 256) for li in range(cfg.n_layers))
+    pre_len = min(args.prefix_len, max(16, w_min - 16 - args.max_new))
+    tail_cap = max(1, min(48, w_min - pre_len - args.max_new))
+    if args.prefix_pool and pre_len < args.prefix_len:
+        print(f"note: --prefix-len clipped to {pre_len} (layer KV window "
+              f"{w_min} with --max-new {args.max_new})")
+    pools = [rng.integers(3, min(250, cfg.vocab_size),
+                          size=pre_len).tolist()
+             for _ in range(args.prefix_pool)]
     for i, conv in enumerate(synthetic_conversations(args.requests)):
         slo = classes[int(rng.choice(len(classes), p=probs))]
-        eng.submit(Request(rid=f"req{i}",
-                           prompt=tok.encode(conv["text"])[:48],
+        prompt = tok.encode(conv["text"])[:48]
+        if pools:
+            prompt = pools[i % len(pools)] + prompt[:tail_cap]
+        eng.submit(Request(rid=f"req{i}", prompt=prompt,
                            max_new_tokens=args.max_new, slo_class=slo,
                            beam_width=args.beam_width))
     for r in eng.run():
@@ -145,6 +184,10 @@ def main(argv=None):
               f"streams={led.streams} slow={led.slow_runs} "
               f"migrations={led.migrations} "
               f"migration_time={led.migration_time:.4f}s")
+        if led.prefix_lookups:
+            print(f"prefix cache: lookups={led.prefix_lookups} "
+                  f"hits={led.prefix_hits} "
+                  f"matched_tokens={led.prefix_tokens}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import kv_cache as kvc
 from repro.models.layers import Params, apply_rope, dense_init, init_rmsnorm, rmsnorm, softcap
-from repro.models.paged_kv import PagedLayerCache
+from repro.models.paged_kv import PagedLayerCache, PagedSlotStage
 
 NEG_INF = -1e30
 
@@ -240,7 +240,7 @@ def attention_block(
         window = w
 
     q, k, v = qkv_proj(params, x, cfg, positions, rope=rope)
-    paged = isinstance(cache, PagedLayerCache)
+    paged = isinstance(cache, (PagedLayerCache, PagedSlotStage))
 
     if mode == "train":
         out = chunked_attention(

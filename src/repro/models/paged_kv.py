@@ -36,7 +36,7 @@ is what makes paper-scale simulated beam numbers honest (see
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,6 +53,92 @@ PAGE_SIZE = 16
 FRESH = "fresh"
 
 WritePlan = Tuple[int, int, int, int, int, Union[None, str, int]]
+
+
+def _chain_hashes(tokens: Sequence[int],
+                  block_size: int) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Rolling content hash per *full* block of ``tokens``: entry ``i`` is
+    ``(hash((h_{i-1}, block_i_tokens)), block_i_tokens)``.  Chaining makes
+    the hash positional — two prompts share entry ``i`` iff they share the
+    entire first ``(i+1) * block_size`` tokens."""
+    out: List[Tuple[int, Tuple[int, ...]]] = []
+    h = 0
+    for i in range(len(tokens) // block_size):
+        blk = tuple(int(t) for t in tokens[i * block_size:
+                                           (i + 1) * block_size])
+        h = hash((h, blk))
+        out.append((h, blk))
+    return out
+
+
+class PrefixIndex:
+    """Cross-request prefix cache over one :class:`BlockMeta`'s pool.
+
+    Maps chain hashes (see :func:`_chain_hashes`) of fully-written prompt
+    blocks to resident pool blocks, so a new admission can splice the
+    longest shared prefix into its block table (refcount bumps, zero data
+    movement) and prefill only the unmatched tail.  Lookups *verify* the
+    stored token content — a hash collision (or poisoned entry) breaks
+    the walk and the engine falls back to a full prefill rather than ever
+    serving wrong KV.  ``last-match`` stamps order eviction (LRU) when
+    the pool is under pressure."""
+
+    def __init__(self, block_size: int):
+        self.block_size = int(block_size)
+        # chain-hash -> (block id, that block's token content)
+        self.entries: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self.by_block: Dict[int, int] = {}   # block id -> chain-hash
+        self._stamp: Dict[int, int] = {}     # block id -> LRU clock
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def _touch(self, b: int) -> None:
+        self._clock += 1
+        self._stamp[b] = self._clock
+
+    def register(self, chain: Sequence[Tuple[int, Tuple[int, ...]]],
+                 blocks: Sequence[int]) -> None:
+        """Publish ``blocks`` (pool ids, one per chain entry) as the KV of
+        the token chain.  Existing entries win — re-registering the same
+        chain from another slot just refreshes the LRU stamp."""
+        for (h, blk), b in zip(chain, blocks):
+            b = int(b)
+            cur = self.entries.get(h)
+            if cur is not None:
+                self._touch(cur[0])
+                continue
+            if b in self.by_block:
+                # block already serves a different chain; registering the
+                # rest would leave unreachable entries — stop here
+                break
+            self.entries[h] = (b, blk)
+            self.by_block[b] = h
+            self._touch(b)
+
+    def match(self, chain: Sequence[Tuple[int, Tuple[int, ...]]]
+              ) -> List[int]:
+        """Longest verified prefix walk: pool block ids whose *stored*
+        token content equals the request's blocks.  Stops at the first
+        miss or content mismatch (collision safety)."""
+        out: List[int] = []
+        for h, blk in chain:
+            e = self.entries.get(h)
+            if e is None or e[1] != blk:
+                break
+            out.append(e[0])
+        return out
+
+    def deregister(self, b: int) -> None:
+        h = self.by_block.pop(int(b), None)
+        if h is not None:
+            self.entries.pop(h, None)
+        self._stamp.pop(int(b), None)
+
+    def lru_block(self, blocks) -> int:
+        """Least-recently-matched block of ``blocks`` (reclaim victim)."""
+        return min(blocks, key=lambda b: self._stamp.get(b, 0))
 
 
 class BlockMeta:
@@ -77,6 +163,12 @@ class BlockMeta:
         self.ref = np.zeros(self.n_blocks, np.int32)
         self.fill = np.zeros(self.n_blocks, np.int32)  # written lanes per block
         self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        # cross-request prefix cache (None = disabled, the default): the
+        # index maps content-hash chains to resident blocks; ``_cached``
+        # holds ref==0 blocks retained for reuse (reclaimed LRU under
+        # pool pressure instead of being freed eagerly)
+        self.index: Optional[PrefixIndex] = None
+        self._cached: set = set()
 
     # -- introspection ------------------------------------------------------
     @property
@@ -86,6 +178,16 @@ class BlockMeta:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    @property
+    def n_cached(self) -> int:
+        """Unreferenced blocks retained by the prefix cache."""
+        return len(self._cached)
+
+    def enable_prefix_cache(self) -> PrefixIndex:
+        if self.index is None:
+            self.index = PrefixIndex(self.block_size)
+        return self.index
 
     def mapped_blocks(self, slots: Optional[Sequence[int]] = None) -> np.ndarray:
         t = self.table if slots is None else self.table[np.asarray(slots, int)]
@@ -115,6 +217,10 @@ class BlockMeta:
 
     # -- allocation ---------------------------------------------------------
     def _alloc(self) -> int:
+        if not self._free and self._cached:
+            # pool pressure: reclaim the least-recently-matched cached
+            # prefix block (eviction-aware prefix cache, LRU by last match)
+            self._evict_cached(self.index.lru_block(self._cached))
         if not self._free:
             raise RuntimeError("KV block pool exhausted")
         b = self._free.pop()
@@ -122,14 +228,31 @@ class BlockMeta:
         self.fill[b] = 0
         return b
 
+    def _evict_cached(self, b: int) -> None:
+        b = int(b)
+        assert b in self._cached and self.ref[b] == 0, b
+        self._cached.discard(b)
+        self.index.deregister(b)
+        self.fill[b] = 0
+        self._free.append(b)
+
     def _unref(self, b: int) -> None:
         if b <= 0:
             return
         self.ref[b] -= 1
         assert self.ref[b] >= 0, b
         if self.ref[b] == 0:
-            self.fill[b] = 0
-            self._free.append(b)
+            if self.index is not None and int(b) in self.index.by_block:
+                self._cached.add(int(b))  # resident for prefix reuse
+            else:
+                self.fill[b] = 0
+                self._free.append(b)
+
+    def _deregister_written(self, b: int) -> None:
+        """An in-place write is about to change ``b``'s content: its
+        published prefix entry (if any) would go stale — drop it."""
+        if self.index is not None and b in self.index.by_block:
+            self.index.deregister(b)
 
     def _writable(self, slot: int, j: int) -> Tuple[int, Union[None, str, int]]:
         """Make table entry ``(slot, j)`` exclusively owned; returns
@@ -142,6 +265,7 @@ class BlockMeta:
             self.table[slot, j] = nb
             return nb, FRESH
         if self.ref[b] == 1:
+            self._deregister_written(b)
             return b, None
         nb = self._alloc()
         self.fill[nb] = self.fill[b]
@@ -179,6 +303,51 @@ class BlockMeta:
         for s in slots:
             self.release_slot(int(s))
         self.table[slots] = rows
+
+    # -- cross-request prefix cache -----------------------------------------
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Verified longest-prefix lookup: resident block ids whose stored
+        content equals the head of ``tokens`` (full blocks only).  Pure
+        read — :meth:`map_prefix` performs the splice."""
+        if self.index is None:
+            return []
+        chain = _chain_hashes(tokens, self.block_size)
+        out: List[int] = []
+        for b in self.index.match(chain[: self.blocks_per_slot]):
+            if self.fill[b] != self.block_size:
+                break  # stale entry (paranoia): never serve partial blocks
+            out.append(b)
+        return out
+
+    def map_prefix(self, slot: int, blocks: Sequence[int]) -> None:
+        """Splice matched prefix blocks into the head of ``slot``'s table
+        (admission hit): refcount bumps only, zero data movement — COW
+        keeps any later divergent write private."""
+        for j, b in enumerate(blocks):
+            b = int(b)
+            assert self.table[slot, j] == 0, (slot, j)
+            assert self.fill[b] == self.block_size, (b, int(self.fill[b]))
+            if self.ref[b] == 0:
+                self._cached.discard(b)
+            self.ref[b] += 1
+            self.table[slot, j] = b
+            self.index._touch(b)
+
+    def register_prefix(self, slot: int, tokens: Sequence[int]) -> None:
+        """Publish ``slot``'s fully-written prompt blocks into the prefix
+        index so later admissions can reuse them.  Only position-aligned
+        blocks are publishable, so ring-wrapped sequences (longer than
+        the window) are skipped entirely."""
+        if self.index is None or len(tokens) > self.window:
+            return
+        chain = _chain_hashes(tokens, self.block_size)
+        good: List[int] = []
+        for j in range(min(len(chain), self.blocks_per_slot)):
+            b = int(self.table[slot, j])
+            if b <= 0 or self.fill[b] != self.block_size:
+                break  # content-incomplete tail: stop at first gap
+            good.append(b)
+        self.index.register(chain[: len(good)], good)
 
     def resize(self, n_slots: int) -> int:
         """Grow/shrink the table to ``n_slots`` rows; returns how many
@@ -231,15 +400,24 @@ class BlockMeta:
     # -- invariants (property tests) ----------------------------------------
     def check(self) -> None:
         """Refcount/free-list consistency: every block's refcount equals
-        its table occurrences, freed blocks are exactly the unmapped
-        ones, and nothing leaks."""
+        its table occurrences, unreferenced blocks are exactly the free
+        ones plus the retained prefix-cache residents, and nothing
+        leaks."""
         occ = np.bincount(self.table.ravel(), minlength=self.n_blocks)
         assert (self.ref[1:] == occ[1:]).all(), "refcount != table occurrences"
         free = set(self._free)
         assert len(free) == len(self._free), "free-list duplicates"
+        assert not (free & self._cached), "cached block on the free list"
         for b in range(1, self.n_blocks):
-            assert (self.ref[b] == 0) == (b in free), b
-        assert self.blocks_in_use() + self.n_free == self.n_blocks - 1
+            assert (self.ref[b] == 0) == (b in free or b in self._cached), b
+        for b in self._cached:
+            assert self.index is not None and b in self.index.by_block, b
+            assert self.fill[b] == self.block_size, (b, int(self.fill[b]))
+        if self.index is not None:
+            for b, h in self.index.by_block.items():
+                assert self.index.entries.get(h, (None,))[0] == b, (b, h)
+        assert (self.blocks_in_use() + self.n_free + self.n_cached
+                == self.n_blocks - 1)
 
 
 class PagedLayerCache:
@@ -311,6 +489,21 @@ class PagedLayerCache:
         self.pos = self.pos.at[bi, oi].set(
             jnp.asarray(pos[ri], jnp.int32))
 
+    def _write_chunk_row(self, slot: int, k_row: jnp.ndarray,
+                         v_row: jnp.ndarray, p0: int, p1: int) -> None:
+        """Write one slot's contiguous chunk ``[p0, p1)`` from ``(S, ...)``
+        per-token arrays (shared by the batch writer and
+        :class:`PagedSlotStage`)."""
+        skip = max(p0, p1 - self.window) - p0  # ring: last window wins
+        for b, o0, o1, t0, t1, src in self.meta.write_span(slot, p0, p1):
+            self._prepare(b, src)
+            self.k = self.k.at[b, o0:o1].set(
+                k_row[skip + t0: skip + t1].astype(self.k.dtype))
+            self.v = self.v.at[b, o0:o1].set(
+                v_row[skip + t0: skip + t1].astype(self.v.dtype))
+            self.pos = self.pos.at[b, o0:o1].set(
+                jnp.arange(p0 + skip + t0, p0 + skip + t1, dtype=jnp.int32))
+
     def write_prefill_chunk(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
                             positions: np.ndarray,
                             active: Optional[np.ndarray] = None) -> None:
@@ -323,15 +516,7 @@ class PagedLayerCache:
         for i in rows:
             p0, p1 = int(positions[i, 0]), int(positions[i, -1]) + 1
             assert p1 - p0 == S, "chunk positions must be contiguous"
-            skip = max(p0, p1 - self.window) - p0  # ring: last window wins
-            for b, o0, o1, t0, t1, src in self.meta.write_span(i, p0, p1):
-                self._prepare(b, src)
-                self.k = self.k.at[b, o0:o1].set(
-                    k_new[i, skip + t0: skip + t1].astype(self.k.dtype))
-                self.v = self.v.at[b, o0:o1].set(
-                    v_new[i, skip + t0: skip + t1].astype(self.v.dtype))
-                self.pos = self.pos.at[b, o0:o1].set(
-                    jnp.arange(p0 + skip + t0, p0 + skip + t1, dtype=jnp.int32))
+            self._write_chunk_row(int(i), k_new[i], v_new[i], p0, p1)
 
     def write_prefill(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
         """Fresh prompt at positions 0..S-1 for every slot."""
@@ -390,3 +575,57 @@ class PagedLayerCache:
             self.pos = jnp.concatenate(
                 [self.pos, jnp.full((need,) + self.pos.shape[1:], -1,
                                     self.pos.dtype)])
+
+
+class PagedSlotStage:
+    """Batch-1 staging *view* over one slot of a parent
+    :class:`PagedLayerCache`.
+
+    Chunked admission used to prefill into a private batch-1 pool and
+    join the multi-slot cache via a block-by-block device copy
+    (:meth:`PagedLayerCache.copy_in`).  A stage instead allocates its
+    blocks straight from the target pool, through the parent's
+    :class:`BlockMeta` (so refcounts/COW hold): the join becomes a pure
+    table splice that moves zero device bytes, and — crucially for the
+    prefix cache — the tail chunks of a prefix-matched admission attend
+    to the shared blocks already mapped into the slot's table row."""
+
+    layout = "paged"
+
+    def __init__(self, parent: PagedLayerCache, slot: int):
+        self.parent = parent
+        self.slot = int(slot)
+
+    @property
+    def window(self) -> int:
+        return self.parent.window
+
+    @property
+    def meta(self) -> BlockMeta:
+        return self.parent.meta
+
+    def write_prefill_chunk(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                            positions: np.ndarray,
+                            active: Optional[np.ndarray] = None) -> None:
+        positions = np.asarray(positions, np.int64)
+        assert k_new.shape[0] == 1 and positions.shape[0] == 1, "batch-1 stage"
+        p0, p1 = int(positions[0, 0]), int(positions[0, -1]) + 1
+        assert p1 - p0 == positions.shape[1], "chunk positions must be contiguous"
+        self.parent._write_chunk_row(self.slot, k_new[0], v_new[0], p0, p1)
+
+    def write_prefill(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> None:
+        S = k_new.shape[1]
+        positions = np.arange(S, dtype=np.int64)[None]
+        self.write_prefill_chunk(k_new, v_new, positions)
+
+    def view(self) -> dict:
+        """Dense batch-1 view of just the staged slot's table row —
+        bit-identical to what a private staging cache would expose at the
+        same logical state."""
+        p = self.parent
+        tbl = jnp.asarray(p.meta.table[self.slot: self.slot + 1])
+        w = p.window
+        k = p.k[tbl].reshape(1, -1, *p.k.shape[2:])[:, :w]
+        v = p.v[tbl].reshape(1, -1, *p.v.shape[2:])[:, :w]
+        pos = p.pos[tbl].reshape(1, -1)[:, :w]
+        return {"k": k, "v": v, "pos": pos}

@@ -81,15 +81,36 @@ class ServingBackend:
         raise NotImplementedError
 
     def prefill_chunk(self, slot_cache: Optional[Any],
-                      chunk: Sequence[int], pos_offset: int
+                      chunk: Sequence[int], pos_offset: int,
+                      cache: Any = None, slot: Optional[int] = None
                       ) -> Tuple[np.ndarray, Any]:
         """Process one prompt chunk at ``pos_offset``; ``slot_cache`` is
         None on the first chunk.  Returns ((V,) logits of the chunk's last
-        position, updated batch-1 cache)."""
+        position, updated batch-1 cache).  ``cache``/``slot`` (optional)
+        name the multi-slot row this prefill will join: paged backends
+        then stage the chunks directly into that row's pool blocks, so
+        ``write_slot`` is a zero-copy table splice and prefix-matched
+        blocks already in the row are attended to."""
         raise NotImplementedError
 
     def write_slot(self, cache: Any, slot_cache: Any, slot: int) -> Any:
         raise NotImplementedError
+
+    # -- cross-request prefix cache ------------------------------------------
+    def match_prefix(self, cache: Any, slot: int,
+                     tokens: Sequence[int]) -> int:
+        """Admission probe: splice the longest resident verified prefix of
+        ``tokens`` into row ``slot`` (refcount bumps, COW on divergence)
+        and return how many prompt tokens it covers — the scheduler then
+        prefills only the tail.  Default: no prefix cache (dense/Model
+        backends) — always 0, the clean no-op."""
+        return 0
+
+    def register_prefix(self, cache: Any, slot: int,
+                        tokens: Sequence[int]) -> None:
+        """Publish row ``slot``'s fully-written prompt blocks for reuse by
+        later admissions (post-join).  Default: no-op."""
+        return None
 
     def resize_cache(self, cache: Any, n_slots: int) -> Any:
         """Re-allocate the multi-slot cache with ``n_slots`` rows,
@@ -200,7 +221,10 @@ class ModelBackend(ServingBackend):
             self.params, jnp.asarray([list(prompt)], jnp.int32))
         return np.asarray(logits[0]), cache
 
-    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+    def prefill_chunk(self, slot_cache, chunk, pos_offset,
+                      cache=None, slot=None):
+        # dense layout: staging stays a private batch-1 cache (cache/slot
+        # hints are paged-only)
         if slot_cache is None:
             slot_cache = self.model.make_cache(1, self.max_seq,
                                                dtype=jnp.float32)
@@ -293,7 +317,14 @@ class FiddlerBackend(ServingBackend):
             jnp.asarray([list(prompt)], jnp.int32), self.max_seq)
         return np.asarray(logits[0]), caches
 
-    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+    def prefill_chunk(self, slot_cache, chunk, pos_offset,
+                      cache=None, slot=None):
+        if (slot_cache is None and cache is not None and slot is not None
+                and self.engine.kv_layout == "paged"):
+            # stage the chunks straight into the target pool row: the
+            # join is then a pure table splice (write_slot no-op) and any
+            # prefix-matched blocks already in the row are attended to
+            slot_cache = self.engine.make_slot_stage(cache, slot)
         logits, slot_cache = self.engine.prefill_chunk(
             jnp.asarray([list(chunk)], jnp.int32), slot_cache, pos_offset,
             self.max_seq)
@@ -301,6 +332,12 @@ class FiddlerBackend(ServingBackend):
 
     def write_slot(self, cache, slot_cache, slot):
         return self.engine.write_slot(cache, slot_cache, slot)
+
+    def match_prefix(self, cache, slot, tokens):
+        return self.engine.kv_match_prefix(cache, slot, list(tokens))
+
+    def register_prefix(self, cache, slot, tokens):
+        self.engine.kv_register_prefix(cache, slot, list(tokens))
 
     def resize_cache(self, cache, n_slots):
         if self.engine.kv_layout == "paged":
@@ -397,28 +434,61 @@ class SimulatedBackend(ServingBackend):
     # ledger (and the table bookkeeping that feeds its KV charging) matters
     def make_cache(self, n_slots: int) -> Any:
         from repro.models.paged_kv import BlockMeta
-        return {"n_slots": n_slots,
-                "meta": BlockMeta(n_slots, self.max_seq)}
+        meta = BlockMeta(n_slots, self.max_seq)
+        if getattr(self.engine, "prefix_cache", False):
+            meta.enable_prefix_cache()
+        # ``matched``: per-slot prompt tokens spliced from the prefix
+        # index at admission (write_slot then skips re-writing them)
+        return {"n_slots": n_slots, "meta": meta, "matched": {}}
 
     def resize_cache(self, cache: Any, n_slots: int) -> Any:
         cache["meta"].resize(n_slots)
-        return {"n_slots": n_slots, "meta": cache["meta"]}
+        return {"n_slots": n_slots, "meta": cache["meta"],
+                "matched": cache.get("matched", {})}
 
     def prefill(self, prompt):
         n = len(list(prompt))
         self.engine.simulate_prefill_chunk(n, kv_len=n)
         return self._logits(), {"staged": n}
 
-    def prefill_chunk(self, slot_cache, chunk, pos_offset):
+    def prefill_chunk(self, slot_cache, chunk, pos_offset,
+                      cache=None, slot=None):
         n = len(list(chunk))
         self.engine.simulate_prefill_chunk(n, kv_len=pos_offset + n)
         return self._logits(), {"staged": pos_offset + n}
 
     def write_slot(self, cache, slot_cache, slot):
         meta = cache["meta"]
-        meta.release_slot(slot)
-        meta.write_span(slot, 0, int(slot_cache["staged"]))
+        start = int(cache.get("matched", {}).pop(slot, 0))
+        if start == 0:
+            meta.release_slot(slot)
+        # a prefix-matched slot keeps its spliced head blocks and only
+        # appends the freshly-prefilled tail
+        meta.write_span(slot, start, int(slot_cache["staged"]))
         return cache
+
+    def match_prefix(self, cache, slot, tokens):
+        meta = cache["meta"]
+        if meta.index is None:
+            return 0
+        led = self.engine.ledger
+        led.prefix_lookups += 1
+        tokens = [int(t) for t in tokens]
+        blocks = meta.match_prefix(tokens)
+        bs = meta.block_size
+        n = min(len(blocks), (len(tokens) - 1) // bs)
+        if n <= 0:
+            return 0
+        meta.map_prefix(slot, blocks[:n])
+        cache.setdefault("matched", {})[slot] = n * bs
+        led.prefix_hits += 1
+        led.prefix_tokens += n * bs
+        return n * bs
+
+    def register_prefix(self, cache, slot, tokens):
+        meta = cache["meta"]
+        if meta.index is not None:
+            meta.register_prefix(slot, [int(t) for t in tokens])
 
     def decode_slots(self, cache, tokens, pos, active):
         active = np.asarray(active, bool)
@@ -442,6 +512,7 @@ class SimulatedBackend(ServingBackend):
 
     def release_slot(self, cache, slot):
         cache["meta"].release_slot(slot)
+        cache.get("matched", {}).pop(slot, None)
         return cache
 
     def block_stats(self, cache, slots=None):
@@ -449,7 +520,8 @@ class SimulatedBackend(ServingBackend):
         return {"unique_blocks": m.blocks_in_use(slots),
                 "dense_blocks": m.dense_blocks(slots),
                 "unique_tokens": m.unique_tokens(slots),
-                "dense_tokens": m.dense_tokens(slots)}
+                "dense_tokens": m.dense_tokens(slots),
+                "cached_blocks": m.n_cached}
 
     # group API (static scheduler over the simulation)
     def prefill_group(self, prompts):

@@ -36,9 +36,26 @@ the paged KV layout the beams *share* their prompt-prefix blocks — and
 each decode step ends with a beam reshuffle via ``reorder_slots`` (a
 block-table permutation: zero KV data movement).  Preemption is atomic
 too: evicting any member returns the whole group (with its per-beam
-tokens and scores) to the queue; re-admission re-prefills every beam and
-resumes the search exactly where it stopped.  Beam groups interleave
-freely with ordinary requests in the same decode batch.
+tokens and scores) to the queue.  Re-admission mirrors fresh admission:
+the shared prompt is re-prefilled *once* into the lead slot, the
+siblings are ``fork_slot`` aliases again (prompt sharing survives
+preemption), and each beam's own emitted tokens are *replayed* through
+per-slot decode steps to rebuild its divergent KV before the search
+resumes.  A beam that emits ``EOS_ID`` is frozen (finished set); the
+gang retires early once every beam has finished, releasing its
+slots/blocks, and hypotheses are ranked by length-normalised score.
+Beam groups interleave freely with ordinary requests in the same decode
+batch.
+
+**Cross-request prefix cache** (paged backends, ``FiddlerEngine(
+prefix_cache=True)``, the default): at admission the backend matches the
+prompt against the content-hash index over resident blocks
+(models/paged_kv.PrefixIndex), splices the longest verified prefix into
+the slot's block table (refcount bumps, COW on divergence) and the
+engine chunk-prefills only the unmatched tail; after the join the slot's
+own full prompt blocks are registered for later admissions.  Repeated
+system prompts / few-shot preambles across requests are therefore
+prefilled once and charged once (unique-block KV accounting).
 """
 from __future__ import annotations
 
@@ -69,21 +86,27 @@ RATE_EWMA_ALPHA = 0.3
 @dataclass
 class _BeamGroup:
     """Gang state of one in-flight beam group: W slots decoding in
-    lockstep, reshuffled together each step."""
+    lockstep, reshuffled together each step.  ``done[j]`` freezes beam
+    ``j`` after it emits EOS (its slot leaves the decode mask but keeps
+    its KV until the gang retires); ``resuming`` marks a re-admitted
+    group whose lead is re-prefilling the shared prompt."""
     req: Request
     slots: List[int]                      # member slot indices (lead first)
     scores: Optional[np.ndarray] = None   # (W,) cumulative log-probs
     tokens: List[List[int]] = field(default_factory=list)  # per-beam emitted
+    done: List[bool] = field(default_factory=list)   # finished-beam set
+    resuming: bool = False
 
     def ready(self, slots: List["_Slot"]) -> bool:
-        """All members prefilled and decoding — the gang barrier."""
-        return all(slots[i].phase == "decode" for i in self.slots)
+        """All members prefilled and decoding (or finished) — the gang
+        barrier."""
+        return all(slots[i].phase in ("decode", "done") for i in self.slots)
 
 
 @dataclass
 class _Slot:
     req: Optional[Request] = None
-    phase: str = "idle"        # idle | prefill | reserved | decode
+    phase: str = "idle"   # idle | prefill | reserved | replay | decode | done
     pos: int = 0               # next decode position
     last_token: int = 0
     steps_left: int = 0
@@ -91,7 +114,7 @@ class _Slot:
     prefilled: int = 0         # prompt tokens already processed
     started: Optional[float] = None  # backend-clock admission time
     group: Optional[_BeamGroup] = None  # beam-gang membership
-    resume_seq: Optional[List[int]] = None  # per-beam re-prefill sequence
+    replay: Optional[List[int]] = None  # beam tokens re-fed after gang resume
 
 
 class ContinuousEngine:
@@ -243,7 +266,8 @@ class ContinuousEngine:
             req = grp.req
             req.preemptions += 1
             req.beam_resume = {"tokens": [list(t) for t in grp.tokens],
-                               "scores": np.asarray(grp.scores).copy()}
+                               "scores": np.asarray(grp.scores).copy(),
+                               "done": list(grp.done)}
             for si in grp.slots:
                 self.cache = self.backend.release_slot(self.cache, si)
                 self.slots[si] = _Slot()
@@ -265,13 +289,15 @@ class ContinuousEngine:
     # ------------------------------------------------------------------
     def _admit_gang(self, req: Request, slots: List[int],
                     now: float) -> None:
-        """Claim ``slots`` for a beam group atomically.  Fresh groups put
-        the lead slot into prefill (one shared prompt prefill; members
-        are forked from it on completion); resumed groups re-prefill
-        every beam's own sequence, then the gang barrier releases them
-        into lockstep decode together."""
+        """Claim ``slots`` for a beam group atomically.  Fresh and
+        resumed groups alike put only the *lead* slot into prefill (one
+        shared prompt prefill — prompt sharing survives preemption) and
+        reserve the siblings; on completion the lead is forked into them
+        and a resumed group replays each beam's own emitted tokens to
+        rebuild its divergent KV (see ``_resume_group_fork``)."""
         grp = _BeamGroup(req=req, slots=list(slots))
         resume = req.beam_resume
+        grp.resuming = resume is not None
         for j, i in enumerate(slots):
             slot = self.slots[i]
             slot.req = req
@@ -279,15 +305,11 @@ class ContinuousEngine:
             slot.staging = None
             slot.prefilled = 0
             slot.started = now
-            if resume is None:
-                slot.phase = "prefill" if j == 0 else "reserved"
-            else:
-                beam = resume["tokens"][j]
-                slot.phase = "prefill"
-                slot.resume_seq = list(req.prompt) + list(beam[:-1])
+            slot.phase = "prefill" if j == 0 else "reserved"
         if resume is not None:
             grp.tokens = [list(t) for t in resume["tokens"]]
             grp.scores = np.asarray(resume["scores"]).copy()
+            grp.done = list(resume.get("done") or [False] * len(slots))
             req.beam_resume = None
 
     def _admit(self) -> None:
@@ -335,7 +357,8 @@ class ContinuousEngine:
         """The lead slot's shared prompt prefill finished: pick the top-W
         distinct continuations of beam 0, fork the lead slot's KV into
         every member (block-table aliases under the paged layout — the
-        beams share the prompt prefix) and release the gang into decode."""
+        beams share the prompt prefix) and release the gang into decode.
+        A first token that is already EOS freezes that beam immediately."""
         slot = self.slots[lead]
         grp, req = slot.group, slot.req
         W = len(grp.slots)
@@ -343,6 +366,7 @@ class ContinuousEngine:
         first = np.argsort(-logp)[:W]
         grp.scores = logp[first]
         grp.tokens = [[int(t)] for t in first]
+        grp.done = [False] * W
         now = self.clock()
         req.ttft = now - req.arrival
         req.token_times.append(now)
@@ -355,57 +379,84 @@ class ContinuousEngine:
             s.pos = S
             s.last_token = grp.tokens[j][0]
             s.steps_left = req.max_new_tokens - 1
-        if req.max_new_tokens <= 1:
+            if s.last_token == EOS_ID:
+                grp.done[j] = True
+                s.phase = "done"
+        if req.max_new_tokens <= 1 or all(grp.done):
             self._retire_group(grp)
 
-    def _resume_group_slot(self, i: int) -> None:
-        """One beam's re-prefill finished (gang re-admission): restore
-        its decode state; the gang barrier (``_BeamGroup.ready``) holds
-        the group out of the decode batch until every beam is back."""
-        slot = self.slots[i]
-        grp = slot.group
-        j = grp.slots.index(i)
-        beam = grp.tokens[j]
-        slot.resume_seq = None
-        slot.phase = "decode"
-        slot.pos = len(grp.req.prompt) + len(beam) - 1
-        slot.last_token = beam[-1]
-        slot.steps_left = grp.req.max_new_tokens - len(beam)
+    def _resume_group_fork(self, lead: int) -> None:
+        """Gang re-admission: the shared prompt was re-prefilled *once*
+        into the lead slot — fork it into every sibling (block-table
+        aliases under the paged layout, so prompt sharing survives
+        preemption exactly as at fresh activation) and set each live beam
+        up to *replay* its own emitted tokens through per-slot decode
+        steps, rebuilding the divergent KV bit-identically to the
+        original decode.  The gang barrier holds the group until every
+        replay finishes."""
+        slot = self.slots[lead]
+        grp, req = slot.group, slot.req
+        grp.resuming = False
+        S = len(req.prompt)
+        for j, si in enumerate(grp.slots):
+            if si != lead:
+                self.cache = self.backend.fork_slot(self.cache, lead, si)
+            s = self.slots[si]
+            if grp.done[j]:
+                s.phase = "done"  # finished before eviction: stays frozen
+                continue
+            beam = grp.tokens[j]
+            s.pos = S
+            s.last_token = beam[0]
+            s.steps_left = req.max_new_tokens - len(beam)
+            if len(beam) == 1:
+                s.phase = "decode"   # nothing to replay
+            else:
+                s.phase = "replay"
+                s.replay = list(beam)
 
     def _prefill_step(self) -> None:
         """Advance every prefilling slot by one chunk (or the whole prompt
-        when chunking is off)."""
+        when chunking is off).  First touch probes the backend's prefix
+        cache: the longest resident verified prefix is spliced into the
+        slot's block table and only the unmatched tail is prefilled."""
         for i, slot in enumerate(self.slots):
             if slot.phase != "prefill":
                 continue
             req = slot.req
             if slot.group is not None:
-                group_resume = slot.resume_seq is not None
-                seq = slot.resume_seq if group_resume else req.prompt
+                # gangs (fresh or resuming) prefill the shared prompt
+                # once, into the lead slot only
                 resume = False
+                seq = list(req.prompt)
             else:
-                group_resume = False
                 resume = len(req.output) > 0  # preempted: re-prefill KV
-                seq = self._resume_tokens(req) if resume else req.prompt
-            if self.prefill_chunk is None:
+                seq = self._resume_tokens(req) if resume else list(req.prompt)
+            if slot.staging is None and slot.prefilled == 0:
+                # admission: runs exactly once per prefill (a chunk is
+                # processed right after, making staging/prefilled truthy)
+                slot.prefilled = self.backend.match_prefix(self.cache, i, seq)
+            if self.prefill_chunk is None and slot.prefilled == 0:
                 logits, slot.staging = self.backend.prefill(seq)
                 slot.prefilled = len(seq)
             else:
-                chunk = seq[slot.prefilled:
-                            slot.prefilled + self.prefill_chunk]
+                size = self.prefill_chunk or len(seq)
+                chunk = seq[slot.prefilled: slot.prefilled + size]
                 logits, slot.staging = self.backend.prefill_chunk(
-                    slot.staging, chunk, slot.prefilled)
+                    slot.staging, chunk, slot.prefilled,
+                    cache=self.cache, slot=i)
                 slot.prefilled += len(chunk)
                 if slot.prefilled < len(seq):
                     continue  # more chunks; in-flight decodes run meanwhile
             # prefill complete: join the multi-slot batch
             self.cache = self.backend.write_slot(self.cache, slot.staging, i)
             slot.staging = None
-            if group_resume:
-                self._resume_group_slot(i)
-                continue
+            self.backend.register_prefix(self.cache, i, seq)
             if slot.group is not None:
-                self._activate_group(i, logits)
+                if slot.group.resuming:
+                    self._resume_group_fork(i)
+                else:
+                    self._activate_group(i, logits)
                 continue
             slot.phase = "decode"
             if resume:
@@ -439,14 +490,26 @@ class ContinuousEngine:
         self.slots[i] = _Slot()
 
     def _retire_group(self, grp: _BeamGroup) -> None:
-        """The group's step budget is exhausted: report the best beam as
-        ``output`` (all beams in ``beam_tokens``/``beam_scores``) and
-        free every member slot."""
+        """The group finished (every beam hit EOS, or the step budget /
+        sequence cap ran out): rank hypotheses by length-normalised score
+        (EOS-finished beams are shorter — raw sums would unfairly favour
+        them; ties keep the running descending order), report the best as
+        ``output`` (all beams in ``beam_tokens``/``beam_scores``, short
+        rows padded with PAD_ID) and free every member slot."""
         req = grp.req
-        req.output = list(grp.tokens[0])   # scores are kept descending
-        req.beam_tokens = np.asarray([list(t) for t in grp.tokens],
-                                     np.int32)
-        req.beam_scores = np.asarray(grp.scores)
+        W = len(grp.slots)
+        scores = np.asarray(grp.scores)
+        lnorm = scores.astype(np.float64) / np.maximum(
+            [len(t) for t in grp.tokens], 1)
+        order = sorted(range(W), key=lambda j: -lnorm[j])
+        toks = [list(grp.tokens[j]) for j in order]
+        width = max(len(t) for t in toks)
+        padded = np.full((W, width), PAD_ID, np.int32)
+        for r, t in enumerate(toks):
+            padded[r, : len(t)] = t
+        req.output = list(toks[0])
+        req.beam_tokens = padded
+        req.beam_scores = scores[order]
         req.latency = self.clock() - req.arrival
         self.finished.append(req)
         for si in grp.slots:
@@ -455,31 +518,47 @@ class ContinuousEngine:
 
     def _beam_step(self, grp: _BeamGroup, logits: np.ndarray,
                    now: float) -> None:
-        """One lockstep extension of a live beam group: top-W over the
-        group's candidates, then the reshuffle — ``reorder_slots`` is a
-        block-table permutation under the paged layout, so no KV moves."""
-        rows = grp.slots
+        """One lockstep extension of the group's *live* beams: top-k over
+        their candidates, then the reshuffle — ``reorder_slots`` is a
+        block-table permutation under the paged layout, so no KV moves.
+        A beam whose picked token is EOS joins the finished set (slot
+        frozen, KV kept); the gang retires early once all beams finish."""
+        act = [j for j in range(len(grp.slots)) if not grp.done[j]]
+        rows = [grp.slots[j] for j in act]
         lp = np.asarray(log_softmax(jnp.asarray(logits[rows])))
-        beam_idx, tok_idx, grp.scores = _top_w(grp.scores, lp, len(rows))
-        grp.tokens = [grp.tokens[int(b)] + [int(t)]
+        scores = np.array(grp.scores)  # writable copy, native dtype
+        beam_idx, tok_idx, new_scores = _top_w(scores[act], lp, len(rows))
+        new_tokens = [grp.tokens[act[int(b)]] + [int(t)]
                       for b, t in zip(beam_idx, tok_idx)]
         src = [rows[int(b)] for b in beam_idx]
         if src != rows:
             self.cache = self.backend.reorder_slots(self.cache, rows, src)
-        done = False
-        for j, si in enumerate(rows):
-            s = self.slots[si]
+        budget_out = False
+        for k, j in enumerate(act):
+            scores[j] = new_scores[k]
+            grp.tokens[j] = new_tokens[k]
+            s = self.slots[rows[k]]
             s.pos += 1
-            s.last_token = int(tok_idx[j])
+            s.last_token = int(tok_idx[k])
             s.steps_left -= 1
-            done = done or s.steps_left <= 0 or s.pos >= self.max_seq - 1
+            if s.last_token == EOS_ID:
+                grp.done[j] = True
+                s.phase = "done"
+            budget_out = (budget_out or s.steps_left <= 0
+                          or s.pos >= self.max_seq - 1)
+        grp.scores = scores
         grp.req.token_times.append(now)
-        if done:
+        if budget_out or all(grp.done):
             self._retire_group(grp)
 
     def _decode_step(self) -> None:
         def live(i: int) -> bool:
             s = self.slots[i]
+            if s.phase == "replay":
+                # gang resume: re-feeding a beam's own emitted tokens to
+                # rebuild its KV — runs regardless of the gang barrier
+                # (the replays ARE what brings the gang back)
+                return True
             if s.phase != "decode":
                 return False
             # gang barrier: a beam group only decodes once every member
@@ -505,6 +584,18 @@ class ContinuousEngine:
             if not decoding[i]:
                 continue
             s = self.slots[i]
+            if s.phase == "replay":
+                # the step wrote replay[t]'s KV; its logits are known
+                # history — feed the next recorded token instead
+                s.pos += 1
+                t = s.pos - len(s.req.prompt)  # beam tokens already written
+                if t >= len(s.replay) - 1:
+                    s.last_token = s.replay[-1]
+                    s.replay = None
+                    s.phase = "decode"  # barrier releases when all arrive
+                else:
+                    s.last_token = s.replay[t]
+                continue
             if s.group is not None:
                 groups.setdefault(id(s.group), s.group)
                 continue
@@ -543,11 +634,13 @@ class ContinuousEngine:
         return False
 
     def run(self, max_steps: int = 10_000,
-            on_exhausted: str = "warn") -> List[Request]:
+            on_exhausted: str = "warn", on_step=None) -> List[Request]:
         """Drive the scheduler until every request finishes or
         ``max_steps`` ticks elapse.  An exhausted step budget with work
         still queued/in flight warns (``on_exhausted="warn"``, default)
-        or raises (``"raise"``) instead of silently dropping requests."""
+        or raises (``"raise"``) instead of silently dropping requests.
+        ``on_step(engine)``, if given, is called after every tick —
+        benchmarks use it to sample peak KV residency."""
         assert on_exhausted in ("warn", "raise", "ignore"), on_exhausted
         steps = 0
         while (self.queue or self.active) and steps < max_steps:
@@ -560,6 +653,8 @@ class ContinuousEngine:
                 if future:
                     self.backend.wait_until(min(future))
             self.step()
+            if on_step is not None:
+                on_step(self)
             steps += 1
         if self.queue or self.active:
             msg = (f"ContinuousEngine.run: step budget max_steps="

@@ -14,6 +14,11 @@ SLO-class/deadline-aware with ``PriorityPolicy`` so interactive requests
 batch ahead of bulk work.  Preemption and slot autoscaling are
 continuous-batching mechanisms; the static engine consumes only the
 admission order.
+
+The cross-request prefix cache (serving/continuous.py) is likewise a
+continuous-batching mechanism: static groups build ephemeral per-batch
+caches that die with the group, so there are no resident blocks to
+match against — the prefix hooks are clean no-ops here by design.
 """
 from __future__ import annotations
 
