@@ -1,0 +1,36 @@
+"""fiddlint — repo-specific static analysis for the Fiddler hot-path
+invariants.
+
+The compiler cannot see the properties Fiddler's speedups rest on: the
+CPU-GPU overlap path must never implicitly sync the device inside the
+step loop, jit caches must stay bounded under arbitrary routing, paged
+KV blocks must be released on every exit path, every latency source must
+be charged to the ledger, and host-pool shared state needs locks.  Each
+of those is a FID rule here (see docs/invariants.md):
+
+  FID001  host-sync-in-hot-path
+  FID002  jit-cache-explosion
+  FID003  block-refcount-escape
+  FID004  ledger-charge-completeness
+  FID005  unsynchronized-host-pool-state
+
+Run the suite with ``python -m repro.analysis.lint [paths...]``; config
+lives in ``[tool.fiddlint]`` in pyproject.toml, grandfathered findings
+in the committed baseline file, and inline suppressions use
+``# fiddlint: ignore[FID00N] reason``.
+
+The package is deliberately pure-stdlib (ast/json/argparse) so the CLI
+and the tier-1 gate test run without importing jax.
+"""
+from repro.analysis.config import FiddlintConfig, load_config
+from repro.analysis.core import Baseline, Finding, run_lint
+from repro.analysis.project import Project
+
+__all__ = [
+    "Baseline",
+    "FiddlintConfig",
+    "Finding",
+    "Project",
+    "load_config",
+    "run_lint",
+]

@@ -1,0 +1,143 @@
+"""fiddlint configuration: defaults + the ``[tool.fiddlint]`` pyproject
+table.
+
+Python 3.10 has no ``tomllib``, so a minimal TOML-subset reader backs the
+import: only the flat key kinds ``[tool.fiddlint]`` actually uses
+(strings, booleans, and one-line string arrays).  Everything the rules
+treat as repo convention — hot-path roots, the bucket helper's name, the
+BlockMeta acquire/release API — is a config knob so the fixture tests
+can retarget the rules at synthetic modules.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from pathlib import Path
+from typing import Dict, List, Optional
+
+RULE_IDS = ("FID001", "FID002", "FID003", "FID004", "FID005")
+
+
+@dataclass(frozen=True)
+class FiddlintConfig:
+    # what to scan; relative paths resolve against the config file's dir
+    paths: List[str] = field(default_factory=lambda: ["src/repro"])
+    # committed grandfather file (None/"" disables baseline matching)
+    baseline: Optional[str] = "fiddlint-baseline.json"
+    # rules to run (subset of RULE_IDS)
+    select: List[str] = field(default_factory=lambda: list(RULE_IDS))
+
+    # FID001/FID002 — call-graph roots of the serving hot path.  Matched
+    # against fully qualified names, exact or as a ".suffix".
+    hot_roots: List[str] = field(default_factory=lambda: [
+        "repro.serving.continuous.ContinuousEngine.step",
+        "repro.core.orchestrator.FiddlerEngine.decode_step_multi",
+        "repro.core.orchestrator.FiddlerEngine._run_moe_layer",
+    ])
+
+    # FID002 — helpers that make a data-dependent dimension jit-safe
+    bucket_functions: List[str] = field(
+        default_factory=lambda: ["_bucket", "bucket", "next_power_of_two"])
+
+    # FID003 — the BlockMeta ownership API
+    acquire_methods: List[str] = field(
+        default_factory=lambda: ["alloc", "_alloc", "fork_slot", "map_prefix"])
+    release_methods: List[str] = field(
+        default_factory=lambda: ["release_slot", "free", "_unref",
+                                 "_evict_cached", "deregister"])
+
+    # FID004 — ledger conventions
+    charge_function: str = "_charge"
+    charge_required_kwargs: List[str] = field(
+        default_factory=lambda: ["n_tokens", "kv_len"])
+    ledger_class: str = "Ledger"
+    # *_time fields that are clocks/aggregates, not individual overlap
+    # sources needing the overlapped/exposed split
+    time_split_exempt: List[str] = field(
+        default_factory=lambda: ["sim_time"])
+
+    # FID005 — callables executed on the slow-tier host pool (suffix
+    # match on qualified names), beyond statically resolvable .submit()
+    worker_entry_points: List[str] = field(default_factory=lambda: [
+        "HostExpert.__call__",
+        "QuantizedHostExpert.__call__",
+    ])
+
+    def with_overrides(self, **kw) -> "FiddlintConfig":
+        return replace(self, **{k: v for k, v in kw.items() if v is not None})
+
+
+_KEY_RE = re.compile(r"^\s*([A-Za-z_][A-Za-z0-9_-]*)\s*=\s*(.+?)\s*$")
+
+
+def _parse_value(raw: str):
+    raw = raw.strip()
+    if raw.startswith("["):
+        return re.findall(r'"((?:[^"\\]|\\.)*)"', raw)
+    if raw.startswith('"'):
+        m = re.match(r'"((?:[^"\\]|\\.)*)"', raw)
+        return m.group(1) if m else raw
+    if raw in ("true", "false"):
+        return raw == "true"
+    return raw
+
+
+def _read_tool_table(pyproject: Path) -> Dict[str, object]:
+    """The ``[tool.fiddlint]`` table as a dict (TOML subset: one-line
+    values only, which is all this config uses)."""
+    try:
+        import tomllib  # Python >= 3.11
+        with open(pyproject, "rb") as f:
+            data = tomllib.load(f)
+        return data.get("tool", {}).get("fiddlint", {})
+    except ImportError:
+        pass
+    table: Dict[str, object] = {}
+    in_table = False
+    pending_key: Optional[str] = None
+    pending_val = ""
+    for line in pyproject.read_text().splitlines():
+        stripped = line.strip()
+        if pending_key is not None:
+            # continuation of a multi-line array value
+            pending_val += " " + stripped
+            if pending_val.count("]") >= pending_val.count("["):
+                table[pending_key] = _parse_value(pending_val)
+                pending_key = None
+            continue
+        if stripped.startswith("[") and stripped.endswith("]") and "=" not in stripped:
+            in_table = stripped == "[tool.fiddlint]"
+            continue
+        if not in_table or not stripped or stripped.startswith("#"):
+            continue
+        m = _KEY_RE.match(line)
+        if not m:
+            continue
+        key, raw = m.group(1).replace("-", "_"), m.group(2)
+        if raw.startswith("[") and raw.count("]") < raw.count("["):
+            pending_key, pending_val = key, raw
+        else:
+            table[key] = _parse_value(raw)
+    return table
+
+
+def load_config(start: Optional[Path] = None) -> FiddlintConfig:
+    """Locate pyproject.toml at/above ``start`` (default cwd) and overlay
+    its ``[tool.fiddlint]`` table on the defaults."""
+    here = (start or Path.cwd()).resolve()
+    for d in [here, *here.parents]:
+        pp = d / "pyproject.toml"
+        if pp.is_file():
+            table = _read_tool_table(pp)
+            cfg = FiddlintConfig()
+            known = {f for f in cfg.__dataclass_fields__}
+            overrides = {k: v for k, v in table.items() if k in known}
+            cfg = cfg.with_overrides(**overrides)
+            # resolve paths/baseline relative to the pyproject dir
+            paths = [str((d / p)) if not Path(p).is_absolute() else p
+                     for p in cfg.paths]
+            baseline = cfg.baseline
+            if baseline and not Path(baseline).is_absolute():
+                baseline = str(d / baseline)
+            return replace(cfg, paths=paths, baseline=baseline)
+    return FiddlintConfig()

@@ -1,0 +1,144 @@
+"""fiddlint core: findings, inline suppressions, the baseline file, and
+the lint driver.
+
+Suppressions are ruff-style but require a reason::
+
+    x = float(logits[0])  # fiddlint: ignore[FID001] sampling is host-side
+
+A suppression with no reason does not suppress — the point of the rule
+set is that every tolerated violation documents *why* it is safe.  The
+comment may sit on the flagged line or on the line directly above it.
+
+The baseline file grandfathers findings by (rule, path, symbol) — line
+numbers drift too easily to key on.  ``--update-baseline`` rewrites it
+from the current findings; each entry carries a reason string.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.project import Project
+
+SUPPRESS_RE = re.compile(
+    r"#\s*fiddlint:\s*ignore\[([A-Z0-9,\s]+)\]\s*(\S.*)?$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str              # repo-relative (or as-given) posix path
+    line: int
+    col: int
+    message: str
+    symbol: str = ""       # enclosing function qualname, for baselining
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+    def key(self) -> Tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol)
+
+
+def scan_suppressions(lines: List[str]) -> Dict[int, Set[str]]:
+    """{1-based line number: rule ids suppressed there}.  A trailing
+    comment covers its own line; a standalone comment covers the first
+    code line after its comment block, so a multi-line justification
+    reads naturally above the flagged statement."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(line)
+        if not m or not (m.group(2) or "").strip():
+            continue  # no reason -> not a valid suppression
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        out.setdefault(i, set()).update(rules)
+        if line.lstrip().startswith("#"):
+            j = i  # 0-based index of the line after this one
+            while j < len(lines) and lines[j].lstrip().startswith("#"):
+                j += 1
+            out.setdefault(j + 1, set()).update(rules)
+    return out
+
+
+class Baseline:
+    def __init__(self, path: Optional[Path]):
+        self.path = path
+        self.entries: List[Dict[str, str]] = []
+        if path is not None and path.is_file():
+            data = json.loads(path.read_text())
+            self.entries = list(data.get("findings", []))
+        self._keys = {(e["rule"], e["path"], e.get("symbol", ""))
+                      for e in self.entries}
+
+    def covers(self, f: Finding) -> bool:
+        return f.key() in self._keys
+
+    @staticmethod
+    def write(path: Path, findings: List[Finding],
+              reason: str = "grandfathered at baseline creation") -> None:
+        seen: Set[Tuple[str, str, str]] = set()
+        entries = []
+        for f in sorted(findings, key=lambda f: (f.path, f.line)):
+            if f.key() in seen:
+                continue
+            seen.add(f.key())
+            entries.append({"rule": f.rule, "path": f.path,
+                            "symbol": f.symbol, "message": f.message,
+                            "reason": reason})
+        path.write_text(json.dumps(
+            {"_comment": "fiddlint grandfathered findings; regenerate with "
+                         "`python -m repro.analysis.lint --update-baseline`",
+             "findings": entries}, indent=2) + "\n")
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)   # actionable
+    suppressed: List[Finding] = field(default_factory=list)
+    baselined: List[Finding] = field(default_factory=list)
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.findings else 0
+
+
+def relpath(p: Path) -> str:
+    """Repo-relative posix path when possible — the stable key findings,
+    suppressions, and baseline entries are matched on."""
+    try:
+        return p.resolve().relative_to(Path.cwd().resolve()).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+def run_lint(config: FiddlintConfig,
+             project: Optional[Project] = None,
+             use_baseline: bool = True) -> LintResult:
+    """Run every selected rule over the configured paths."""
+    from repro.analysis.rules import get_rules
+    project = project or Project(config.paths)
+    raw: List[Finding] = []
+    for rule in get_rules(config.select):
+        raw.extend(rule(project, config))
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    baseline = Baseline(Path(config.baseline)
+                        if (use_baseline and config.baseline) else None)
+    suppress_by_file = {
+        relpath(sf.path): scan_suppressions(sf.lines)
+        for sf in project.files}
+
+    result = LintResult()
+    for f in raw:
+        supp = suppress_by_file.get(f.path, {})
+        if f.rule in supp.get(f.line, set()):
+            result.suppressed.append(f)
+        elif baseline.covers(f):
+            result.baselined.append(f)
+        else:
+            result.findings.append(f)
+    return result

@@ -1,0 +1,218 @@
+"""Lightweight per-function dataflow used by FID001 and FID002.
+
+Two single-function, flow-insensitive-but-iterated analyses:
+
+* **device-ness** — which local names (may) hold jax device arrays.
+  Sources: parameters annotated ``jnp.ndarray``/``*Array``, expressions
+  rooted at a ``jnp``/``jax`` call, and calls to project functions whose
+  return annotation mentions device arrays.  Propagates through
+  assignment, tuple unpacking, arithmetic, subscripts, and ternaries.
+  Under-approximate by design: an unknown value is assumed host-side, so
+  FID001 reports carry high confidence (the rule exists to catch *known*
+  sync constructs on *known* device values).
+
+* **dimension provenance** — which local names are data-dependent sizes
+  (``len(x)``, ``x.size``, ``.shape`` of a data value) and which have
+  been made jit-safe by a bucket helper (``_bucket(n)``; ``min``/``max``
+  over a bucketed value stays bucketed).  ``.shape`` of a parameter, of
+  a name unpacked from a parameter, or of a ``self`` attribute is
+  *stable* geometry (model dims, pool layout) — only shapes of locally
+  computed data count as trace-minting.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.project import FunctionInfo, Module, Project, attr_chain
+
+
+def _target_names(t: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(t):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+    return out
+
+
+class DeviceFlow:
+    """Device-ness of names within one function (nested defs included)."""
+
+    def __init__(self, project: Project, fn: FunctionInfo):
+        self.project = project
+        self.fn = fn
+        self.mod: Module = project.modules[fn.module]
+        self.device: Set[str] = set()
+        self._seed_params(fn.node)
+        for _ in range(3):  # small fixpoint: chains like a = b; c = a[0]
+            before = len(self.device)
+            for node in ast.walk(fn.node):
+                self._visit_assign(node)
+            if len(self.device) == before:
+                break
+
+    def _seed_params(self, node: ast.AST) -> None:
+        for inner in ast.walk(node):
+            if not isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            a = inner.args
+            for arg in [*a.posonlyargs, *a.args, *a.kwonlyargs]:
+                if arg.annotation is not None:
+                    src = ast.dump(arg.annotation)
+                    if ("jnp" in src and "ndarray" in src) or "Array" in src:
+                        self.device.add(arg.arg)
+
+    def _visit_assign(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign) and self.is_device(node.value):
+            for t in node.targets:
+                self.device |= _target_names(t)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if self.is_device(node.value):
+                self.device |= _target_names(node.target)
+        elif isinstance(node, ast.AugAssign) and self.is_device(node.value):
+            self.device |= _target_names(node.target)
+
+    # -- expression classification -----------------------------------------
+    def _call_returns_device(self, call: ast.Call) -> bool:
+        func = call.func
+        chain = attr_chain(func)
+        if chain and chain[0] in (self.mod.jnp_aliases | {"jax"}
+                                  | self.mod.jax_aliases):
+            return True  # jnp.*(...) / jax.*(...) produce device values
+        for qual in self.project.resolve_call(self.mod, call):
+            info = self.project.functions.get(qual)
+            if info is not None and info.device_return:
+                return True
+        return False
+
+    def is_device(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.device
+        if isinstance(node, ast.Call):
+            return self._call_returns_device(node)
+        if isinstance(node, (ast.Subscript, ast.Attribute, ast.Starred)):
+            return self.is_device(node.value)
+        if isinstance(node, ast.BinOp):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_device(e) for e in node.elts)
+        return False
+
+
+class DimFlow:
+    """Data-dependent vs bucketed size provenance within one function."""
+
+    def __init__(self, fn: FunctionInfo, config: FiddlintConfig):
+        self.config = config
+        self.params: Set[str] = set()
+        for inner in ast.walk(fn.node):
+            if isinstance(inner, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = inner.args
+                self.params |= {arg.arg for arg in
+                                [*a.posonlyargs, *a.args, *a.kwonlyargs]}
+        self.dynamic: Set[str] = set()
+        self.bucketed: Set[str] = set()
+        # names unpacked (possibly transitively) from parameters: their
+        # .shape is call-stable geometry, same as a parameter's
+        self.param_derived: Set[str] = set(self.params)
+        for _ in range(3):
+            n = (len(self.dynamic), len(self.bucketed),
+                 len(self.param_derived))
+            for node in ast.walk(fn.node):
+                if isinstance(node, ast.Assign):
+                    self._flow(node.targets, node.value)
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    self._flow([node.target], node.value)
+            if (len(self.dynamic), len(self.bucketed),
+                    len(self.param_derived)) == n:
+                break
+
+    def _flow(self, targets, value) -> None:
+        if self.is_bucketed(value):
+            for t in targets:
+                self.bucketed |= _target_names(t)
+        elif self.classify(value) == "dynamic":
+            for t in targets:
+                self.dynamic |= _target_names(t)
+        if self._param_rooted(value):
+            for t in targets:
+                self.param_derived |= _target_names(t)
+
+    def _param_rooted(self, node: ast.AST) -> bool:
+        """Unpacking/indexing of a parameter: ``k, v = enc_kv`` or
+        ``x_i, dt_i = inp`` — the pieces carry the parameter's
+        call-stable geometry."""
+        if isinstance(node, ast.Name):
+            return node.id in self.param_derived
+        if isinstance(node, (ast.Subscript, ast.Starred)):
+            return self._param_rooted(node.value)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(self._param_rooted(e) for e in node.elts)
+        return False
+
+    def is_bucketed(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain and chain[-1] in self.config.bucket_functions:
+                return True
+            if chain and chain[-1] in ("min", "max"):
+                return any(self.is_bucketed(a) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in self.bucketed
+        return False
+
+    def classify(self, node: ast.AST) -> Optional[str]:
+        """"dynamic" for a data-dependent, unbucketed size expression."""
+        if self.is_bucketed(node):
+            return None
+        if isinstance(node, ast.Name):
+            return "dynamic" if node.id in self.dynamic else None
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if (isinstance(node.func, ast.Name) and node.func.id == "len"
+                    and node.args):
+                return "dynamic"
+            if chain and chain[-1] in ("min", "max", "int"):
+                if any(self.classify(a) == "dynamic" for a in node.args):
+                    return "dynamic"
+            return None
+        if isinstance(node, ast.Attribute):
+            if node.attr == "size":
+                return "dynamic"
+            return None
+        if isinstance(node, ast.Subscript):
+            # x.shape[i]: geometry of a parameter (or param-derived, or
+            # self-attribute) array is stable across calls; .shape of
+            # locally computed data is data-shaped
+            v = node.value
+            if isinstance(v, ast.Attribute) and v.attr == "shape":
+                base = v.value
+                if isinstance(base, ast.Name) and base.id in self.param_derived:
+                    return None
+                if (isinstance(base, ast.Attribute)
+                        and isinstance(base.value, ast.Name)
+                        and base.value.id == "self"):
+                    return None  # pool/model geometry on the object
+                return "dynamic"
+            return None
+        if isinstance(node, ast.BinOp):
+            if (self.classify(node.left) == "dynamic"
+                    or self.classify(node.right) == "dynamic"):
+                return "dynamic"
+            return None
+        if isinstance(node, ast.IfExp):
+            if (self.classify(node.body) == "dynamic"
+                    or self.classify(node.orelse) == "dynamic"):
+                return "dynamic"
+            return None
+        if isinstance(node, (ast.Tuple, ast.List)):
+            # shape tuples: (n, 4) is dynamic when any element is
+            if any(self.classify(e) == "dynamic" for e in node.elts):
+                return "dynamic"
+            return None
+        return None

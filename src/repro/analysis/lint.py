@@ -1,0 +1,104 @@
+"""fiddlint CLI.
+
+Usage::
+
+    python -m repro.analysis.lint [paths...] [--select FID001,FID003]
+        [--no-baseline | --baseline FILE] [--update-baseline]
+        [--format text|json] [--output FILE] [--hot-root QUALNAME ...]
+
+Exit status 0 when every finding is suppressed or baselined, 1 when
+actionable findings remain, 2 on usage errors.  Output is ruff-style::
+
+    src/repro/core/orchestrator.py:812: FID001 `.item()` forces a host sync ...
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis.config import RULE_IDS, load_config
+from repro.analysis.core import Baseline, LintResult, run_lint
+
+
+def _parse_args(argv: Optional[List[str]]) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="fiddlint: Fiddler hot-path invariant checks "
+                    "(FID001-FID005)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: [tool.fiddlint] "
+                         "paths from pyproject.toml)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (default: all)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON path (default from config)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings as actionable")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings "
+                         "and exit 0")
+    ap.add_argument("--hot-root", action="append", default=None,
+                    dest="hot_roots", metavar="QUALNAME",
+                    help="override FID001/FID002 call-graph roots "
+                         "(repeatable)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--output", default=None,
+                    help="write the report here as well as stdout")
+    ap.add_argument("--stats", action="store_true",
+                    help="append a summary line (counts by disposition)")
+    return ap.parse_args(argv)
+
+
+def _render(result: LintResult, fmt: str, stats: bool) -> str:
+    if fmt == "json":
+        payload = {
+            "findings": [vars(f) for f in result.findings],
+            "suppressed": [vars(f) for f in result.suppressed],
+            "baselined": [vars(f) for f in result.baselined],
+        }
+        return json.dumps(payload, indent=2)
+    lines = [f.render() for f in result.findings]
+    if stats or not lines:
+        lines.append(
+            f"fiddlint: {len(result.findings)} actionable, "
+            f"{len(result.suppressed)} suppressed, "
+            f"{len(result.baselined)} baselined")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = _parse_args(argv)
+    cfg = load_config()
+    select = ([s.strip() for s in ns.select.split(",") if s.strip()]
+              if ns.select else None)
+    if select:
+        bad = [s for s in select if s not in RULE_IDS]
+        if bad:
+            print(f"fiddlint: unknown rule id(s): {', '.join(bad)}",
+                  file=sys.stderr)
+            return 2
+    cfg = cfg.with_overrides(
+        paths=ns.paths or None, select=select,
+        baseline=ns.baseline, hot_roots=ns.hot_roots)
+
+    if ns.update_baseline:
+        result = run_lint(cfg, use_baseline=False)
+        target = Path(cfg.baseline or "fiddlint-baseline.json")
+        keep = result.findings  # suppressions still apply; baseline the rest
+        Baseline.write(target, keep)
+        print(f"fiddlint: wrote {len(keep)} finding(s) to {target}")
+        return 0
+
+    result = run_lint(cfg, use_baseline=not ns.no_baseline)
+    report = _render(result, ns.format, ns.stats)
+    print(report)
+    if ns.output:
+        Path(ns.output).write_text(report + "\n")
+    return result.exit_code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,273 @@
+"""Project model for fiddlint: parsed modules, an import map, a function
+index, and an over-approximate call graph.
+
+Resolution is deliberately name-based (a linter, not a type checker):
+
+* plain calls resolve through the module's ``from``-imports and its own
+  top-level functions;
+* attribute calls rooted at a project-module alias (``kvc.init_attn_cache``)
+  resolve into that module;
+* other attribute calls (``self.backend.prefill(...)``) resolve to *every*
+  project method with that name — an over-approximation, which is the safe
+  direction for reachability-based rules like FID001 (missing a hot-path
+  edge would silently un-lint real hot code).
+
+Nested function/lambda bodies are treated as part of their enclosing
+function: the orchestrator's dispatch closures execute within the step,
+so their syncs/launches belong to the enclosing frame.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# import roots that are never project code (their attribute calls are
+# resolved as external, not by method-name match)
+EXTERNAL_ROOTS = {
+    "np", "numpy", "jnp", "jax", "lax", "pl", "pltpu", "os", "sys", "re",
+    "math", "time", "json", "warnings", "functools", "itertools",
+    "dataclasses", "collections", "threading", "atexit", "ast", "typing",
+}
+
+
+def module_name_for(path: Path) -> str:
+    """Dotted module name: rooted at the innermost ``src`` dir if there is
+    one (src/repro/core/x.py -> repro.core.x), else the file stem — which
+    is how fixture files are addressed in tests."""
+    parts = path.with_suffix("").parts
+    for anchor in ("src",):
+        if anchor in parts:
+            i = len(parts) - 1 - parts[::-1].index(anchor)
+            return ".".join(parts[i + 1:])
+    return parts[-1]
+
+
+@dataclass
+class SourceFile:
+    path: Path
+    module: str
+    text: str
+    tree: ast.Module
+    lines: List[str]
+
+
+@dataclass
+class FunctionInfo:
+    module: str
+    qualname: str          # module.Class.name or module.name
+    name: str
+    cls: Optional[str]
+    node: ast.AST          # FunctionDef / AsyncFunctionDef
+    file: SourceFile
+    device_return: bool = False
+    jitted: bool = False
+    calls: List[Tuple[str, ast.Call]] = field(default_factory=list)
+
+
+def _ann_mentions_device(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    src = ast.dump(node)
+    return ("jnp" in src and "ndarray" in src) or "Array" in src
+
+
+def attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` -> ["a","b","c"]; subscripts are looked through
+    (``a[i].b`` -> ["a","b"]); anything else -> None."""
+    parts: List[str] = []
+    while True:
+        if isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            parts.append(node.id)
+            return parts[::-1]
+        else:
+            return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    chain = attr_chain(node)
+    return chain[0] if chain else None
+
+
+def _is_jit_decorator(dec: ast.AST, jax_aliases: Set[str]) -> bool:
+    """@jax.jit / @functools.partial(jax.jit, ...) / @jit (from jax)."""
+    if isinstance(dec, ast.Call):
+        # functools.partial(jax.jit, ...) or jax.jit(...)-style factory
+        chain = attr_chain(dec.func)
+        if chain and chain[-1] == "partial" and dec.args:
+            return _is_jit_decorator(dec.args[0], jax_aliases)
+        dec = dec.func
+    chain = attr_chain(dec)
+    if not chain:
+        return False
+    if chain[-1] != "jit":
+        return False
+    return len(chain) == 1 or chain[0] in jax_aliases or chain[0] == "jax"
+
+
+class Module:
+    """One parsed file plus its import environment."""
+
+    def __init__(self, sf: SourceFile):
+        self.sf = sf
+        self.alias_to_module: Dict[str, str] = {}   # np -> numpy
+        self.from_imports: Dict[str, str] = {}      # route -> repro.models.moe.route
+        self.jax_aliases: Set[str] = {"jax"}
+        self.np_aliases: Set[str] = set()
+        self.jnp_aliases: Set[str] = set()
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    alias = a.asname or a.name.split(".")[0]
+                    self.alias_to_module[alias] = a.name
+                    if a.name == "numpy":
+                        self.np_aliases.add(alias)
+                    if a.name == "jax":
+                        self.jax_aliases.add(alias)
+                    if a.name == "jax.numpy":
+                        self.jnp_aliases.add(alias)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    alias = a.asname or a.name
+                    self.from_imports[alias] = f"{node.module}.{a.name}"
+                    if node.module == "jax" and a.name == "numpy":
+                        self.jnp_aliases.add(alias)
+
+
+class Project:
+    def __init__(self, paths: Iterable[str]):
+        self.files: List[SourceFile] = []
+        self.modules: Dict[str, Module] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        self.by_name: Dict[str, List[FunctionInfo]] = {}
+        self.classes: Dict[str, List[str]] = {}  # class name -> method qualnames
+        for p in sorted(self._expand(paths)):
+            self._load(p)
+        for fn in self.functions.values():
+            self._index_calls(fn)
+
+    @staticmethod
+    def _expand(paths: Iterable[str]) -> Set[Path]:
+        out: Set[Path] = set()
+        for p in paths:
+            pp = Path(p)
+            if pp.is_dir():
+                out.update(pp.rglob("*.py"))
+            elif pp.suffix == ".py":
+                out.add(pp)
+        return out
+
+    def _load(self, path: Path) -> None:
+        text = path.read_text()
+        try:
+            tree = ast.parse(text, filename=str(path))
+        except SyntaxError:
+            return
+        sf = SourceFile(path=path, module=module_name_for(path), text=text,
+                        tree=tree, lines=text.splitlines())
+        self.files.append(sf)
+        mod = Module(sf)
+        self.modules[sf.module] = mod
+        for node in tree.body:
+            self._collect_defs(sf, mod, node, cls=None)
+
+    def _collect_defs(self, sf: SourceFile, mod: Module, node: ast.AST,
+                      cls: Optional[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            qual = (f"{sf.module}.{cls}.{node.name}" if cls
+                    else f"{sf.module}.{node.name}")
+            info = FunctionInfo(
+                module=sf.module, qualname=qual, name=node.name, cls=cls,
+                node=node, file=sf,
+                device_return=_ann_mentions_device(node.returns),
+                jitted=any(_is_jit_decorator(d, mod.jax_aliases)
+                           for d in node.decorator_list))
+            self.functions[qual] = info
+            self.by_name.setdefault(node.name, []).append(info)
+            if cls:
+                self.classes.setdefault(cls, []).append(qual)
+        elif isinstance(node, ast.ClassDef):
+            for child in node.body:
+                self._collect_defs(sf, mod, child, cls=node.name)
+
+    # -- call-graph construction -------------------------------------------
+    def _index_calls(self, fn: FunctionInfo) -> None:
+        mod = self.modules[fn.module]
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            for target in self.resolve_call(mod, node):
+                fn.calls.append((target, node))
+
+    def resolve_call(self, mod: Module, call: ast.Call) -> List[str]:
+        """Qualnames of project functions this call may reach."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            name = func.id
+            full = mod.from_imports.get(name)
+            if full and full in self.functions:
+                return [full]
+            local = f"{mod.sf.module}.{name}"
+            if local in self.functions:
+                return [local]
+            # from-import of a project name whose module isn't loaded
+            # under the same dotted path (fixtures): fall back to any
+            # unique project function of that name
+            cands = self.by_name.get(name, [])
+            if len({c.qualname for c in cands}) == 1:
+                return [cands[0].qualname]
+            return []
+        if isinstance(func, ast.Attribute):
+            chain = attr_chain(func)
+            if not chain:
+                return []
+            root, meth = chain[0], chain[-1]
+            if root in mod.alias_to_module:
+                target_mod = mod.alias_to_module[root]
+                qual = ".".join([target_mod, *chain[1:]])
+                if qual in self.functions:
+                    return [qual]
+                if root in EXTERNAL_ROOTS or target_mod in EXTERNAL_ROOTS:
+                    return []
+            if root in EXTERNAL_ROOTS:
+                return []
+            # method-name over-approximation: any project method
+            return [c.qualname for c in self.by_name.get(meth, [])
+                    if c.cls is not None]
+        return []
+
+    # -- reachability -------------------------------------------------------
+    def resolve_roots(self, specs: Iterable[str]) -> List[FunctionInfo]:
+        out: List[FunctionInfo] = []
+        for spec in specs:
+            for qual, fn in self.functions.items():
+                if qual == spec or qual.endswith("." + spec):
+                    out.append(fn)
+        return out
+
+    def reachable_from(self, roots: Iterable[FunctionInfo]
+                       ) -> Dict[str, str]:
+        """BFS over the call graph; returns {qualname: root qualname} for
+        every reachable function (first root to reach it wins)."""
+        seen: Dict[str, str] = {}
+        frontier = [(fn.qualname, fn.qualname) for fn in roots]
+        while frontier:
+            qual, root = frontier.pop()
+            if qual in seen:
+                continue
+            seen[qual] = root
+            fn = self.functions.get(qual)
+            if fn is None:
+                continue
+            for target, _ in fn.calls:
+                if target not in seen:
+                    frontier.append((target, root))
+        return seen

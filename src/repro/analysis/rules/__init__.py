@@ -1,0 +1,27 @@
+"""Rule registry.  A rule is ``(project, config) -> List[Finding]``."""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding
+from repro.analysis.project import Project
+from repro.analysis.rules.fid001_host_sync import check_host_sync
+from repro.analysis.rules.fid002_jit_cache import check_jit_cache
+from repro.analysis.rules.fid003_refcount import check_refcount
+from repro.analysis.rules.fid004_ledger import check_ledger
+from repro.analysis.rules.fid005_threads import check_threads
+
+Rule = Callable[[Project, FiddlintConfig], List[Finding]]
+
+RULES = {
+    "FID001": check_host_sync,
+    "FID002": check_jit_cache,
+    "FID003": check_refcount,
+    "FID004": check_ledger,
+    "FID005": check_threads,
+}
+
+
+def get_rules(select: Iterable[str]) -> List[Rule]:
+    return [RULES[r] for r in RULES if r in set(select)]

@@ -1,0 +1,90 @@
+"""FID001 host-sync-in-hot-path.
+
+The Fiddler overlap argument only holds if the decode step never blocks
+on the device mid-layer: one stray ``.item()`` serialises the grouped
+GEMM launch against the host experts and the "free" CPU work stops being
+free.  This rule walks the call graph from the configured hot roots
+(``ContinuousEngine.step``, ``decode_step_multi``, ``_run_moe_layer``)
+and flags, inside any reachable function:
+
+* ``.item()``, ``.tolist()``, ``.block_until_ready()`` — always a sync
+  (these are array-API methods; nothing else in this repo defines them);
+* ``jax.device_get(...)`` / ``np.asarray(x)`` / ``np.array(x)`` where
+  ``x`` flows from a device value;
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` on a device value.
+
+For the np/float/int forms a local device-ness dataflow (annotations +
+jnp-rooted expressions) gates the report, so host-side numpy math in the
+slow tier does not flood the rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.dataflow import DeviceFlow
+from repro.analysis.project import FunctionInfo, Project, attr_chain
+
+ALWAYS_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+SYNC_CASTS = {"float", "int", "bool"}
+NP_SYNC_FUNCS = {"asarray", "array"}
+
+
+def _check_function(project: Project, config: FiddlintConfig,
+                    fn: FunctionInfo, root: str,
+                    out: List[Finding]) -> None:
+    mod = project.modules[fn.module]
+    flow = DeviceFlow(project, fn)
+    path = relpath(fn.file.path)
+    via = "" if fn.qualname == root else f" (reachable from {root})"
+
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        # x.item() / x.tolist() / x.block_until_ready()
+        if isinstance(func, ast.Attribute) and func.attr in ALWAYS_SYNC_METHODS:
+            out.append(Finding(
+                "FID001", path, node.lineno, node.col_offset,
+                f"`.{func.attr}()` forces a host sync in the hot "
+                f"path{via}; keep the value on device or move the read "
+                f"out of the step loop", fn.qualname))
+            continue
+        chain = attr_chain(func)
+        # jax.device_get(x)
+        if chain and chain[-1] == "device_get" and chain[0] in mod.jax_aliases:
+            out.append(Finding(
+                "FID001", path, node.lineno, node.col_offset,
+                f"`jax.device_get` blocks on the device in the hot "
+                f"path{via}", fn.qualname))
+            continue
+        # np.asarray(x) / np.array(x) on a device value
+        if (chain and len(chain) == 2 and chain[0] in mod.np_aliases
+                and chain[1] in NP_SYNC_FUNCS and node.args
+                and flow.is_device(node.args[0])):
+            out.append(Finding(
+                "FID001", path, node.lineno, node.col_offset,
+                f"`{chain[0]}.{chain[1]}` on a device array synchronizes "
+                f"in the hot path{via}", fn.qualname))
+            continue
+        # float(x) / int(x) / bool(x) on a device value
+        if (isinstance(func, ast.Name) and func.id in SYNC_CASTS
+                and node.args and flow.is_device(node.args[0])):
+            out.append(Finding(
+                "FID001", path, node.lineno, node.col_offset,
+                f"`{func.id}()` on a device array synchronizes in the hot "
+                f"path{via}", fn.qualname))
+
+
+def check_host_sync(project: Project,
+                    config: FiddlintConfig) -> List[Finding]:
+    roots = project.resolve_roots(config.hot_roots)
+    reach = project.reachable_from(roots)
+    out: List[Finding] = []
+    for qual, root in reach.items():
+        fn = project.functions.get(qual)
+        if fn is not None:
+            _check_function(project, config, fn, root, out)
+    return out

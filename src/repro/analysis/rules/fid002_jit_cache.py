@@ -1,0 +1,95 @@
+"""FID002 jit-cache-explosion.
+
+XLA retraces a jitted callable for every new static-argument/shape
+combination.  The repo's defence is the pow-2 bucket helper: every
+data-dependent dimension that reaches a compiled op must pass through
+``_bucket`` first, or routing skew mints a fresh executable per distinct
+token count and the cache (and compile time) grows without bound.
+
+Two checks, over functions reachable from the hot roots:
+
+* **runtime jit construction** — any ``jax.jit(...)`` call inside a
+  function body (as opposed to module scope / a decorator) builds a new
+  cache per call; inside the step loop that is a leak by construction.
+* **unbucketed dimension into a compiled sink** — a value tainted as a
+  data-dependent size (``len(x)``, ``x.size``, ``.shape[i]`` of a
+  non-parameter) reaches a shape-ish argument of a compiled op: a jitted
+  project function, a ``*_op`` kernel wrapper, or ``jnp.zeros``-style
+  constructors whose first arg is a shape.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.dataflow import DimFlow
+from repro.analysis.project import FunctionInfo, Project, attr_chain
+
+# jnp constructors whose positional args are shapes
+SHAPE_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "arange"}
+
+
+def _is_compiled_sink(project: Project, fn: FunctionInfo,
+                      call: ast.Call) -> str:
+    """Non-empty description when ``call`` targets compiled code."""
+    mod = project.modules[fn.module]
+    chain = attr_chain(call.func)
+    if chain and chain[0] in mod.jnp_aliases and chain[-1] in SHAPE_CONSTRUCTORS:
+        return f"`jnp.{chain[-1]}`"
+    if chain and chain[-1].endswith("_op"):
+        return f"kernel wrapper `{chain[-1]}`"
+    for qual in project.resolve_call(mod, call):
+        info = project.functions.get(qual)
+        if info is not None and info.jitted:
+            return f"jitted `{info.name}`"
+    return ""
+
+
+def _check_function(project: Project, config: FiddlintConfig,
+                    fn: FunctionInfo, root: str,
+                    out: List[Finding]) -> None:
+    mod = project.modules[fn.module]
+    path = relpath(fn.file.path)
+    via = "" if fn.qualname == root else f" (reachable from {root})"
+    flow = DimFlow(fn, config)
+
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = attr_chain(node.func)
+        # jax.jit(...) constructed at call time
+        if (chain and chain[-1] == "jit"
+                and (len(chain) == 1 or chain[0] in mod.jax_aliases)):
+            out.append(Finding(
+                "FID002", path, node.lineno, node.col_offset,
+                f"`jax.jit` constructed inside a function body{via}: each "
+                f"call builds a fresh trace cache; hoist to module scope",
+                fn.qualname))
+            continue
+        sink = _is_compiled_sink(project, fn, node)
+        if not sink:
+            continue
+        for arg in [*node.args, *[kw.value for kw in node.keywords]]:
+            if flow.classify(arg) == "dynamic":
+                src = ast.unparse(arg) if hasattr(ast, "unparse") else "<dim>"
+                out.append(Finding(
+                    "FID002", path, node.lineno, node.col_offset,
+                    f"data-dependent dimension `{src}` reaches {sink} "
+                    f"unbucketed{via}: every distinct value mints a new "
+                    f"XLA trace; round with `_bucket(...)` first",
+                    fn.qualname))
+                break
+
+
+def check_jit_cache(project: Project,
+                    config: FiddlintConfig) -> List[Finding]:
+    roots = project.resolve_roots(config.hot_roots)
+    reach = project.reachable_from(roots)
+    out: List[Finding] = []
+    for qual, root in reach.items():
+        fn = project.functions.get(qual)
+        if fn is not None:
+            _check_function(project, config, fn, root, out)
+    return out

@@ -1,0 +1,278 @@
+"""FID003 block-refcount-escape.
+
+Paged-KV blocks are manually refcounted: ``alloc``/``fork_slot``/
+``map_prefix`` take a reference, ``release_slot``/``free``/``_unref``
+drop it.  A path that acquires and then exits without releasing strands
+blocks until pool exhaustion — the PR-5 class of bug this rule encodes.
+
+Scope and ownership model (documented under-approximations):
+
+* Acquires whose receiver is rooted at ``self`` are skipped: the object
+  owns the reference and its own release paths (``__del__``-style
+  bookkeeping is the class's concern, checked by ``BlockMeta.check()``
+  at runtime).
+* A **bound** acquire (``blocks = pool.alloc(n)``) must, on *every* path
+  out of the function — returns, falls off the end, raises, or an
+  except-handler swallows — either release or hand the value off
+  (return it, pass it to a call, store it into an attribute/container).
+* A **statement-form** acquire (``cache.meta.map_prefix(slot, chain)``)
+  records ownership inside the receiver, so normal exits are fine; only
+  abnormal exits are flagged: a ``raise`` while holding, or an except
+  handler that swallows the error without releasing.
+* A ``finally`` block that releases covers every path through its
+  ``try`` — the canonical safe pattern.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import List, Optional, Set, Tuple
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.project import FunctionInfo, Project, attr_chain
+
+# scan() path states
+BEFORE, HELD, DONE = "before", "held", "done"
+
+# builtins that inspect a value without taking ownership of it
+NON_OWNING_CALLS = {
+    "len", "int", "float", "bool", "str", "repr", "print", "sorted",
+    "list", "tuple", "set", "sum", "min", "max", "enumerate", "range",
+    "isinstance", "id", "type", "iter", "next", "zip", "any", "all",
+}
+
+
+@dataclass
+class Acquire:
+    call: ast.Call
+    method: str
+    var: Optional[str]     # bound name, or None for statement-form
+    receiver: Optional[str]
+    bound: bool
+
+
+def _names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _find_acquires(fn: FunctionInfo, config: FiddlintConfig
+                   ) -> List[Acquire]:
+    out: List[Acquire] = []
+    assigned: Set[int] = set()
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            acq = _classify(call, config)
+            if acq and len(node.targets) == 1 and isinstance(
+                    node.targets[0], ast.Name):
+                acq.var = node.targets[0].id
+                acq.bound = True
+                out.append(acq)
+                assigned.add(id(call))
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call) and id(node) not in assigned:
+            acq = _classify(node, config)
+            if acq:
+                out.append(acq)
+    return out
+
+
+def _classify(call: ast.Call, config: FiddlintConfig) -> Optional[Acquire]:
+    chain = attr_chain(call.func)
+    if not chain or chain[-1] not in config.acquire_methods:
+        return None
+    if len(chain) < 2:
+        return None  # bare name, not a method on an owner object
+    if chain[0] == "self":
+        return None  # object-owned; the class's own invariant
+    return Acquire(call=call, method=chain[-1], var=None,
+                   receiver=chain[0], bound=False)
+
+
+class _PathScan:
+    """Statement-level walk tracking one acquire's ownership state."""
+
+    def __init__(self, acq: Acquire, config: FiddlintConfig):
+        self.acq = acq
+        self.config = config
+        self.leaks: List[Tuple[int, str]] = []  # (line, kind)
+
+    # -- event classification ----------------------------------------------
+    def _mentions(self, node: ast.AST) -> bool:
+        if self.acq.var is not None:
+            return self.acq.var in _names_in(node)
+        return (self.acq.receiver is not None
+                and self.acq.receiver in _names_in(node))
+
+    def _is_release(self, node: ast.AST) -> bool:
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            chain = attr_chain(call.func)
+            if not chain or chain[-1] not in self.config.release_methods:
+                continue
+            involved = _names_in(call.func) | set()
+            for a in [*call.args, *[k.value for k in call.keywords]]:
+                involved |= _names_in(a)
+            if self.acq.var is not None:
+                if self.acq.var in involved:
+                    return True
+            elif self.acq.receiver in involved:
+                return True
+        return False
+
+    def _is_handoff(self, node: ast.AST) -> bool:
+        """Bound value escapes: passed to a call, stored, yielded."""
+        if self.acq.var is None:
+            return False
+        var = self.acq.var
+        for inner in ast.walk(node):
+            if isinstance(inner, ast.Call) and inner is not self.acq.call:
+                if (isinstance(inner.func, ast.Name)
+                        and inner.func.id in NON_OWNING_CALLS):
+                    continue
+                for a in [*inner.args, *[k.value for k in inner.keywords]]:
+                    if var in _names_in(a):
+                        return True
+            if isinstance(inner, (ast.Yield, ast.YieldFrom)):
+                if inner.value is not None and var in _names_in(inner.value):
+                    return True
+            if isinstance(inner, ast.Assign):
+                for t in inner.targets:
+                    if (isinstance(t, (ast.Attribute, ast.Subscript))
+                            and var in _names_in(inner.value)):
+                        return True
+        return False
+
+    def _step_state(self, stmt: ast.AST, state: str) -> str:
+        """State transition for one simple statement."""
+        if state == BEFORE:
+            for call in ast.walk(stmt):
+                if call is self.acq.call:
+                    return HELD
+            return BEFORE
+        if state == HELD:
+            if self._is_release(stmt) or self._is_handoff(stmt):
+                return DONE
+        return state
+
+    # -- traversal -----------------------------------------------------------
+    def scan(self, stmts: List[ast.stmt], states: Set[str]) -> Set[str]:
+        """Propagate the set of possible states through a statement list;
+        returns the fallthrough states (terminated paths emit leaks and
+        drop out)."""
+        cur = set(states)
+        for stmt in stmts:
+            if not cur:
+                break
+            cur = self._scan_stmt(stmt, cur)
+        return cur
+
+    def _scan_stmt(self, stmt: ast.stmt, states: Set[str]) -> Set[str]:
+        if isinstance(stmt, ast.Return):
+            nxt = {self._step_state(stmt, s) for s in states}
+            if HELD in nxt:
+                held_is_handoff = (stmt.value is not None
+                                   and self._mentions(stmt.value)
+                                   and self.acq.bound)
+                if not held_is_handoff:
+                    self.leaks.append((stmt.lineno, "return"))
+            return set()
+        if isinstance(stmt, ast.Raise):
+            if HELD in {self._step_state(stmt, s) for s in states}:
+                self.leaks.append((stmt.lineno, "raise"))
+            return set()
+        if isinstance(stmt, ast.If):
+            a = self.scan(stmt.body, states)
+            b = self.scan(stmt.orelse, states)
+            return a | b
+        if isinstance(stmt, (ast.For, ast.While, ast.AsyncFor)):
+            body = self.scan(stmt.body, states)
+            out = states | body  # loop may run zero times
+            return self.scan(stmt.orelse, out) if stmt.orelse else out
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            entry = {self._step_state(stmt, s) for s in states}
+            return self.scan(stmt.body, entry)
+        if isinstance(stmt, ast.Try):
+            return self._scan_try(stmt, states)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return states  # nested defs execute later; out of scope
+        return {self._step_state(stmt, s) for s in states}
+
+    def _scan_try(self, stmt: ast.Try, states: Set[str]) -> Set[str]:
+        # a releasing finally covers every path through this try
+        final_releases = any(self._is_release(s) or self._is_handoff(s)
+                             for s in stmt.finalbody)
+        body_out = self.scan(stmt.body, states)
+        body_held = HELD in body_out or self._acquired_in(stmt.body, states)
+        if final_releases:
+            # drop leaks recorded inside the body: finally runs on them too
+            self.leaks = [lk for lk in self.leaks
+                          if not self._line_within(lk[0], stmt)]
+            return {DONE if s == HELD else s for s in body_out} or {DONE}
+        handler_entry = {HELD} if body_held else (states | body_out) or states
+        out = set(body_out)
+        for handler in stmt.handlers:
+            h_out = self.scan(handler.body, set(handler_entry))
+            if HELD in h_out and not self._reraises(handler):
+                self.leaks.append((handler.lineno, "swallow"))
+                # the leak is reported once, here; don't re-report it at
+                # every later exit the handler path flows into
+                h_out = {DONE if s == HELD else s for s in h_out}
+            out |= h_out
+        out = self.scan(stmt.orelse, out) if stmt.orelse else out
+        return self.scan(stmt.finalbody, out) if stmt.finalbody else out
+
+    def _acquired_in(self, stmts: List[ast.stmt], states: Set[str]) -> bool:
+        if BEFORE not in states:
+            return False
+        for s in stmts:
+            for call in ast.walk(s):
+                if call is self.acq.call:
+                    return True
+        return False
+
+    @staticmethod
+    def _line_within(line: int, node: ast.AST) -> bool:
+        end = getattr(node, "end_lineno", None) or node.lineno
+        return node.lineno <= line <= end
+
+    @staticmethod
+    def _reraises(handler: ast.ExceptHandler) -> bool:
+        return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+def check_refcount(project: Project,
+                   config: FiddlintConfig) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in project.functions.values():
+        path = relpath(fn.file.path)
+        body = getattr(fn.node, "body", [])
+        for acq in _find_acquires(fn, config):
+            scan = _PathScan(acq, config)
+            end_states = scan.scan(body, {BEFORE})
+            leaks = list(scan.leaks)
+            if HELD in end_states:
+                leaks.append((acq.call.lineno, "end"))
+            if not acq.bound:
+                leaks = [lk for lk in leaks if lk[1] in ("raise", "swallow")]
+            for line, kind in leaks:
+                what = (f"`{acq.var}` from `{acq.method}`" if acq.bound
+                        else f"reference taken by `{acq.method}` on "
+                             f"`{acq.receiver}`")
+                how = {
+                    "return": "returns without releasing or handing off",
+                    "raise": "raises while the reference is held",
+                    "swallow": "except handler swallows the error without "
+                               "releasing",
+                    "end": "falls off the end without releasing or handing "
+                           "off",
+                }[kind]
+                out.append(Finding(
+                    "FID003", path, line, 0,
+                    f"block-refcount escape: {what} — path {how} "
+                    f"(every exit must release or transfer ownership)",
+                    fn.qualname))
+    return out

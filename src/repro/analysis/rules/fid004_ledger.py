@@ -1,0 +1,89 @@
+"""FID004 ledger-charge-completeness.
+
+The simulated-seconds ledger is only as honest as its inputs.  Two
+declarative conventions keep it so:
+
+* every ``_charge(...)`` call site names its ``n_tokens=`` and
+  ``kv_len=`` kwargs explicitly — positional workload args were the
+  PR-4 bug class (swapped token/KV counts silently mis-priced a tier);
+* every per-source ``*_time`` field on the ``Ledger`` dataclass comes
+  with ``*_overlapped`` and ``*_exposed`` siblings, so a new time
+  source cannot be added without declaring how much of it hides under
+  compute versus extends the critical path (the PR-4/PR-6 migration
+  accounting rule).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.project import Project, attr_chain
+
+
+def _ledger_classes(project: Project, config: FiddlintConfig):
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if (isinstance(node, ast.ClassDef)
+                    and node.name == config.ledger_class):
+                yield sf, node
+
+
+def _field_names(cls: ast.ClassDef) -> List[ast.AnnAssign]:
+    out = []
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(
+                stmt.target, ast.Name):
+            out.append(stmt)
+    return out
+
+
+def check_ledger(project: Project,
+                 config: FiddlintConfig) -> List[Finding]:
+    out: List[Finding] = []
+
+    # -- charge call sites ---------------------------------------------------
+    required = list(config.charge_required_kwargs)
+    for fn in project.functions.values():
+        path = relpath(fn.file.path)
+        for node in ast.walk(fn.node):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if not chain or chain[-1] != config.charge_function:
+                continue
+            if fn.name == config.charge_function:
+                continue  # the definition's own recursion/helpers
+            kw = {k.arg for k in node.keywords if k.arg}
+            missing = [r for r in required if r not in kw]
+            if missing:
+                out.append(Finding(
+                    "FID004", path, node.lineno, node.col_offset,
+                    f"`{config.charge_function}` call missing explicit "
+                    f"{', '.join(f'`{m}=`' for m in missing)} — workload "
+                    f"kwargs must be named so tiers cannot be mis-priced "
+                    f"by positional swaps", fn.qualname))
+
+    # -- Ledger time-source split --------------------------------------------
+    exempt = set(config.time_split_exempt)
+    for sf, cls in _ledger_classes(project, config):
+        fields = _field_names(cls)
+        names = {f.target.id for f in fields}  # type: ignore[union-attr]
+        path = relpath(sf.path)
+        for f in fields:
+            name = f.target.id  # type: ignore[union-attr]
+            if not name.endswith("_time") or name in exempt:
+                continue
+            base = name[: -len("_time")]
+            missing = [s for s in (f"{base}_overlapped", f"{base}_exposed")
+                       if s not in names]
+            if missing:
+                out.append(Finding(
+                    "FID004", path, f.lineno, f.col_offset,
+                    f"Ledger time source `{name}` lacks "
+                    f"{', '.join(f'`{m}`' for m in missing)} — every time "
+                    f"source must split into overlapped vs exposed so the "
+                    f"critical-path accounting stays complete",
+                    f"{sf.module}.{cls.name}"))
+    return out

@@ -1,0 +1,159 @@
+"""FID005 unsynchronized-host-pool-state.
+
+The slow tier runs expert FFNs on a ``ThreadPoolExecutor`` while the
+main thread keeps scheduling: any state touched by both sides needs a
+lock.  Two patterns:
+
+* **check-then-set lazy init of a module global** —
+  ``if G is None: G = make()`` under a ``global G`` declaration without
+  a surrounding ``with <lock>:``.  Two threads can interleave between
+  the check and the set and construct the resource twice (the
+  ``_HOST_POOL`` bug).  The double-checked idiom (re-check inside
+  ``with lock:``) passes, because the *assignment* sits under the lock.
+* **worker-reachable unsynchronized writes** — functions reachable from
+  the configured worker entry points (the callables the pool executes)
+  that assign to ``self.<attr>`` or to a declared ``global`` outside a
+  ``with <lock>:`` block.  Reads are not flagged (GIL-atomic loads of
+  a reference are the tolerated idiom here); unprotected read-modify-
+  write is where the corruption lives.
+
+A context manager counts as a lock when its expression names something
+containing "lock" (``self._lock``, ``_POOL_LOCK``, ``threading.Lock``
+instances by convention) — a naming-convention check, stated as such.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.project import FunctionInfo, Project, attr_chain
+
+
+def _is_lockish(expr: ast.AST) -> bool:
+    chain = attr_chain(expr)
+    if not chain:
+        return False
+    return any("lock" in part.lower() for part in chain)
+
+
+def _lock_guarded(node: ast.AST, ancestors) -> bool:
+    for anc in ancestors.get(id(node), []):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                if _is_lockish(item.context_expr):
+                    return True
+    return False
+
+
+def _ancestor_map(root: ast.AST):
+    """{id(node): [ancestors innermost-last]} for every node under root."""
+    out = {}
+
+    def walk(node, stack):
+        out[id(node)] = list(stack)
+        stack.append(node)
+        for child in ast.iter_child_nodes(node):
+            walk(child, stack)
+        stack.pop()
+
+    walk(root, [])
+    return out
+
+
+def _global_names(fn_node: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Global):
+            names.update(node.names)
+    return names
+
+
+def _check_lazy_init(fn: FunctionInfo, path: str,
+                     out: List[Finding]) -> None:
+    globals_ = _global_names(fn.node)
+    if not globals_:
+        return
+    anc = _ancestor_map(fn.node)
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.If):
+            continue
+        checked = _none_checked_name(node.test)
+        if checked is None or checked not in globals_:
+            continue
+        for inner in ast.walk(node):
+            if (isinstance(inner, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == checked
+                            for t in inner.targets)
+                    and not _lock_guarded(inner, anc)):
+                out.append(Finding(
+                    "FID005", path, node.lineno, node.col_offset,
+                    f"check-then-set race on module global `{checked}`: "
+                    f"two threads can pass the `is None` check before "
+                    f"either assigns; use double-checked locking "
+                    f"(`with <lock>:` re-check, then assign)",
+                    fn.qualname))
+                break
+
+
+def _none_checked_name(test: ast.AST) -> Optional[str]:
+    """`X is None` / `not X` / `X is not None` guards on a plain name."""
+    if (isinstance(test, ast.Compare) and isinstance(test.left, ast.Name)
+            and len(test.ops) == 1
+            and isinstance(test.ops[0], (ast.Is, ast.Eq))
+            and isinstance(test.comparators[0], ast.Constant)
+            and test.comparators[0].value is None):
+        return test.left.id
+    if (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)
+            and isinstance(test.operand, ast.Name)):
+        return test.operand.id
+    return None
+
+
+def _check_worker_writes(fn: FunctionInfo, path: str, root: str,
+                         out: List[Finding]) -> None:
+    anc = _ancestor_map(fn.node)
+    globals_ = _global_names(fn.node)
+    via = "" if fn.qualname == root else f" (reachable from {root})"
+    for node in ast.walk(fn.node):
+        if not isinstance(node, (ast.Assign, ast.AugAssign)):
+            continue
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            label = None
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                label = f"self.{t.attr}"
+            elif isinstance(t, ast.Name) and t.id in globals_:
+                label = f"global `{t.id}`"
+            if label is None:
+                continue
+            if _lock_guarded(node, anc):
+                continue
+            out.append(Finding(
+                "FID005", path, node.lineno, node.col_offset,
+                f"unsynchronized write to {label} on a host-pool worker "
+                f"path{via}: the main thread can observe or race this "
+                f"store; guard it with a lock", fn.qualname))
+            break
+
+
+def check_threads(project: Project,
+                  config: FiddlintConfig) -> List[Finding]:
+    out: List[Finding] = []
+
+    # (a) lazy-init races anywhere in the project
+    for fn in project.functions.values():
+        _check_lazy_init(fn, relpath(fn.file.path), out)
+
+    # (b) unsynchronized writes on worker-reachable paths
+    workers = project.resolve_roots(config.worker_entry_points)
+    reach = project.reachable_from(workers)
+    for qual, root in reach.items():
+        fn = project.functions.get(qual)
+        if fn is not None:
+            _check_worker_writes(fn, relpath(fn.file.path), root, out)
+    return out

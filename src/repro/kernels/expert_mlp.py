@@ -27,8 +27,14 @@ from jax.experimental import pallas as pl
 try:  # pragma: no cover
     from jax.experimental.pallas import tpu as pltpu
     _HAS_PLTPU = True
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
+    import warnings
+
     _HAS_PLTPU = False
+    warnings.warn(
+        "jax.experimental.pallas.tpu unavailable; expert-MLP kernels use "
+        "generic pallas memory spaces (interpret mode only)",
+        RuntimeWarning, stacklevel=2)
 
 
 def _expert_mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_ref):

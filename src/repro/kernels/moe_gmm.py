@@ -20,8 +20,14 @@ from jax.experimental import pallas as pl
 try:  # pragma: no cover
     from jax.experimental.pallas import tpu as pltpu
     _HAS_PLTPU = True
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
+    import warnings
+
     _HAS_PLTPU = False
+    warnings.warn(
+        "jax.experimental.pallas.tpu unavailable; grouped-GEMM kernels "
+        "fall back to interpret-safe scratch allocation",
+        RuntimeWarning, stacklevel=2)
 
 
 def _scratch(shape):

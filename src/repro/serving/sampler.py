@@ -10,6 +10,8 @@ import numpy as np
 
 def greedy(logits: jnp.ndarray) -> np.ndarray:
     """logits: (B, V) → (B,) int32."""
+    # fiddlint: ignore[FID001] sampling is the per-step sequencing point:
+    # the next token must reach the host scheduler to build the next batch
     return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
 
 

@@ -1,0 +1,43 @@
+"""FID001 fixture: host syncs in/out of the hot path.
+
+Parsed by fiddlint, never imported.  EXPECT-comment markers name the
+lines the rule must flag; everything else must stay clean.  The hot root
+for this module is ``Engine.step`` (overridden in the test config).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+
+def compute(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.tanh(x)
+
+
+def helper(v: jnp.ndarray):
+    # reachable from Engine.step via the call graph, so this syncs the
+    # hot path even though it is two frames down
+    w = int(v[0])  # EXPECT: FID001
+    return w
+
+
+def cold_path(v: jnp.ndarray):
+    # false-positive candidate: same construct, but no path from the hot
+    # root reaches this function
+    return v.item()
+
+
+def host_math(n):
+    # false-positive candidate: float() on a plain python number
+    return float(n) * 2.0
+
+
+class Engine:
+    def step(self, x: jnp.ndarray):
+        logits = compute(x)
+        t = logits.item()  # EXPECT: FID001
+        y = np.asarray(logits)  # EXPECT: FID001
+        z = float(logits[0])  # EXPECT: FID001
+        u = logits.tolist()  # EXPECT: FID001
+        w = helper(logits)
+        host = np.asarray([1, 2, 3])  # ok: host-side literal, no sync
+        scale = host_math(3)  # ok: host arithmetic
+        return t, y, z, u, w, host, scale

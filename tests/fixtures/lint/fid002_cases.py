@@ -1,0 +1,32 @@
+"""FID002 fixture: jit-cache explosion via unbucketed dims / runtime jit.
+
+Hot root for this module: ``Engine.run``.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _bucket(n):
+    m = 1
+    while m < n:
+        m *= 2
+    return m
+
+
+class Engine:
+    def run(self, tokens, enc):
+        n = len(tokens)
+        pad = jnp.zeros((n, 4))  # EXPECT: FID002
+        cap = _bucket(len(tokens))
+        good = jnp.zeros((cap, 4))  # ok: bucketed capacity
+        k, v = enc
+        pos = jnp.arange(k.shape[1])  # ok: param-derived geometry
+        fresh = jax.jit(lambda t: t + 1)  # EXPECT: FID002
+        lim = min(cap, 128)
+        also_good = jnp.ones((lim, 2))  # ok: min() over a bucketed value
+        return pad, good, pos, fresh, also_good
+
+    def cold(self, tokens):
+        # false-positive candidate: same unbucketed pattern, but this
+        # method is not reachable from the hot root
+        return jnp.zeros((len(tokens), 4))

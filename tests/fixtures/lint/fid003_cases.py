@@ -1,0 +1,69 @@
+"""FID003 fixture: block-refcount escapes over the acquire/release API.
+
+The rule reports at the *leaking exit*: the swallowing handler, the
+``raise``, the ``return``, or (for a fall-off-the-end leak) the acquire
+itself.
+"""
+
+
+def leaks_on_swallowed_error(pool, weights, n):
+    blocks = pool.alloc(n)
+    try:
+        x = weights[n]
+        pool.free(blocks)
+    except KeyError:  # EXPECT: FID003
+        x = None
+    return x
+
+
+def leaks_on_raise(pool, n, limit):
+    blocks = pool.alloc(n)
+    if n > limit:
+        raise ValueError(n)  # EXPECT: FID003
+    pool.free(blocks)
+    return n
+
+
+def leaks_on_return(pool, n):
+    blocks = pool.alloc(n)
+    count = len(blocks)
+    return count  # EXPECT: FID003
+
+
+def safe_finally(pool, weights, n):
+    # false-positive candidate: the canonical try/finally release covers
+    # the exception edge
+    blocks = pool.alloc(n)
+    try:
+        x = weights[n]
+    finally:
+        pool.free(blocks)
+    return x
+
+
+def safe_handoff(pool, n):
+    # false-positive candidate: ownership transfers to the caller
+    blocks = pool.alloc(n)
+    return blocks
+
+
+def safe_store(pool, table, n):
+    # false-positive candidate: ownership transfers into a container
+    blocks = pool.alloc(n)
+    table[n] = blocks
+    return n
+
+
+def safe_statement_form(cache, slot, chain):
+    # false-positive candidate: map_prefix records ownership inside the
+    # receiver; a normal exit afterwards is the intended protocol
+    cache.map_prefix(slot, chain)
+    return slot
+
+
+class Cache:
+    def grow(self, n):
+        # false-positive candidate: self-rooted acquire — the object owns
+        # the reference and its release paths
+        blocks = self.meta.alloc(n)
+        self.table.append(blocks)

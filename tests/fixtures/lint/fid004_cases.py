@@ -1,0 +1,31 @@
+"""FID004 fixture: ledger charge conventions.
+
+Charge call sites must name ``n_tokens=`` and ``kv_len=``; every
+``*_time`` field on the Ledger (other than the exempt clock) needs its
+``*_overlapped`` / ``*_exposed`` split.
+"""
+from dataclasses import dataclass
+
+
+@dataclass
+class Ledger:
+    sim_time: float = 0.0  # ok: exempt aggregate clock
+    migration_time: float = 0.0  # ok: split declared below
+    migration_overlapped: float = 0.0
+    migration_exposed: float = 0.0
+    spill_time: float = 0.0  # EXPECT: FID004
+    flops: float = 0.0
+
+
+class Engine:
+    def _charge(self, li, plan, n_tokens, kv_len):
+        return li, plan, n_tokens, kv_len
+
+    def good_site(self, li, plan):
+        self._charge(li, plan, n_tokens=4, kv_len=128)  # ok: named kwargs
+
+    def bad_positional(self, li, plan):
+        self._charge(li, plan, 4, 128)  # EXPECT: FID004
+
+    def bad_partial(self, li, plan):
+        self._charge(li, plan, n_tokens=4)  # EXPECT: FID004

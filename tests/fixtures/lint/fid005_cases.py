@@ -1,0 +1,45 @@
+"""FID005 fixture: host-pool thread-safety.
+
+Worker entry point for this module: ``Worker.__call__``.
+"""
+import threading
+
+_POOL = None
+_SAFE = None
+_LOCK = threading.Lock()
+
+
+def make_pool():
+    return object()
+
+
+def get_pool_racy():
+    global _POOL
+    if _POOL is None:  # EXPECT: FID005
+        _POOL = make_pool()
+    return _POOL
+
+
+def get_pool_safe():
+    # false-positive candidate: double-checked locking — the assignment
+    # happens under the lock
+    global _SAFE
+    if _SAFE is None:
+        with _LOCK:
+            if _SAFE is None:
+                _SAFE = make_pool()
+    return _SAFE
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.unsafe_count = 0
+        self.safe_count = 0
+
+    def __call__(self, x):
+        self.unsafe_count = self.unsafe_count + 1  # EXPECT: FID005
+        with self._lock:
+            self.safe_count = self.safe_count + 1  # ok: guarded write
+        local = x * 2  # ok: local state only
+        return local
