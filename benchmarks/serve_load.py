@@ -25,8 +25,16 @@ no-cache control on a same-preamble workload (``--prefix-pool N
 --prefix-len L``): a warm phase primes the index, then a high-rate
 flood measures p95 TTFT, matched tokens, peak unique/dense KV residency
 (sampled every scheduler tick) and leaked blocks — prefix hits must cut
-both TTFT and peak unique KV bytes.  Results are dumped to
-``BENCH_serve_load.json`` at the repo root.
+both TTFT and peak unique KV bytes.
+
+A disaggregation axis (``serve_load_disagg/...`` keys, all modes
+including ``--smoke``) sweeps the roofline prefill/decode-disaggregated
+scheduler (``RooflinePolicy``: saturating prefill chunks overlapped
+under the decode stream) against interleaved FIFO at paper-scale
+Mixtral-8x7B simulation with long prompts — CI gates on roofline
+beating FIFO throughput at the high-rate point without regressing
+interactive p95 TTFT.  Results are dumped to ``BENCH_serve_load.json``
+at the repo root.
 """
 from __future__ import annotations
 
@@ -296,6 +304,26 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
                  f"leaked={r['leaked_blocks']:.0f}")
             results[key] = r
 
+    # -- disaggregation axis: roofline prefill/decode split vs interleaved ---
+    # Long prompts at paper scale: saturating prefill chunks + overlap
+    # under the decode stream must beat interleaved FIFO's throughput at
+    # the high rate without hurting interactive p95 TTFT (CI gate).
+    dis_rates = [32.0] if smoke else ([16.0, 32.0] if fast
+                                      else [16.0, 32.0, 64.0])
+    dis_requests = 8 if smoke else 32
+    for rate in dis_rates:
+        for sched in ("fifo", "roofline"):
+            r = simulate_once(model, "fiddler", env, rate_hz=rate,
+                              n_slots=sim_slots, n_requests=dis_requests,
+                              sched=sched, interactive_frac=0.25,
+                              prompt_len=96, max_new=24)
+            key = f"serve_load_disagg/{env}/fiddler/rate{rate:g}_{sched}"
+            emit(key, r["mean_itl"] * 1e6,
+                 f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                 f"p95_ttft_int={r.get('p95_ttft_interactive', 0.0):.4f}s "
+                 f"p95_ttft={r['p95_ttft']:.4f}s")
+            results[key] = r
+
     # self-describing record: a fast/dev/smoke run must not masquerade as
     # the full sweep when it overwrites the file
     record = {
@@ -310,6 +338,7 @@ def run(model: str = "mixtral-8x7b", env: str = "env1",
             "sim_slots": sim_slots,
             "prefix_rates": pre_rates, "prefix_requests": pre_requests,
             "prefix_pool": prefix_pool, "prefix_len": prefix_len,
+            "disagg_rates": dis_rates, "disagg_requests": dis_requests,
         },
         "results": results,
     }

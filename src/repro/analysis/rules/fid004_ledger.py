@@ -10,7 +10,12 @@ declarative conventions keep it so:
   with ``*_overlapped`` and ``*_exposed`` siblings, so a new time
   source cannot be added without declaring how much of it hides under
   compute versus extends the critical path (the PR-4/PR-6 migration
-  accounting rule).
+  accounting rule; the PR-8 per-stream serving fields —
+  ``prefill_stream_*``/``decode_stream_*`` — follow the same
+  convention);
+* conversely, no orphan ``*_overlapped``/``*_exposed`` field may exist
+  without its ``*_time`` base — a split without a total cannot be
+  checked for completeness (overlapped + exposed == time).
 """
 from __future__ import annotations
 
@@ -86,4 +91,17 @@ def check_ledger(project: Project,
                     f"source must split into overlapped vs exposed so the "
                     f"critical-path accounting stays complete",
                     f"{sf.module}.{cls.name}"))
+        for f in fields:
+            name = f.target.id  # type: ignore[union-attr]
+            for suffix in ("_overlapped", "_exposed"):
+                if not name.endswith(suffix):
+                    continue
+                base = name[: -len(suffix)]
+                if f"{base}_time" not in names:
+                    out.append(Finding(
+                        "FID004", path, f.lineno, f.col_offset,
+                        f"Ledger split field `{name}` has no `{base}_time` "
+                        f"base — an overlapped/exposed split without its "
+                        f"total cannot be checked for completeness",
+                        f"{sf.module}.{cls.name}"))
     return out

@@ -180,6 +180,19 @@ class Ledger:
     migration_time: float = 0.0
     migration_overlapped: float = 0.0
     migration_exposed: float = 0.0
+    # disaggregated prefill/decode serving (serving/policy.RooflinePolicy):
+    # per-stream time under the same overlapped/exposed convention.  The
+    # decode gang is the foreground stream — its time is always exposed —
+    # and each tick's prefill chunk may hide under the decode window just
+    # run (``open_overlap_window``): ``prefill_stream_overlapped`` costs
+    # no sim_time, ``prefill_stream_exposed`` is serialised into it.
+    # Interleaved (non-overlap) policies leave all six fields at zero.
+    prefill_stream_time: float = 0.0
+    prefill_stream_overlapped: float = 0.0
+    prefill_stream_exposed: float = 0.0
+    decode_stream_time: float = 0.0
+    decode_stream_overlapped: float = 0.0
+    decode_stream_exposed: float = 0.0
     # cross-request prefix cache (models/paged_kv.PrefixIndex): admission
     # lookups, hits, and prompt tokens whose KV was reused from resident
     # blocks instead of being re-prefilled
@@ -480,6 +493,11 @@ class FiddlerEngine:
                 "rebalancer supersedes the AdaptivePlacement extension — "
                 "enable one or the other")
         self.rebalancer = rebalancer
+
+        # --- disaggregated-serving overlap window ---------------------------
+        # (serving/backend open_overlap_window → prefill charges absorbed)
+        self._overlap_budget = 0.0
+        self._overlap_armed = False
 
         # --- real-execution pools -------------------------------------------
         self._lru_pool: Dict[Any, Any] = {}
@@ -1151,6 +1169,7 @@ class FiddlerEngine:
         assert self.model is not None
         model, cfg = self.model, self.cfg
         B, C = tokens.shape
+        t0 = self.ledger.sim_time
         if caches is None:
             caches = [self._init_layer_cache(li, B, max_seq)
                       for li in range(cfg.n_layers)]
@@ -1162,6 +1181,7 @@ class FiddlerEngine:
                                             caches[li], max_seq,
                                             kv_len=pos_offset + C)
         logits = self._logits(x[:, -1:])
+        self._absorb_prefill(self.ledger.sim_time - t0)
         return logits[:, 0], caches
 
     def decode_step_multi(self, caches: List[Any], tokens: jnp.ndarray,
@@ -1261,6 +1281,40 @@ class FiddlerEngine:
             self.ledger.tokens_out += 1
         return self.ledger.sim_time - t0
 
+    # -- disaggregated-serving stream overlap ---------------------------------
+    def open_overlap_window(self, seconds: float) -> None:
+        """Arm the prefill-under-decode window: the decode gang (the
+        foreground stream) just ran for ``seconds`` of sim clock, and the
+        next prefill charges may hide under it.  Decode stream time is
+        always exposed — it is what the clock advanced by."""
+        assert seconds >= 0.0, seconds
+        led = self.ledger
+        led.decode_stream_time += seconds
+        led.decode_stream_exposed += seconds
+        self._overlap_budget += seconds
+        self._overlap_armed = True
+
+    def close_overlap_window(self) -> None:
+        """Unused decode budget lapses (it was idle GPU, not a credit)."""
+        self._overlap_budget = 0.0
+        self._overlap_armed = False
+
+    def _absorb_prefill(self, dt: float) -> None:
+        """Split a prefill charge of ``dt`` sim-seconds into hidden
+        (absorbed into the armed decode window — refunded from sim_time)
+        vs exposed.  Called inside the prefill-chunk boundary so
+        downstream timestamps (token_times, TTFT) stay monotone: the
+        refund happens before anyone reads the clock."""
+        if not self._overlap_armed:
+            return
+        led = self.ledger
+        hidden = min(self._overlap_budget, dt)
+        self._overlap_budget -= hidden
+        led.sim_time -= hidden
+        led.prefill_stream_time += dt
+        led.prefill_stream_overlapped += hidden
+        led.prefill_stream_exposed += dt - hidden
+
     def simulate_prefill_chunk(self, n_tokens: int, kv_len: int) -> float:
         """Charge one prefill chunk (``n_tokens`` tokens attending to
         ``kv_len`` KV entries) without touching ``ledger.ttft`` — the
@@ -1270,6 +1324,7 @@ class FiddlerEngine:
             counts = self._sample_counts(li, n_tokens)
             plan = self._decide(li, counts)
             self._charge(li, plan, n_tokens=n_tokens, kv_len=kv_len)
+        self._absorb_prefill(self.ledger.sim_time - t0)
         return self.ledger.sim_time - t0
 
     def simulate_decode_multi(self, kv_lens: np.ndarray,

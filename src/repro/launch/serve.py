@@ -2,10 +2,14 @@
 a stream of requests from the synthetic conversation pipeline, with either
 the static grouped scheduler or slot-based continuous batching.
 
+Configuration is a :class:`ServeConfig` dataclass — benchmarks and
+examples construct it programmatically (``run(ServeConfig(...))``) and
+the CLI is just ``ServeConfig.from_args``.
+
 ``--policy`` picks the *orchestrator* policy (paper Algorithm 1 vs
 baselines); ``--sched-policy`` picks the *scheduler* policy (the
-SchedulerPolicy seam: fifo / priority / autoscale) and ``--slo`` assigns
-SLO classes to the generated request stream, e.g.
+SchedulerPolicy seam: fifo / priority / autoscale / roofline) and
+``--slo`` assigns SLO classes to the generated request stream, e.g.
 ``--slo interactive=1,batch=3`` for a 1:3 class mix.
 
 ``--prefix-pool N --prefix-len L`` prepends one of N shared L-token
@@ -21,6 +25,8 @@ ledger reports lookups/hits/matched tokens.
       --prefix-pool 1 --prefix-len 32
 """
 import argparse
+from dataclasses import dataclass, fields
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,149 +42,211 @@ from repro.serving.backend import FiddlerBackend, ModelBackend
 from repro.serving.continuous import ContinuousEngine
 from repro.serving.engine import Request, ServingEngine
 
+SCHED_POLICIES = ["fifo", "priority", "autoscale", "roofline"]
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="mixtral-8x7b")
-    ap.add_argument("--policy", default="fiddler",
-                    choices=["fiddler", "offload", "static_split", "model"])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--hw", default="env1",
-                    choices=["env1", "env2", "tpuhost"])
-    ap.add_argument("--scheduler", default="static",
-                    choices=["static", "continuous"])
-    ap.add_argument("--slots", type=int, default=4,
-                    help="decode slots (continuous scheduler)")
-    ap.add_argument("--prefill-chunk", type=int, default=16,
-                    help="chunked-admission size (continuous scheduler)")
-    ap.add_argument("--sched-policy", default="fifo",
-                    choices=["fifo", "priority", "autoscale"],
-                    help="SchedulerPolicy: admission order, preemption, "
-                         "slot autoscaling")
-    ap.add_argument("--slo", default=None,
-                    help="SLO class mix for the request stream, e.g. "
-                         "'interactive=1,batch=3' (weights); default: all "
-                         "standard")
-    ap.add_argument("--rebalance-interval", type=int, default=None,
-                    help="dynamic placement rebalancing: serving ticks "
-                         "between bounded expert-migration plans "
-                         "(default: off — static placement)")
-    ap.add_argument("--rebalance-k", type=int, default=4,
-                    help="max expert swaps per rebalance interval")
-    ap.add_argument("--kv-layout", default="paged",
-                    choices=["paged", "dense"],
-                    help="serving KV layout: paged (block pool + "
-                         "copy-on-write tables; beam forks/reshuffles are "
-                         "zero-copy) or dense ring buffers")
-    ap.add_argument("--beam-width", type=int, default=1,
-                    help=">1 submits every request as a gang-scheduled "
-                         "beam group of this width (continuous scheduler "
-                         "runs them alongside ordinary traffic)")
-    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="cross-request prefix cache over the paged KV "
-                         "pool: prompts sharing a preamble reuse its "
-                         "resident blocks and only prefill the tail "
-                         "(paged layout + continuous scheduler; "
-                         "--no-prefix-cache disables)")
-    ap.add_argument("--prefix-pool", type=int, default=0, metavar="N",
-                    help="prepend one of N shared preambles (round-robin) "
-                         "to every prompt — a system-prompt workload that "
-                         "exercises the prefix cache (default: off)")
-    ap.add_argument("--prefix-len", type=int, default=96, metavar="L",
-                    help="shared preamble length in tokens "
-                         "(with --prefix-pool)")
-    args = ap.parse_args(argv)
-    if args.beam_width > 1 and args.beam_width > args.slots \
-            and args.scheduler == "continuous":
-        raise SystemExit(
-            f"--beam-width {args.beam_width} needs at least that many "
-            f"--slots (got {args.slots})")
-    if args.rebalance_interval is not None and args.policy in (
-            "model", "static_split"):
-        raise SystemExit(
-            "--rebalance-interval needs an expert-level orchestrator "
-            "policy (fiddler or offload)")
 
-    full = get_config(args.arch)
-    cfg = full.reduced()  # real numerics at reduced scale on CPU
-    model = Model(cfg, param_dtype=jnp.float32)
-    params = model.init(jax.random.PRNGKey(0))
-    tok = ByteTokenizer(cfg.vocab_size)
+@dataclass
+class ServeConfig:
+    """Everything the serving launcher needs, as data.  ``sched_policy``
+    takes anything ``serving.policy.get_policy`` accepts — a registry
+    name, a ``PolicySpec``, or a ready ``SchedulerPolicy`` instance —
+    so programmatic callers pass structured specs instead of flag
+    strings."""
+    arch: str = "mixtral-8x7b"
+    policy: str = "fiddler"          # orchestrator policy
+    requests: int = 8
+    max_new: int = 16
+    max_batch: int = 4
+    hw: str = "env1"
+    scheduler: str = "static"        # static | continuous
+    slots: int = 4
+    prefill_chunk: int = 16
+    sched_policy: Any = "fifo"       # SchedulerPolicy spec (see get_policy)
+    slo: Optional[str] = None        # "interactive=1,batch=3" class mix
+    rebalance_interval: Optional[int] = None
+    rebalance_k: int = 4
+    kv_layout: str = "paged"
+    beam_width: int = 1
+    prefix_cache: bool = True
+    prefix_pool: int = 0
+    prefix_len: int = 96
+    max_seq: int = 256
 
-    hw = {"env1": HardwareSpec.paper_env1(),
-          "env2": HardwareSpec.paper_env2(),
-          "tpuhost": HardwareSpec()}[args.hw]
+    def validate(self) -> "ServeConfig":
+        if self.beam_width > 1 and self.beam_width > self.slots \
+                and self.scheduler == "continuous":
+            raise SystemExit(
+                f"--beam-width {self.beam_width} needs at least that many "
+                f"--slots (got {self.slots})")
+        if self.rebalance_interval is not None and self.policy in (
+                "model", "static_split"):
+            raise SystemExit(
+                "--rebalance-interval needs an expert-level orchestrator "
+                "policy (fiddler or offload)")
+        return self
 
-    fe = None
-    if args.policy != "model":
-        fe = FiddlerEngine(cfg, params, policy=args.policy, timing_cfg=full,
-                           hw=hw,
-                           expert_budget=cfg.n_layers * cfg.moe.n_experts // 4
-                           if cfg.moe else 0,
-                           rebalance_interval=args.rebalance_interval,
-                           rebalance_k=args.rebalance_k,
-                           kv_layout=args.kv_layout,
-                           prefix_cache=args.prefix_cache)
-    if args.scheduler == "continuous":
-        backend = (ModelBackend(model, params, max_seq=256) if fe is None
-                   else FiddlerBackend(fe, max_seq=256))
-        eng = ContinuousEngine(backend, n_slots=args.slots, max_seq=256,
-                               prefill_chunk=args.prefill_chunk,
-                               policy=args.sched_policy)
-    elif fe is None:
-        eng = ServingEngine(model, mode="model", params=params,
-                            max_batch=args.max_batch, max_seq=256,
-                            policy=args.sched_policy)
-    else:
-        eng = ServingEngine(fe, mode="fiddler", max_batch=args.max_batch,
-                            max_seq=256, policy=args.sched_policy)
-
-    # SLO class mix: "interactive=1,batch=3" → weighted random assignment
-    classes, weights = ["standard"], [1.0]
-    if args.slo:
+    def slo_mix(self) -> Tuple[List[str], np.ndarray]:
+        """The ``--slo`` class mix as (classes, probabilities)."""
+        if not self.slo:
+            return ["standard"], np.asarray([1.0])
         classes, weights = [], []
-        for part in args.slo.split(","):
+        for part in self.slo.split(","):
             name, _, w = part.partition("=")
             classes.append(name.strip())
             weights.append(float(w) if w else 1.0)
         if min(weights) < 0 or sum(weights) <= 0:
             raise SystemExit(
                 f"--slo weights must be non-negative with a positive sum, "
-                f"got {args.slo!r}")
-    probs = np.asarray(weights) / np.sum(weights)
+                f"got {self.slo!r}")
+        return classes, np.asarray(weights) / np.sum(weights)
+
+    @classmethod
+    def parser(cls) -> argparse.ArgumentParser:
+        ap = argparse.ArgumentParser()
+        ap.add_argument("--arch", default=cls.arch)
+        ap.add_argument("--policy", default=cls.policy,
+                        choices=["fiddler", "offload", "static_split",
+                                 "model"])
+        ap.add_argument("--requests", type=int, default=cls.requests)
+        ap.add_argument("--max-new", type=int, default=cls.max_new)
+        ap.add_argument("--max-batch", type=int, default=cls.max_batch)
+        ap.add_argument("--hw", default=cls.hw,
+                        choices=["env1", "env2", "tpuhost"])
+        ap.add_argument("--scheduler", default=cls.scheduler,
+                        choices=["static", "continuous"])
+        ap.add_argument("--slots", type=int, default=cls.slots,
+                        help="decode slots (continuous scheduler)")
+        ap.add_argument("--prefill-chunk", type=int,
+                        default=cls.prefill_chunk,
+                        help="chunked-admission size (continuous scheduler)")
+        ap.add_argument("--sched-policy", default=cls.sched_policy,
+                        choices=SCHED_POLICIES,
+                        help="SchedulerPolicy: admission order, preemption, "
+                             "slot autoscaling, or roofline-disaggregated "
+                             "prefill/decode streams")
+        ap.add_argument("--slo", default=cls.slo,
+                        help="SLO class mix for the request stream, e.g. "
+                             "'interactive=1,batch=3' (weights); default: "
+                             "all standard")
+        ap.add_argument("--rebalance-interval", type=int,
+                        default=cls.rebalance_interval,
+                        help="dynamic placement rebalancing: serving ticks "
+                             "between bounded expert-migration plans "
+                             "(default: off — static placement)")
+        ap.add_argument("--rebalance-k", type=int, default=cls.rebalance_k,
+                        help="max expert swaps per rebalance interval")
+        ap.add_argument("--kv-layout", default=cls.kv_layout,
+                        choices=["paged", "dense"],
+                        help="serving KV layout: paged (block pool + "
+                             "copy-on-write tables; beam forks/reshuffles "
+                             "are zero-copy) or dense ring buffers")
+        ap.add_argument("--beam-width", type=int, default=cls.beam_width,
+                        help=">1 submits every request as a gang-scheduled "
+                             "beam group of this width (continuous "
+                             "scheduler runs them alongside ordinary "
+                             "traffic)")
+        ap.add_argument("--prefix-cache",
+                        action=argparse.BooleanOptionalAction,
+                        default=cls.prefix_cache,
+                        help="cross-request prefix cache over the paged KV "
+                             "pool: prompts sharing a preamble reuse its "
+                             "resident blocks and only prefill the tail "
+                             "(paged layout + continuous scheduler; "
+                             "--no-prefix-cache disables)")
+        ap.add_argument("--prefix-pool", type=int, default=cls.prefix_pool,
+                        metavar="N",
+                        help="prepend one of N shared preambles "
+                             "(round-robin) to every prompt — a "
+                             "system-prompt workload that exercises the "
+                             "prefix cache (default: off)")
+        ap.add_argument("--prefix-len", type=int, default=cls.prefix_len,
+                        metavar="L",
+                        help="shared preamble length in tokens "
+                             "(with --prefix-pool)")
+        return ap
+
+    @classmethod
+    def from_args(cls, argv=None) -> "ServeConfig":
+        args = cls.parser().parse_args(argv)
+        known = {f.name for f in fields(cls)}
+        picked = {k: v for k, v in vars(args).items() if k in known}
+        return cls(**picked).validate()
+
+
+def build_engine(cfg: ServeConfig):
+    """ServeConfig → a ready serving engine over the requested backend."""
+    full = get_config(cfg.arch)
+    mcfg = full.reduced()  # real numerics at reduced scale on CPU
+    model = Model(mcfg, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    hw = {"env1": HardwareSpec.paper_env1(),
+          "env2": HardwareSpec.paper_env2(),
+          "tpuhost": HardwareSpec()}[cfg.hw]
+
+    fe = None
+    if cfg.policy != "model":
+        fe = FiddlerEngine(
+            mcfg, params, policy=cfg.policy, timing_cfg=full, hw=hw,
+            expert_budget=mcfg.n_layers * mcfg.moe.n_experts // 4
+            if mcfg.moe else 0,
+            rebalance_interval=cfg.rebalance_interval,
+            rebalance_k=cfg.rebalance_k,
+            kv_layout=cfg.kv_layout,
+            prefix_cache=cfg.prefix_cache)
+    if cfg.scheduler == "continuous":
+        backend = (ModelBackend(model, params, max_seq=cfg.max_seq)
+                   if fe is None
+                   else FiddlerBackend(fe, max_seq=cfg.max_seq))
+        eng = ContinuousEngine(backend, n_slots=cfg.slots,
+                               max_seq=cfg.max_seq,
+                               prefill_chunk=cfg.prefill_chunk,
+                               policy=cfg.sched_policy)
+    elif fe is None:
+        eng = ServingEngine(model, mode="model", params=params,
+                            max_batch=cfg.max_batch, max_seq=cfg.max_seq,
+                            policy=cfg.sched_policy)
+    else:
+        eng = ServingEngine(fe, mode="fiddler", max_batch=cfg.max_batch,
+                            max_seq=cfg.max_seq, policy=cfg.sched_policy)
+    return eng, mcfg
+
+
+def run(cfg: ServeConfig) -> None:
+    eng, mcfg = build_engine(cfg)
+    tok = ByteTokenizer(mcfg.vocab_size)
+    classes, probs = cfg.slo_mix()
     rng = np.random.default_rng(0)
 
     # shared system-prompt preambles for the prefix-cache workload: a
     # ring-wrapped row cannot serve as a shared prefix, so keep
     # preamble + tail + decode inside the smallest layer KV window
     # (reduced Mixtral runs 64-token sliding-window rings)
-    w_min = min(layer_window(cfg, li, 256) for li in range(cfg.n_layers))
-    pre_len = min(args.prefix_len, max(16, w_min - 16 - args.max_new))
-    tail_cap = max(1, min(48, w_min - pre_len - args.max_new))
-    if args.prefix_pool and pre_len < args.prefix_len:
+    w_min = min(layer_window(mcfg, li, cfg.max_seq)
+                for li in range(mcfg.n_layers))
+    pre_len = min(cfg.prefix_len, max(16, w_min - 16 - cfg.max_new))
+    tail_cap = max(1, min(48, w_min - pre_len - cfg.max_new))
+    if cfg.prefix_pool and pre_len < cfg.prefix_len:
         print(f"note: --prefix-len clipped to {pre_len} (layer KV window "
-              f"{w_min} with --max-new {args.max_new})")
-    pools = [rng.integers(3, min(250, cfg.vocab_size),
+              f"{w_min} with --max-new {cfg.max_new})")
+    pools = [rng.integers(3, min(250, mcfg.vocab_size),
                           size=pre_len).tolist()
-             for _ in range(args.prefix_pool)]
-    for i, conv in enumerate(synthetic_conversations(args.requests)):
+             for _ in range(cfg.prefix_pool)]
+    for i, conv in enumerate(synthetic_conversations(cfg.requests)):
         slo = classes[int(rng.choice(len(classes), p=probs))]
         prompt = tok.encode(conv["text"])[:48]
         if pools:
             prompt = pools[i % len(pools)] + prompt[:tail_cap]
         eng.submit(Request(rid=f"req{i}", prompt=prompt,
-                           max_new_tokens=args.max_new, slo_class=slo,
-                           beam_width=args.beam_width))
+                           max_new_tokens=cfg.max_new, slo_class=slo,
+                           beam_width=cfg.beam_width))
     for r in eng.run():
-        unit = "s(sim)" if args.policy != "model" else "s"
+        unit = "s(sim)" if cfg.policy != "model" else "s"
         beam = (f" beams={r.beam_width}" if r.beam_width > 1 else "")
         print(f"{r.rid}[{r.slo_class}]: ttft={r.ttft:.4f}{unit} "
               f"latency={r.latency:.4f}{unit} tokens={len(r.output)} "
               f"preempt={r.preemptions}{beam}")
-    if args.policy not in ("model",):
+    if cfg.policy not in ("model",):
         led = eng.backend.ledger
         print(f"ledger: sim_time={led.sim_time:.4f}s hits={led.fast_hits} "
               f"streams={led.streams} slow={led.slow_runs} "
@@ -188,6 +256,14 @@ def main(argv=None):
             print(f"prefix cache: lookups={led.prefix_lookups} "
                   f"hits={led.prefix_hits} "
                   f"matched_tokens={led.prefix_tokens}")
+        if led.prefill_stream_time or led.decode_stream_time:
+            print(f"streams: prefill={led.prefill_stream_time:.4f}s "
+                  f"(overlapped={led.prefill_stream_overlapped:.4f}s) "
+                  f"decode={led.decode_stream_time:.4f}s")
+
+
+def main(argv=None):
+    run(ServeConfig.from_args(argv))
 
 
 if __name__ == "__main__":

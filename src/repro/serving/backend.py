@@ -25,11 +25,14 @@ paper's setting: the modelled hardware, not this container's CPU).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.policy import CostView
 
 
 class ServingBackend:
@@ -72,13 +75,41 @@ class ServingBackend:
         (overlapped + exposed == migration_time).  Default: no-op."""
         return None
 
+    # -- cost model (roofline scheduling) ------------------------------------
+    def cost_view(self) -> Optional[CostView]:
+        """Per-phase roofline constants for phase-aware policies
+        (``RooflinePolicy``).  Default: ``None`` — wall-clock backends
+        have no cost model and policies must degrade gracefully."""
+        return None
+
+    # -- stream overlap (disaggregated prefill/decode) -----------------------
+    def open_overlap_window(self, seconds: float) -> None:
+        """Declare that the next prefill charges may hide under a decode
+        stream that just ran for ``seconds`` of backend clock.  Backends
+        with a simulated clock split subsequent prefill time into
+        overlapped (absorbed into the window) vs exposed; the default —
+        real wall clocks, where time is not ours to rewrite — is a
+        no-op."""
+        return None
+
+    def close_overlap_window(self) -> None:
+        """End the overlap window: any unused decode budget lapses."""
+        return None
+
     # -- slot API (continuous batching) -------------------------------------
     def make_cache(self, n_slots: int) -> Any:
         raise NotImplementedError
 
     def prefill(self, prompt: Sequence[int]) -> Tuple[np.ndarray, Any]:
-        """Whole-prompt prefill → ((V,) last-token logits, batch-1 cache)."""
-        raise NotImplementedError
+        """Deprecated whole-prompt prefill → ((V,) last-token logits,
+        batch-1 cache).  There is one prefill surface now —
+        ``prefill_chunk`` — and this wrapper simply runs the whole prompt
+        as a single chunk."""
+        warnings.warn(
+            "ServingBackend.prefill is deprecated; use "
+            "prefill_chunk(None, prompt, 0) (one chunk = whole prompt)",
+            DeprecationWarning, stacklevel=2)
+        return self.prefill_chunk(None, list(prompt), 0)
 
     def prefill_chunk(self, slot_cache: Optional[Any],
                       chunk: Sequence[int], pos_offset: int,
@@ -112,7 +143,7 @@ class ServingBackend:
         later admissions (post-join).  Default: no-op."""
         return None
 
-    def resize_cache(self, cache: Any, n_slots: int) -> Any:
+    def resize_cache(self, cache: Any, *, n_slots: int) -> Any:
         """Re-allocate the multi-slot cache with ``n_slots`` rows,
         preserving rows ``0..min(old, new)-1`` (slot autoscaling).  The
         default allocates fresh via ``make_cache`` and copies leaf axis 0;
@@ -127,21 +158,21 @@ class ServingBackend:
         raise NotImplementedError
 
     # -- slot lineage (beam groups) ------------------------------------------
-    def fork_slot(self, cache: Any, src: int, dst: int) -> Any:
+    def fork_slot(self, cache: Any, *, src: int, dst: int) -> Any:
         """Slot ``dst`` becomes a copy of ``src`` — beam-group member
         creation after the shared prompt prefill.  Paged-KV backends
         implement this as a block-table alias (copy-on-write, zero KV
         data movement); dense backends copy the row."""
         raise NotImplementedError
 
-    def reorder_slots(self, cache: Any, slots: Sequence[int],
+    def reorder_slots(self, cache: Any, *, slots: Sequence[int],
                       src_of: Sequence[int]) -> Any:
         """Beam reshuffle: ``slots[i]`` continues the sequence held by
         ``src_of[i]`` (sources may repeat).  Paged: table permutation +
         refcount bumps only."""
         raise NotImplementedError
 
-    def release_slot(self, cache: Any, slot: int) -> Any:
+    def release_slot(self, cache: Any, *, slot: int) -> Any:
         """A retired/evicted request leaves ``slot``: paged backends
         return its KV blocks to the pool (refcount decrements).  Default:
         no-op — dense rows are just overwritten by the next occupant."""
@@ -188,9 +219,6 @@ class ModelBackend(ServingBackend):
         self.model = model
         self.params = params
         self.max_seq = max_seq
-        self._prefill1 = jax.jit(
-            lambda p, t: model.prefill(p, t, max_seq,
-                                       cache_dtype=jnp.float32))
         # group path keeps the model's default (bf16) cache — only the
         # slot path needs fp32 to splice into make_cache(dtype=float32)
         self._prefill_grp = jax.jit(
@@ -216,11 +244,6 @@ class ModelBackend(ServingBackend):
         return self.model.make_cache(n_slots, self.max_seq,
                                      dtype=jnp.float32)
 
-    def prefill(self, prompt):
-        logits, cache = self._prefill1(
-            self.params, jnp.asarray([list(prompt)], jnp.int32))
-        return np.asarray(logits[0]), cache
-
     def prefill_chunk(self, slot_cache, chunk, pos_offset,
                       cache=None, slot=None):
         # dense layout: staging stays a private batch-1 cache (cache/slot
@@ -236,7 +259,7 @@ class ModelBackend(ServingBackend):
     def write_slot(self, cache, slot_cache, slot):
         return self.model.write_slot(cache, slot_cache, slot)
 
-    def resize_cache(self, cache, n_slots):
+    def resize_cache(self, cache, *, n_slots):
         """``Model.make_cache`` leaves are not slot-major: block caches
         are scan-stacked (n_periods, B, ...) — batch axis 1 — while tail
         and per-layer caches keep batch on axis 0 (same layout contract
@@ -258,10 +281,10 @@ class ModelBackend(ServingBackend):
             jnp.asarray(pos, jnp.int32))
         return np.asarray(logits), cache
 
-    def fork_slot(self, cache, src, dst):
+    def fork_slot(self, cache, *, src, dst):
         return self.model.fork_slot(cache, src, dst)
 
-    def reorder_slots(self, cache, slots, src_of):
+    def reorder_slots(self, cache, *, slots, src_of):
         return self.model.reorder_slots(cache, slots, src_of)
 
     # group API
@@ -308,14 +331,18 @@ class FiddlerBackend(ServingBackend):
     def finalize(self) -> None:
         self.engine.flush_prefetch()
 
+    def cost_view(self):
+        return _engine_cost_view(self.engine)
+
+    def open_overlap_window(self, seconds: float) -> None:
+        self.engine.open_overlap_window(seconds)
+
+    def close_overlap_window(self) -> None:
+        self.engine.close_overlap_window()
+
     # slot API
     def make_cache(self, n_slots: int) -> Any:
         return self.engine.make_decode_caches(n_slots, self.max_seq)
-
-    def prefill(self, prompt):
-        logits, caches = self.engine.prefill(
-            jnp.asarray([list(prompt)], jnp.int32), self.max_seq)
-        return np.asarray(logits[0]), caches
 
     def prefill_chunk(self, slot_cache, chunk, pos_offset,
                       cache=None, slot=None):
@@ -339,11 +366,11 @@ class FiddlerBackend(ServingBackend):
     def register_prefix(self, cache, slot, tokens):
         self.engine.kv_register_prefix(cache, slot, list(tokens))
 
-    def resize_cache(self, cache, n_slots):
+    def resize_cache(self, cache, *, n_slots):
         if self.engine.kv_layout == "paged":
             # block tables grow/shrink in place; the pool only ever grows
             return self.engine.resize_decode_caches(cache, n_slots)
-        return super().resize_cache(cache, n_slots)
+        return super().resize_cache(cache, n_slots=n_slots)
 
     def decode_slots(self, cache, tokens, pos, active):
         logits, cache = self.engine.decode_step_multi(
@@ -351,13 +378,13 @@ class FiddlerBackend(ServingBackend):
             self.max_seq, active=active)
         return np.asarray(logits), cache
 
-    def fork_slot(self, cache, src, dst):
+    def fork_slot(self, cache, *, src, dst):
         return self.engine.fork_slot(cache, src, dst)
 
-    def reorder_slots(self, cache, slots, src_of):
+    def reorder_slots(self, cache, *, slots, src_of):
         return self.engine.reorder_slots(cache, list(slots), list(src_of))
 
-    def release_slot(self, cache, slot):
+    def release_slot(self, cache, *, slot):
         return self.engine.release_slot(cache, slot)
 
     def block_stats(self, cache, slots=None):
@@ -425,6 +452,15 @@ class SimulatedBackend(ServingBackend):
     def finalize(self) -> None:
         self.engine.flush_prefetch()
 
+    def cost_view(self):
+        return _engine_cost_view(self.engine)
+
+    def open_overlap_window(self, seconds: float) -> None:
+        self.engine.open_overlap_window(seconds)
+
+    def close_overlap_window(self) -> None:
+        self.engine.close_overlap_window()
+
     def _logits(self, n: Optional[int] = None) -> np.ndarray:
         row = np.zeros((self._vocab,), np.float32)
         row[self.FAKE_TOKEN] = 1.0
@@ -441,15 +477,10 @@ class SimulatedBackend(ServingBackend):
         # index at admission (write_slot then skips re-writing them)
         return {"n_slots": n_slots, "meta": meta, "matched": {}}
 
-    def resize_cache(self, cache: Any, n_slots: int) -> Any:
+    def resize_cache(self, cache: Any, *, n_slots: int) -> Any:
         cache["meta"].resize(n_slots)
         return {"n_slots": n_slots, "meta": cache["meta"],
                 "matched": cache.get("matched", {})}
-
-    def prefill(self, prompt):
-        n = len(list(prompt))
-        self.engine.simulate_prefill_chunk(n, kv_len=n)
-        return self._logits(), {"staged": n}
 
     def prefill_chunk(self, slot_cache, chunk, pos_offset,
                       cache=None, slot=None):
@@ -502,15 +533,15 @@ class SimulatedBackend(ServingBackend):
             kv_lens, kv_unique=meta.unique_tokens(live))
         return self._logits(len(active)), cache
 
-    def fork_slot(self, cache, src, dst):
+    def fork_slot(self, cache, *, src, dst):
         cache["meta"].fork_slot(src, dst)
         return cache
 
-    def reorder_slots(self, cache, slots, src_of):
+    def reorder_slots(self, cache, *, slots, src_of):
         cache["meta"].reorder_slots(list(slots), list(src_of))
         return cache
 
-    def release_slot(self, cache, slot):
+    def release_slot(self, cache, *, slot):
         cache["meta"].release_slot(slot)
         cache.get("matched", {}).pop(slot, None)
         return cache
@@ -533,6 +564,20 @@ class SimulatedBackend(ServingBackend):
         B = cache["batch"]
         self.engine.simulate_decode_multi(np.full(B, pos + 1, np.int64))
         return jnp.asarray(self._logits(B)), cache
+
+
+def _engine_cost_view(engine) -> Optional[CostView]:
+    """Roofline constants from a ``FiddlerEngine``'s latency model —
+    the same per-phase flops/bytes its simulated ledger charges with."""
+    cfg, lat, hw = engine.cfg, engine.lat, engine.hw
+    if cfg.moe is None:
+        return None
+    return CostView(gpu_const=lat.gpu_const,
+                    gpu_per_token=lat.gpu_per_token,
+                    n_experts=cfg.moe.n_experts,
+                    top_k=cfg.moe.top_k,
+                    fast_flops=hw.fast_flops,
+                    fast_mem_bw=hw.fast_mem_bw)
 
 
 def as_backend(obj, *, params=None, mode: Optional[str] = None,

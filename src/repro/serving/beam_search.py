@@ -63,17 +63,15 @@ def beam_search_slots(backend, prompt: Sequence[int], width: int,
     prompt = [int(t) for t in np.asarray(prompt).reshape(-1)]
     S = len(prompt)
     cache = backend.make_cache(width)
-    if prefill_chunk is None:
-        logits, staging = backend.prefill(prompt)
-    else:
-        staging, done = None, 0
-        while done < S:
-            chunk = prompt[done: done + prefill_chunk]
-            logits, staging = backend.prefill_chunk(staging, chunk, done)
-            done += len(chunk)
+    staging, done = None, 0
+    size = prefill_chunk or S  # one chunk = whole prompt when chunking off
+    while done < S:
+        chunk = prompt[done: done + size]
+        logits, staging = backend.prefill_chunk(staging, chunk, done)
+        done += len(chunk)
     cache = backend.write_slot(cache, staging, 0)
     for j in range(1, width):
-        cache = backend.fork_slot(cache, 0, j)  # shared-prefix alias
+        cache = backend.fork_slot(cache, src=0, dst=j)  # shared-prefix alias
 
     logp = np.asarray(log_softmax(jnp.asarray(logits)[None]))[0]  # (V,)
     first = np.argsort(-logp)[:width]
@@ -91,13 +89,13 @@ def beam_search_slots(backend, prompt: Sequence[int], width: int,
         tokens = np.concatenate([tokens[beam_idx], tok_idx[:, None]], axis=1)
         # the reshuffle: slot i continues beam beam_idx[i] — table-only
         # (zero KV copies) on paged backends
-        cache = backend.reorder_slots(cache, list(range(width)),
-                                      [int(b) for b in beam_idx])
+        cache = backend.reorder_slots(cache, slots=list(range(width)),
+                                      src_of=[int(b) for b in beam_idx])
         times.append(backend.clock())
 
     stats = backend.block_stats(cache, list(range(width)))
     for j in range(width):
-        cache = backend.release_slot(cache, j)
+        cache = backend.release_slot(cache, slot=j)
     return BeamResult(tokens=tokens, scores=scores, times=times,
                       block_stats=stats)
 

@@ -74,6 +74,7 @@ from repro.serving.policy import (
     QueueView,
     SchedulerView,
     SlotView,
+    StepPlan,
     get_policy,
 )
 from repro.serving.sampler import greedy, log_softmax
@@ -143,6 +144,9 @@ class ContinuousEngine:
         self.slots = [_Slot() for _ in range(n_slots)]
         self.steps = 0
         self.finished: List[Request] = []
+        # roofline constants for phase-aware policies (None = wall-clock
+        # backend without a cost model)
+        self._cost = backend.cost_view()
         # arrival-rate EWMA state (engine-owned so policies stay pure)
         self._rate = 0.0
         self._gap_ewma: Optional[float] = None
@@ -150,9 +154,9 @@ class ContinuousEngine:
         self._rate_counted: set = set()
         # live pool: the policy sizes it; cache rows are allocated lazily
         # (grown via backend.resize_cache) so autoscaling starts small
-        boot = self._view(slot_limit=1)
-        self.slot_limit = max(1, min(n_slots,
-                                     int(self.policy.target_slots(boot))))
+        boot = self.policy.plan(self._view(slot_limit=1)).target_slots
+        self.slot_limit = max(1, min(
+            n_slots, int(n_slots if boot is None else boot)))
         self._alloc = self.slot_limit   # cache rows currently allocated
         self.cache = backend.make_cache(self._alloc)
 
@@ -194,6 +198,11 @@ class ContinuousEngine:
                 return "resume"
             return sl.phase
 
+        def _remaining(sl: _Slot) -> int:
+            if sl.req is None or sl.phase != "prefill":
+                return 0
+            return max(0, len(self._prefill_seq(sl)) - sl.prefilled)
+
         s = tuple(
             SlotView(index=i, rid=sl.req.rid if sl.req else None,
                      phase=_phase(sl),
@@ -205,13 +214,15 @@ class ContinuousEngine:
                      emitted=len(sl.req.output) if sl.req else 0,
                      steps_left=sl.steps_left, started=sl.started,
                      arrival=sl.req.arrival if sl.req else None,
+                     remaining_prefill=_remaining(sl),
                      gang=sl.group.req.rid if sl.group else None,
                      gang_size=len(sl.group.slots) if sl.group else 1)
             for i, sl in enumerate(self.slots))
         return SchedulerView(
             clock=now, queue=q, slots=s,
             slot_limit=self.slot_limit if slot_limit is None else slot_limit,
-            max_slots=self.n_slots, arrival_rate=self._rate)
+            max_slots=self.n_slots, arrival_rate=self._rate,
+            cost=self._cost, default_chunk=self.prefill_chunk)
 
     def _update_rate(self, now: float) -> None:
         """EWMA the inter-arrival gap over requests whose arrival the
@@ -232,8 +243,14 @@ class ContinuousEngine:
             self._last_arrival = t
 
     # -- policy mechanisms ----------------------------------------------
+    # Each mechanism asks the policy for a fresh plan of the current view
+    # (policies are documented pure functions of the view, so re-planning
+    # after the previous mechanism's mutations is the correct reading of
+    # "decide against what the engine looks like now" — e.g. admission
+    # must see the queue entries that preemption just created).
     def _autoscale(self) -> None:
-        target = int(self.policy.target_slots(self._view()))
+        target = self.policy.plan(self._view()).target_slots
+        target = self.slot_limit if target is None else int(target)
         target = max(1, min(self.n_slots, target))
         # gang-admission floor: a beam group can never fit in fewer live
         # slots than its width, so an arrived gang raises the pool to its
@@ -246,7 +263,8 @@ class ContinuousEngine:
         if gangs:
             target = max(target, min(max(gangs), self.n_slots))
         if target > self._alloc:
-            self.cache = self.backend.resize_cache(self.cache, target)
+            self.cache = self.backend.resize_cache(self.cache,
+                                                   n_slots=target)
             self._alloc = target
         self.slot_limit = target
 
@@ -269,7 +287,7 @@ class ContinuousEngine:
                                "scores": np.asarray(grp.scores).copy(),
                                "done": list(grp.done)}
             for si in grp.slots:
-                self.cache = self.backend.release_slot(self.cache, si)
+                self.cache = self.backend.release_slot(self.cache, slot=si)
                 self.slots[si] = _Slot()
             self.queue.append(req)
             return
@@ -278,11 +296,11 @@ class ContinuousEngine:
         req = slot.req
         req.preemptions += 1
         self.queue.append(req)
-        self.cache = self.backend.release_slot(self.cache, i)
+        self.cache = self.backend.release_slot(self.cache, slot=i)
         self.slots[i] = _Slot()
 
     def _preempt(self) -> None:
-        for i in self.policy.preempt(self._view()):
+        for i in self.policy.plan(self._view()).preempt:
             if 0 <= int(i) < len(self.slots):
                 self._evict(int(i))
 
@@ -318,7 +336,7 @@ class ContinuousEngine:
                 if self.slots[i].req is None]
         if not free:
             return
-        order = self.policy.admission_order(self._view())
+        order = self.policy.plan(self._view()).admit
         chosen: set = set()  # id()s — Request is an unhashable dataclass
         for qi in order:
             if not free:
@@ -353,6 +371,14 @@ class ContinuousEngine:
         produced by the next decode step)."""
         return list(req.prompt) + list(req.output[:-1])
 
+    def _prefill_seq(self, slot: _Slot) -> List[int]:
+        """The full token sequence slot ``slot`` is prefilling: the shared
+        prompt for gang leads, prompt + emitted for preempted resumes."""
+        req = slot.req
+        if slot.group is None and req.output:
+            return self._resume_tokens(req)
+        return list(req.prompt)
+
     def _activate_group(self, lead: int, logits: np.ndarray) -> None:
         """The lead slot's shared prompt prefill finished: pick the top-W
         distinct continuations of beam 0, fork the lead slot's KV into
@@ -375,7 +401,8 @@ class ContinuousEngine:
         S = len(req.prompt)
         for j, si in enumerate(grp.slots):
             if si != lead:
-                self.cache = self.backend.fork_slot(self.cache, lead, si)
+                self.cache = self.backend.fork_slot(self.cache,
+                                                    src=lead, dst=si)
             s = self.slots[si]
             s.phase = "decode"
             s.pos = S
@@ -402,7 +429,8 @@ class ContinuousEngine:
         S = len(req.prompt)
         for j, si in enumerate(grp.slots):
             if si != lead:
-                self.cache = self.backend.fork_slot(self.cache, lead, si)
+                self.cache = self.backend.fork_slot(self.cache,
+                                                    src=lead, dst=si)
             s = self.slots[si]
             if grp.done[j]:
                 s.phase = "done"  # finished before eviction: stays frozen
@@ -417,39 +445,40 @@ class ContinuousEngine:
                 s.phase = "replay"
                 s.replay = list(beam)
 
-    def _prefill_step(self) -> None:
-        """Advance every prefilling slot by one chunk (or the whole prompt
-        when chunking is off).  First touch probes the backend's prefix
-        cache: the longest resident verified prefix is spliced into the
-        slot's block table and only the unmatched tail is prefilled."""
+    def _prefill_step(self, plan: Optional[StepPlan] = None) -> None:
+        """Advance prefilling slots by one chunk (the whole remaining
+        prompt when chunking is off).  ``plan.prefill`` restricts which
+        slots advance this tick and ``plan.chunk_sizes`` overrides the
+        engine chunk per slot (phase-aware policies); ``None`` keeps the
+        legacy behavior — every prefilling slot, the engine chunk.  First
+        touch probes the backend's prefix cache: the longest resident
+        verified prefix is spliced into the slot's block table and only
+        the unmatched tail is prefilled."""
+        allowed = (None if plan is None or plan.prefill is None
+                   else set(plan.prefill))
+        sizes = {} if plan is None else plan.chunk_sizes
         for i, slot in enumerate(self.slots):
             if slot.phase != "prefill":
                 continue
+            if allowed is not None and i not in allowed:
+                continue
             req = slot.req
-            if slot.group is not None:
-                # gangs (fresh or resuming) prefill the shared prompt
-                # once, into the lead slot only
-                resume = False
-                seq = list(req.prompt)
-            else:
-                resume = len(req.output) > 0  # preempted: re-prefill KV
-                seq = self._resume_tokens(req) if resume else list(req.prompt)
+            # gangs (fresh or resuming) prefill the shared prompt once,
+            # into the lead slot only
+            resume = slot.group is None and len(req.output) > 0
+            seq = self._prefill_seq(slot)
             if slot.staging is None and slot.prefilled == 0:
                 # admission: runs exactly once per prefill (a chunk is
                 # processed right after, making staging/prefilled truthy)
                 slot.prefilled = self.backend.match_prefix(self.cache, i, seq)
-            if self.prefill_chunk is None and slot.prefilled == 0:
-                logits, slot.staging = self.backend.prefill(seq)
-                slot.prefilled = len(seq)
-            else:
-                size = self.prefill_chunk or len(seq)
-                chunk = seq[slot.prefilled: slot.prefilled + size]
-                logits, slot.staging = self.backend.prefill_chunk(
-                    slot.staging, chunk, slot.prefilled,
-                    cache=self.cache, slot=i)
-                slot.prefilled += len(chunk)
-                if slot.prefilled < len(seq):
-                    continue  # more chunks; in-flight decodes run meanwhile
+            size = sizes.get(i) or self.prefill_chunk or len(seq)
+            chunk = seq[slot.prefilled: slot.prefilled + size]
+            logits, slot.staging = self.backend.prefill_chunk(
+                slot.staging, chunk, slot.prefilled,
+                cache=self.cache, slot=i)
+            slot.prefilled += len(chunk)
+            if slot.prefilled < len(seq):
+                continue  # more chunks; in-flight decodes run meanwhile
             # prefill complete: join the multi-slot batch
             self.cache = self.backend.write_slot(self.cache, slot.staging, i)
             slot.staging = None
@@ -488,7 +517,7 @@ class ContinuousEngine:
         if slot.req is not None:
             slot.req.latency = self.clock() - slot.req.arrival
             self.finished.append(slot.req)
-        self.cache = self.backend.release_slot(self.cache, i)
+        self.cache = self.backend.release_slot(self.cache, slot=i)
         self.slots[i] = _Slot()
 
     def _retire_group(self, grp: _BeamGroup) -> None:
@@ -515,7 +544,7 @@ class ContinuousEngine:
         req.latency = self.clock() - req.arrival
         self.finished.append(req)
         for si in grp.slots:
-            self.cache = self.backend.release_slot(self.cache, si)
+            self.cache = self.backend.release_slot(self.cache, slot=si)
             self.slots[si] = _Slot()
 
     def _beam_step(self, grp: _BeamGroup, logits: np.ndarray,
@@ -536,7 +565,8 @@ class ContinuousEngine:
                       for b, t in zip(beam_idx, tok_idx)]
         src = [rows[int(b)] for b in beam_idx]
         if src != rows:
-            self.cache = self.backend.reorder_slots(self.cache, rows, src)
+            self.cache = self.backend.reorder_slots(self.cache,
+                                                    slots=rows, src_of=src)
         budget_out = False
         for k, j in enumerate(act):
             scores[j] = new_scores[k]
@@ -555,8 +585,13 @@ class ContinuousEngine:
         if budget_out or all(grp.done):
             self._retire_group(grp)
 
-    def _decode_step(self) -> None:
+    def _decode_step(self, plan: Optional[StepPlan] = None) -> None:
+        allowed = (None if plan is None or plan.decode is None
+                   else set(plan.decode))
+
         def live(i: int) -> bool:
+            if allowed is not None and i not in allowed:
+                return False
             s = self.slots[i]
             if s.phase == "replay":
                 # gang resume: re-feeding a beam's own emitted tokens to
@@ -616,21 +651,34 @@ class ContinuousEngine:
 
     def step(self) -> None:
         """One scheduler tick: observe arrivals → resize the live pool →
-        preempt → admit → advance prefills one chunk → one decode step
-        for every decoding slot → one placement-rebalance tick (dynamic
+        preempt → admit → run the policy's :class:`StepPlan`.  The legacy
+        (non-overlap) plan advances prefills one chunk then runs one
+        decode step for every decoding slot; an overlapping plan runs the
+        decode gang as the foreground stream first, then hides the
+        prefill chunk's charge under it (``backend.open_overlap_window``
+        — simulated clocks split the prefill stream into overlapped vs
+        exposed time).  Ends with one placement-rebalance tick (dynamic
         backends may migrate experts between tiers here, charging the
         transfer to their clock — see core/rebalance.py)."""
         self._update_rate(self.clock())
         self._autoscale()
         self._preempt()
         self._admit()
-        self._prefill_step()
-        self._decode_step()
+        plan = self.policy.plan(self._view())
+        if plan.overlap:
+            t0 = self.clock()
+            self._decode_step(plan)
+            self.backend.open_overlap_window(max(0.0, self.clock() - t0))
+            self._prefill_step(plan)
+            self.backend.close_overlap_window()
+        else:
+            self._prefill_step(plan)
+            self._decode_step(plan)
         self.backend.maybe_rebalance()
 
     def _admissible(self) -> bool:
         now = self.clock()
-        for qi in self.policy.admission_order(self._view()):
+        for qi in self.policy.plan(self._view()).admit:
             if 0 <= int(qi) < len(self.queue):
                 r = self.queue[int(qi)]
                 if r.arrival is None or r.arrival <= now:

@@ -179,7 +179,16 @@ class ServingEngine:
         """Form the next batch: the policy orders the queue (everything is
         treated as arrived — static batches wait for stragglers below).
         A beam request (``beam_width > 1``) always forms a group of its
-        own: its gang of beams *is* the batch."""
+        own: its gang of beams *is* the batch.
+
+        Deadline-aware split: a batch only starts once its *last* member
+        arrives, so a not-yet-arrived straggler would stall every
+        already-arrived higher-priority member batched with it.  Such a
+        straggler is deferred to a later group whenever a more urgent,
+        earlier-arriving member is already in the forming batch — an
+        interactive request landing mid-group splits the batch instead
+        of waiting out the stragglers.  Pure-FIFO traffic (equal
+        priorities) never splits, preserving the legacy grouping."""
         horizon = max([self._clock()]
                       + [r.arrival for r in self.queue
                          if r.arrival is not None])
@@ -188,7 +197,7 @@ class ServingEngine:
             queue=tuple(QueueView.from_request(i, r)
                         for i, r in enumerate(self.queue)),
             slots=(), slot_limit=0, max_slots=0, arrival_rate=0.0)
-        order = [i for i in self.policy.admission_order(view)
+        order = [i for i in self.policy.plan(view).admit
                  if 0 <= int(i) < len(self.queue)]
         if not order:                      # inert policy: fall back to FIFO
             order = list(range(len(self.queue)))
@@ -202,6 +211,23 @@ class ServingEngine:
             picked.append(i)
             if len(picked) >= self.max_batch:
                 break
+        if len(picked) > 1:
+            now = self._clock()
+
+            def _arr(j: int) -> float:
+                a = self.queue[j].arrival
+                return now if a is None else a
+
+            kept: List[int] = []
+            for i in picked:
+                if _arr(i) > now and any(
+                        self.queue[h].effective_priority
+                        > self.queue[i].effective_priority
+                        and _arr(h) < _arr(i)
+                        for h in kept):
+                    continue  # straggler behind an urgent member: defer
+                kept.append(i)
+            picked = kept
         group = [self.queue[i] for i in picked]
         taken = set(picked)
         self.queue = [r for i, r in enumerate(self.queue) if i not in taken]

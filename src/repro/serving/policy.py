@@ -11,7 +11,12 @@ The contract
 Each engine step the engine builds a read-only :class:`SchedulerView` —
 the queue (with per-request ``priority``/``slo_class``/``deadline``), the
 slot states, the backend clock, and an EWMA arrival-rate estimate — and
-asks the policy three questions:
+asks the policy for a :class:`StepPlan` via :meth:`SchedulerPolicy.plan`:
+admission order, preemption victims, the live-pool target, which slots
+prefill / decode this tick, per-slot prefill chunk sizes, and whether the
+two phases run as overlapping streams.  The default ``plan`` is built
+from the three legacy hooks, so a policy written against the old
+protocol schedules identically:
 
 * :meth:`SchedulerPolicy.admission_order` — which queued requests may be
   admitted this step, in order.  Returning an index whose request has not
@@ -50,12 +55,18 @@ Shipped policies
 * :class:`AutoscalePolicy` — sizes the live slot pool against the
   arrival-rate EWMA (Little's law with a configurable service-time
   estimate).
+* :class:`RooflinePolicy` — prefill/decode disaggregation: prefill
+  chunks sized from the backend's :class:`CostView` to saturate the
+  compute roofline (prefill is compute-bound), the decode gang batched
+  as the memory-bound stream, and the two run as overlapping streams
+  (``StepPlan.overlap``) with the ledger splitting overlapped vs
+  exposed time per stream.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
 
 # SLO class → default priority when a request does not set one explicitly.
 # Higher is more urgent.  Unknown classes fall back to "standard".
@@ -68,6 +79,66 @@ SLO_CLASSES = {
 
 def slo_priority(slo_class: str) -> int:
     return SLO_CLASSES.get(slo_class, SLO_CLASSES["standard"])
+
+
+@dataclass(frozen=True)
+class CostView:
+    """Per-phase roofline constants a backend exposes to policies
+    (``ServingBackend.cost_view``): enough to place prefill and decode on
+    the measured compute/bandwidth roofline without the policy knowing
+    model internals.  ``None`` from a backend means "no cost model" (the
+    wall-clock ``ModelBackend``) — policies must degrade gracefully."""
+    gpu_const: float          # one expert's HBM weight-read floor (s)
+    gpu_per_token: float      # compute seconds per expert input token
+    n_experts: int
+    top_k: int
+    fast_flops: float
+    fast_mem_bw: float
+
+    def saturation_tokens(self) -> float:
+        """Per-expert input size where compute time reaches the
+        weight-read floor — the compute/bandwidth roofline knee."""
+        return self.gpu_const / max(self.gpu_per_token, 1e-30)
+
+    def prefill_chunk_tokens(self) -> int:
+        """Prefill chunk that saturates the compute roofline: a chunk of
+        ``n`` tokens puts ~``n * top_k / n_experts`` tokens on each
+        active expert, so the knee is reached at
+        ``saturation_tokens * n_experts / top_k``.  Below this, prefill
+        is paying decode's memory-bound weight-read price."""
+        return max(1, math.ceil(self.saturation_tokens()
+                                * self.n_experts / max(self.top_k, 1)))
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """One scheduler tick's decisions, returned by
+    :meth:`SchedulerPolicy.plan`.
+
+    ``admit``/``preempt``/``target_slots`` carry the legacy three-hook
+    semantics.  ``prefill``/``decode`` name the slot indices that run
+    each phase this tick (``None`` = every eligible slot — the legacy
+    interleaved behavior).  ``chunk_sizes`` overrides the engine's
+    prefill chunk per slot.  ``overlap=True`` runs decode as the
+    foreground stream and hides prefill charges under it (backends with
+    a simulated clock charge the two streams separately — see
+    ``Ledger.prefill_stream_time``/``decode_stream_time``)."""
+    admit: Tuple[int, ...] = ()
+    preempt: Tuple[int, ...] = ()
+    target_slots: Optional[int] = None   # None = keep the current pool
+    prefill: Optional[Tuple[int, ...]] = None
+    decode: Optional[Tuple[int, ...]] = None
+    chunk_sizes: Mapping[int, int] = field(default_factory=dict)
+    overlap: bool = False
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """Structured policy spec for :func:`get_policy`: a registry name
+    plus constructor options — what launchers/benchmarks build
+    programmatically instead of ad-hoc strings."""
+    name: str
+    options: Mapping[str, Any] = field(default_factory=dict)
 
 
 @dataclass(frozen=True)
@@ -85,6 +156,10 @@ class QueueView:
     width: int = 1               # decode slots the request needs at once
     #                              (beam groups: gang admission — all
     #                              ``width`` slots or none)
+    phase: str = "prefill"       # prefill | resume (preempted, re-prefilling
+    #                              prompt + emitted on re-admission)
+    remaining_prefill: Optional[int] = None  # tokens still to prefill once
+    #                              admitted (prompt + emitted); None = unknown
 
     def arrived(self, clock: float) -> bool:
         return self.arrival is None or self.arrival <= clock
@@ -93,12 +168,15 @@ class QueueView:
     def from_request(cls, index: int, req) -> "QueueView":
         """Snapshot a ``serving.engine.Request`` at queue position
         ``index`` (single point where Request fields map to the view)."""
+        emitted = len(req.output)
         return cls(index=index, rid=req.rid, arrival=req.arrival,
                    priority=req.effective_priority, slo_class=req.slo_class,
                    deadline=req.deadline, prompt_len=len(req.prompt),
                    max_new_tokens=req.max_new_tokens,
-                   emitted=len(req.output),
-                   width=getattr(req, "beam_width", 1))
+                   emitted=emitted,
+                   width=getattr(req, "beam_width", 1),
+                   phase="resume" if emitted else "prefill",
+                   remaining_prefill=len(req.prompt) + emitted)
 
 
 @dataclass(frozen=True)
@@ -116,6 +194,8 @@ class SlotView:
     steps_left: int
     started: Optional[float]     # backend-clock time of admission
     arrival: Optional[float] = None  # request's original arrival (aging)
+    remaining_prefill: int = 0   # prompt tokens not yet prefilled (0 once
+    #                              the slot reaches the decode phase)
     gang: Optional[str] = None   # beam-group id (rid) this slot belongs to
     gang_size: int = 1           # slots the gang occupies (evicting any
     #                              member frees all of them — the engine
@@ -135,6 +215,10 @@ class SchedulerView:
     slot_limit: int              # current live-pool size (admittable slots)
     max_slots: int               # hard cap on the pool
     arrival_rate: float          # EWMA req/s of the backend clock (0 = unknown)
+    cost: Optional[CostView] = None  # backend roofline constants (None =
+    #                              wall-clock backend without a cost model)
+    default_chunk: Optional[int] = None  # engine prefill chunk (None =
+    #                              whole remaining prompt per tick)
 
     def arrived_queue(self) -> Tuple[QueueView, ...]:
         return tuple(q for q in self.queue if q.arrived(self.clock))
@@ -144,13 +228,27 @@ class SchedulerView:
 
 
 class SchedulerPolicy:
-    """Base policy: subclasses override any of the three decisions.
+    """Base policy: subclasses override :meth:`plan`, or any of the three
+    legacy decisions the default ``plan`` is assembled from.
 
-    The defaults are inert — no admissions, no preemption, keep the pool
-    at its maximum — so concrete policies state exactly what they change.
+    The legacy defaults are inert — no admissions, no preemption, keep
+    the pool at its maximum — so concrete policies state exactly what
+    they change.  A policy that only implements the three old hooks
+    schedules bit-identically to the pre-``plan`` protocol: the default
+    ``plan`` leaves ``prefill``/``decode`` as ``None`` (every eligible
+    slot runs both phases interleaved) and ``overlap`` off.
     """
 
     name = "base"
+
+    def plan(self, view: SchedulerView) -> StepPlan:
+        """One tick's full decision set.  The default delegates to the
+        legacy three hooks; phase-aware policies override this to name
+        separate prefill/decode batches, per-slot chunk sizes, and
+        stream overlap."""
+        return StepPlan(admit=tuple(self.admission_order(view)),
+                        preempt=tuple(self.preempt(view)),
+                        target_slots=self.target_slots(view))
 
     def admission_order(self, view: SchedulerView) -> Sequence[int]:
         """Queue indices to admit, in order.  Non-arrived indices are
@@ -331,21 +429,99 @@ class AutoscalePolicy(FIFOPolicy):
         return max(self.min_slots, min(view.max_slots, need))
 
 
+class RooflinePolicy(SchedulerPolicy):
+    """Disaggregated prefill/decode scheduling against the backend's
+    roofline (:class:`CostView`).
+
+    Prefill is compute-bound: a chunk smaller than the roofline knee
+    makes the GPU pay the per-expert weight-read floor (``gpu_const``)
+    without amortizing it over enough tokens, so each tick ONE
+    prefilling slot advances by ``CostView.prefill_chunk_tokens()``
+    (priority-desc, oldest-first among equals) instead of every slot
+    advancing by a tiny interleaved chunk.  Decode is memory-bound: all
+    decode slots run together as one gang (batching decodes is nearly
+    free — the weight read dominates), and ``StepPlan.overlap`` runs the
+    prefill chunk concurrently with the decode gang, the ledger charging
+    each stream's overlapped vs exposed share.
+
+    Admission is priority-ordered (ties FIFO) so interactive arrivals
+    reach a slot — and therefore the front of the prefill stream —
+    ahead of queued batch work, protecting their TTFT.  Without a
+    backend cost model (``view.cost is None``) the chunk falls back to
+    the engine default and only the phase split/overlap remain."""
+
+    name = "roofline"
+
+    def __init__(self, max_chunk: int = 512):
+        assert max_chunk >= 1, max_chunk
+        self.max_chunk = max_chunk
+
+    def admission_order(self, view: SchedulerView) -> Sequence[int]:
+        arrived = sorted(
+            view.arrived_queue(),
+            key=lambda q: (-q.priority,
+                           q.arrival if q.arrival is not None else -math.inf,
+                           q.index))
+        return [q.index for q in arrived]
+
+    def _chunk(self, view: SchedulerView) -> Optional[int]:
+        if view.cost is None:
+            return view.default_chunk
+        return min(self.max_chunk, view.cost.prefill_chunk_tokens())
+
+    def plan(self, view: SchedulerView) -> StepPlan:
+        prefilling = [s for s in view.slots if s.phase == "prefill"]
+        prefilling.sort(key=lambda s: (
+            -s.priority,
+            s.started if s.started is not None else math.inf,
+            s.index))
+        chunk = self._chunk(view)
+        # one saturating prefill chunk per tick; everyone else decodes
+        chosen = tuple(s.index for s in prefilling[:1])
+        sizes: Dict[int, int] = (
+            {i: chunk for i in chosen} if chunk is not None else {})
+        return StepPlan(admit=tuple(self.admission_order(view)),
+                        preempt=(),
+                        target_slots=view.max_slots,
+                        prefill=chosen,
+                        decode=None,
+                        chunk_sizes=sizes,
+                        overlap=True)
+
+
 POLICIES = {
     "fifo": FIFOPolicy,
     "priority": PriorityPolicy,
     "autoscale": AutoscalePolicy,
+    "roofline": RooflinePolicy,
 }
 
 
 def get_policy(spec=None) -> SchedulerPolicy:
-    """Coerce None / name / class / instance → a policy instance."""
+    """Coerce None / name / class / instance / :class:`PolicySpec` /
+    ``{"name": ..., **options}`` dict → a policy instance."""
     if spec is None:
         return FIFOPolicy()
     if isinstance(spec, SchedulerPolicy):
         return spec
     if isinstance(spec, type) and issubclass(spec, SchedulerPolicy):
         return spec()
+    if isinstance(spec, dict):
+        opts = dict(spec)
+        try:
+            name = opts.pop("name")
+        except KeyError:
+            raise ValueError(
+                f"policy dict needs a 'name' key: {spec!r}") from None
+        spec = PolicySpec(name=name, options=opts)
+    if isinstance(spec, PolicySpec):
+        try:
+            cls = POLICIES[spec.name]
+        except KeyError:
+            raise ValueError(
+                f"unknown scheduler policy {spec.name!r}; "
+                f"choose from {sorted(POLICIES)}") from None
+        return cls(**dict(spec.options))
     if isinstance(spec, str):
         try:
             return POLICIES[spec]()

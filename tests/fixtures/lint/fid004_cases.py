@@ -2,7 +2,8 @@
 
 Charge call sites must name ``n_tokens=`` and ``kv_len=``; every
 ``*_time`` field on the Ledger (other than the exempt clock) needs its
-``*_overlapped`` / ``*_exposed`` split.
+``*_overlapped`` / ``*_exposed`` split, and no orphan split field may
+exist without its ``*_time`` base.
 """
 from dataclasses import dataclass
 
@@ -15,6 +16,11 @@ class Ledger:
     migration_exposed: float = 0.0
     spill_time: float = 0.0  # EXPECT: FID004
     flops: float = 0.0
+    decode_stream_time: float = 0.0  # ok: full triple
+    decode_stream_overlapped: float = 0.0
+    decode_stream_exposed: float = 0.0
+    phantom_overlapped: float = 0.0  # EXPECT: FID004
+    phantom_exposed: float = 0.0  # EXPECT: FID004
 
 
 class Engine:

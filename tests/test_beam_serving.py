@@ -144,7 +144,7 @@ def test_simulated_beam_group_charges_unique_blocks():
     b2 = _sim_backend(max_seq=128)
     cache = b2.make_cache(W)
     for s in range(W):
-        _, stg = b2.prefill([1] * 64)
+        _, stg = b2.prefill_chunk(None, [1] * 64, 0)
         cache = b2.write_slot(cache, stg, s)
     for t in range(n_new - 1):
         pos = np.full(W, 64 + t)

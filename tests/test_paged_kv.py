@@ -223,11 +223,11 @@ def test_beam_reshuffle_zero_kv_copies():
                             None, 0, 32)
     cache = be.write_slot(cache, sc, 0)
     for j in (1, 2):
-        cache = be.fork_slot(cache, 0, j)
+        cache = be.fork_slot(cache, src=0, dst=j)
     ids = [(id(c.k), id(c.v), id(c.pos)) for c in cache]
     free = [c.meta.n_free for c in cache]
     tables = [c.meta.table.copy() for c in cache]
-    cache = be.reorder_slots(cache, [0, 1, 2], [2, 0, 0])
+    cache = be.reorder_slots(cache, slots=[0, 1, 2], src_of=[2, 0, 0])
     for c, i3, f, t in zip(cache, ids, free, tables):
         assert (id(c.k), id(c.v), id(c.pos)) == i3, "reorder moved KV data"
         assert c.meta.n_free == f, "reorder allocated/freed blocks"
@@ -235,7 +235,7 @@ def test_beam_reshuffle_zero_kv_copies():
         c.meta.check()
     # fork is zero-copy too
     ids = [(id(c.k), id(c.v), id(c.pos)) for c in cache]
-    cache = be.fork_slot(cache, 0, 1)
+    cache = be.fork_slot(cache, src=0, dst=1)
     assert [(id(c.k), id(c.v), id(c.pos)) for c in cache] == ids
 
 

@@ -420,7 +420,7 @@ def test_resize_cache_preserves_inflight_kv(backend_kind):
     cache = backend.make_cache(2)
     state = []  # (pos, last_token, output)
     for slot, p in enumerate(prompts):
-        logits, staging = backend.prefill(p)
+        logits, staging = backend.prefill_chunk(None, p, 0)
         cache = backend.write_slot(cache, staging, slot)
         tok = int(np.argmax(logits))
         state.append([len(p), tok, [tok]])
@@ -441,7 +441,7 @@ def test_resize_cache_preserves_inflight_kv(backend_kind):
         return cache
 
     cache = decode_all(cache, 2, 2)      # two steps at 2 slots
-    cache = backend.resize_cache(cache, 4)   # grow mid-decode
+    cache = backend.resize_cache(cache, n_slots=4)   # grow mid-decode
     cache = decode_all(cache, 4, 2)      # two more steps at 4 slots
     for i, ref in enumerate(refs):
         assert state[i][2] == ref, (i, state[i][2], ref)
@@ -557,7 +557,7 @@ def test_resize_cache_shrink_preserves_leading_slots(backend_kind):
     cache = backend.make_cache(4)        # over-allocated pool
     state = []
     for slot, p in enumerate(prompts):
-        logits, staging = backend.prefill(p)
+        logits, staging = backend.prefill_chunk(None, p, 0)
         cache = backend.write_slot(cache, staging, slot)
         tok = int(np.argmax(logits))
         state.append([len(p), tok, [tok]])
@@ -578,7 +578,7 @@ def test_resize_cache_shrink_preserves_leading_slots(backend_kind):
         return cache
 
     cache = decode_all(cache, 4, 2)          # two steps at 4 slots
-    cache = backend.resize_cache(cache, 2)   # shrink to the live pool
+    cache = backend.resize_cache(cache, n_slots=2)   # shrink to the live pool
     cache = decode_all(cache, 2, 2)          # two more steps at 2 slots
     for i, ref in enumerate(refs):
         assert state[i][2] == ref, (i, state[i][2], ref)
@@ -588,9 +588,9 @@ def test_simulated_backend_resize_cache_roundtrip():
     fe, eng = _sim_engine()
     backend = eng.backend
     cache = backend.make_cache(2)
-    grown = backend.resize_cache(cache, 6)
+    grown = backend.resize_cache(cache, n_slots=6)
     assert grown["n_slots"] == 6 and grown["meta"].n_slots == 6
-    shrunk = backend.resize_cache(grown, 1)
+    shrunk = backend.resize_cache(grown, n_slots=1)
     assert shrunk["n_slots"] == 1 and shrunk["meta"].n_slots == 1
     shrunk["meta"].check()
 

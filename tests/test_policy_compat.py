@@ -1,0 +1,466 @@
+"""Back-compat: the PR-8 ``plan()`` scheduler redesign must not change
+a single scheduling decision for policies written against the old
+three-hook protocol.
+
+``ThirdPartySJF`` below implements ONLY ``admission_order`` /
+``preempt`` / ``target_slots`` — the pre-redesign ``SchedulerPolicy``
+surface, exactly as an out-of-tree policy would.  ``_GOLDEN`` is the
+trace that policy produced on the PRE-redesign engines (captured before
+the ``plan()`` seam landed): per-request outputs, TTFT, latency, every
+per-token timestamp, plus the orchestrator ledger.  The test replays
+the identical workload through the redesigned engine and requires
+**exact float equality** — not tolerance — because the default
+``plan()`` is documented to reproduce the legacy interleaved schedule
+bit-for-bit.
+
+Also pinned here: the deprecated ``ServingBackend.prefill`` surface
+warns but still returns exactly what ``prefill_chunk(None, prompt, 0)``
+returns.
+"""
+import json
+import math
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import FiddlerEngine, HardwareSpec
+from repro.serving.backend import SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+from repro.serving.policy import SchedulerPolicy, StepPlan
+
+
+class ThirdPartySJF(SchedulerPolicy):
+    """Old-protocol-only policy: shortest-job-first admission, preempt
+    the longest-running decode when a shorter arrived job waits without
+    a free slot, pool pinned at 3 slots.  Deliberately does NOT override
+    ``plan`` — the default must assemble it from these three hooks."""
+
+    name = "third-party-sjf"
+
+    def admission_order(self, view):
+        arrived = sorted(
+            view.arrived_queue(),
+            key=lambda q: (q.prompt_len + q.max_new_tokens, q.index))
+        return [q.index for q in arrived]
+
+    def preempt(self, view):
+        waiters = view.arrived_queue()
+        if not waiters or view.free_live_slots() > 0:
+            return ()
+        shortest = min(q.prompt_len + q.max_new_tokens for q in waiters)
+        decoding = [s for s in view.slots[: view.slot_limit]
+                    if s.phase == "decode"]
+        victims = [s for s in decoding
+                   if (s.prompt_len + s.emitted + s.steps_left)
+                   > shortest + 8]
+        victims.sort(key=lambda s: s.started if s.started is not None
+                     else math.inf)
+        return [victims[0].index] if victims else ()
+
+    def target_slots(self, view):
+        return 3
+
+
+# captured from the pre-plan() engines; see module docstring
+_GOLDEN = json.loads(r'''
+{
+ "_ledger": {
+  "fast_hits": 2186,
+  "sim_time": 27.26394488254534,
+  "slow_runs": 6823,
+  "streams": 0,
+  "tokens_out": 95
+ },
+ "a": {
+  "latency": 22.804560304587856,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   6.41148020461655,
+   7.442276296143586,
+   8.554124919236333,
+   8.95958019161494,
+   9.992814335094488,
+   11.136929216416688,
+   11.546723655187092,
+   12.005578821574206,
+   12.452235755627251,
+   13.470295409497423,
+   14.609533918724095,
+   15.033429240267829,
+   15.464371577674422,
+   15.896937015620795,
+   16.32381425082079,
+   16.743917169009794,
+   17.21334568738167,
+   17.6480856944287,
+   18.087700488809375,
+   18.49343470156366,
+   19.521537157714885,
+   20.55966815328998,
+   21.616238417839735,
+   22.804560304587856
+  ],
+  "ttft": 6.41148020461655
+ },
+ "b": {
+  "latency": 8.909580191614939,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   4.3328232182757365,
+   4.628213533176839,
+   5.693697355838235,
+   7.442276296143586,
+   8.554124919236333,
+   8.95958019161494
+  ],
+  "ttft": 4.282823218275737
+ },
+ "c": {
+  "latency": 27.163944882545337,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   14.180221923000133,
+   14.609533918724095,
+   15.033429240267829,
+   15.464371577674422,
+   15.896937015620795,
+   16.32381425082079,
+   16.743917169009794,
+   17.21334568738167,
+   17.6480856944287,
+   18.087700488809375,
+   18.49343470156366,
+   19.521537157714885,
+   20.55966815328998,
+   21.616238417839735,
+   22.804560304587856,
+   23.13710102733776,
+   23.45934402266905,
+   23.732527265621734,
+   24.047773531431524,
+   24.3995610627593,
+   24.703374955973082,
+   25.04350750714672,
+   25.35873656420516,
+   25.662008570572347,
+   26.00024824806862,
+   26.177211171446785,
+   26.33577304886092,
+   26.516531106260476,
+   26.707581784849797,
+   26.888340232344593,
+   27.083186044955305,
+   27.26394488254534
+  ],
+  "ttft": 14.080221923000133
+ },
+ "d": {
+  "latency": 5.343697355838235,
+  "output": [
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   2.179073347929083,
+   3.093851417275883,
+   4.628213533176839,
+   5.693697355838235
+  ],
+  "ttft": 1.829073347929083
+ },
+ "e": {
+  "latency": 18.093434701563663,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   10.706804000327605,
+   11.136929216416688,
+   11.546723655187092,
+   12.005578821574206,
+   12.452235755627251,
+   13.470295409497423,
+   14.609533918724095,
+   15.033429240267829,
+   15.464371577674422,
+   15.896937015620795,
+   16.32381425082079,
+   16.743917169009794,
+   17.21334568738167,
+   17.6480856944287,
+   18.087700488809375,
+   18.49343470156366
+  ],
+  "ttft": 10.306804000327604
+ },
+ "f": {
+  "latency": 12.002235755627252,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   8.124272597046739,
+   8.554124919236333,
+   8.95958019161494,
+   9.992814335094488,
+   11.136929216416688,
+   11.546723655187092,
+   12.005578821574206,
+   12.452235755627251
+  ],
+  "ttft": 7.6742725970467385
+ },
+ "g": {
+  "latency": 25.50024824806862,
+  "output": [
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5,
+   5
+  ],
+  "preemptions": 0,
+  "token_times": [
+   22.347588649592403,
+   22.804560304587856,
+   23.13710102733776,
+   23.45934402266905,
+   23.732527265621734,
+   24.047773531431524,
+   24.3995610627593,
+   24.703374955973082,
+   25.04350750714672,
+   25.35873656420516,
+   25.662008570572347,
+   26.00024824806862
+  ],
+  "ttft": 21.847588649592403
+ }
+}
+''')
+
+
+def _run_workload():
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler",
+                        hw=HardwareSpec.paper_env1(), seed=0)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=256),
+                               n_slots=4, max_seq=256, prefill_chunk=8,
+                               policy=ThirdPartySJF())
+    specs = [
+        # (rid, prompt_len, max_new, arrival, slo) — a mix that exercises
+        # admission reordering, head-of-line arrivals, preemption and the
+        # pinned 3-slot pool inside a 4-slot engine
+        ("a", 40, 24, 0.0, "batch"),
+        ("b", 12, 6, 0.05, "interactive"),
+        ("c", 64, 32, 0.1, "batch"),
+        ("d", 8, 4, 0.35, "interactive"),
+        ("e", 48, 16, 0.4, "standard"),
+        ("f", 16, 8, 0.45, "interactive"),
+        ("g", 96, 12, 0.5, "batch"),
+    ]
+    for rid, plen, mnew, arr, slo in specs:
+        prompt = [1] + [3 + (i * 7 + len(rid)) % 200
+                        for i in range(plen - 1)]
+        serving.submit(Request(rid=rid, prompt=prompt, max_new_tokens=mnew,
+                               arrival=arr, slo_class=slo))
+    done = serving.run(max_steps=50_000, on_exhausted="raise")
+    return eng, done
+
+
+def test_three_hook_policy_schedules_bit_identically():
+    eng, done = _run_workload()
+    assert len(done) == len(_GOLDEN) - 1  # minus the _ledger entry
+    for r in done:
+        g = _GOLDEN[r.rid]
+        # exact equality everywhere: same admissions in the same order on
+        # the same simulated clock produce the same floats or the seam
+        # changed behavior
+        assert list(r.output) == g["output"], r.rid
+        assert r.ttft == g["ttft"], (r.rid, r.ttft, g["ttft"])
+        assert r.latency == g["latency"], r.rid
+        assert list(r.token_times) == g["token_times"], r.rid
+        assert r.preemptions == g["preemptions"], r.rid
+    led = eng.ledger
+    g = _GOLDEN["_ledger"]
+    assert led.sim_time == g["sim_time"]
+    assert led.tokens_out == g["tokens_out"]
+    assert led.fast_hits == g["fast_hits"]
+    assert led.slow_runs == g["slow_runs"]
+    assert led.streams == g["streams"]
+    # a legacy policy must leave the per-stream disaggregation fields
+    # untouched — they exist only for overlap-planning policies
+    assert led.prefill_stream_time == 0.0
+    assert led.decode_stream_time == 0.0
+    assert led.prefill_stream_overlapped == 0.0
+    assert led.decode_stream_exposed == 0.0
+
+
+def test_default_plan_is_assembled_from_legacy_hooks():
+    """The default ``plan()`` forwards the three hooks verbatim and keeps
+    the legacy interleaved phase semantics (no phase restriction, no
+    per-slot chunks, no overlap)."""
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler",
+                        hw=HardwareSpec.paper_env1(), seed=0)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=64),
+                               n_slots=4, max_seq=64,
+                               policy=ThirdPartySJF())
+    for i, plen in enumerate((8, 4)):
+        serving.submit(Request(rid=f"r{i}", prompt=[1] * plen,
+                               max_new_tokens=2))
+    view = serving._view()
+    plan = serving.policy.plan(view)
+    assert isinstance(plan, StepPlan)
+    assert list(plan.admit) == list(
+        serving.policy.admission_order(view))  # SJF: r1 before r0
+    assert plan.admit[0] == 1
+    assert plan.preempt == ()
+    assert plan.target_slots == 3
+    assert plan.prefill is None and plan.decode is None
+    assert not plan.chunk_sizes
+    assert plan.overlap is False
+
+
+def test_legacy_prefill_warns_and_matches_prefill_chunk():
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler",
+                        hw=HardwareSpec.paper_env1(), seed=0)
+    backend = SimulatedBackend(eng, max_seq=64)
+    prompt = [1, 7, 19, 4, 2, 11]
+
+    with pytest.warns(DeprecationWarning, match="prefill_chunk"):
+        legacy_logits, legacy_staging = backend.prefill(prompt)
+
+    eng2 = FiddlerEngine(cfg, policy="fiddler",
+                         hw=HardwareSpec.paper_env1(), seed=0)
+    b2 = SimulatedBackend(eng2, max_seq=64)
+    new_logits, new_staging = b2.prefill_chunk(None, prompt, 0)
+
+    np.testing.assert_array_equal(np.asarray(legacy_logits),
+                                  np.asarray(new_logits))
+    # identical ledger charge: the wrapper IS one whole-prompt chunk
+    assert eng.ledger.sim_time == eng2.ledger.sim_time
+    assert legacy_staging["staged"] == new_staging["staged"]
+
+
+def test_new_surface_emits_no_deprecation_warning():
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler",
+                        hw=HardwareSpec.paper_env1(), seed=0)
+    backend = SimulatedBackend(eng, max_seq=64)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        _, staging = backend.prefill_chunk(None, [1, 5, 9], 0)
+        cache = backend.make_cache(2)
+        cache = backend.write_slot(cache, staging, 0)
+        cache = backend.resize_cache(cache, n_slots=3)
+        cache = backend.fork_slot(cache, src=0, dst=1)
+        cache = backend.reorder_slots(cache, slots=[0, 1], src_of=[1, 0])
+        cache = backend.release_slot(cache, slot=1)
+        cache = backend.release_slot(cache, slot=0)
