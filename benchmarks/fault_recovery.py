@@ -1,0 +1,189 @@
+"""Chaos benchmark: serving under injected faults (docs/resilience.md).
+
+Paper-scale Mixtral-8x7B pure simulation (the ``SimulatedBackend``
+ledger path — no weights, real scheduler/planner) under a seeded
+:class:`~repro.core.faults.FaultInjector` arming *every* fault kind —
+host worker stalls/crashes, link stalls, lost/corrupt prefetch
+transfers, latency spikes, and KV block-pool pressure spikes — at a
+swept per-tick rate, against the fault-free control.
+
+Standing gates (asserted by the CI ``chaos-smoke`` lane on the summary
+block this file writes):
+
+* **completion** — every request finishes under every swept fault rate;
+  recovery (watchdog retry, degraded SLOW→stream routing, KV-pressure
+  evict→requeue) must never drop work.
+* **zero leaks** — the paged-KV pool ends every run with zero blocks in
+  use and zero still-reserved by the injector (``BlockMeta.check`` also
+  runs, so refcount conservation is verified, not just the totals).
+* **bounded degradation** — faulty throughput at the ≥5% rate stays
+  within ``DEGRADE_FACTOR``× of fault-free (the defenses degrade
+  gracefully instead of collapsing).
+
+Results land in ``BENCH_fault_recovery.json``; rows are also emitted in
+the ``name,us_per_call,derived`` CSV format.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import ENVS, emit
+from benchmarks.serve_load import poisson_requests
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.core.faults import FAULT_KINDS, FaultInjector
+from repro.serving.backend import SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+
+MAX_SEQ = 256
+PREFILL_CHUNK = 16
+N_SLOTS = 4
+REBALANCE_INTERVAL = 32
+DEGRADE_FACTOR = 2.0       # max fault-free/faulty throughput ratio (gate)
+GATE_RATE = 0.05           # the acceptance-criterion fault rate
+RESULTS_JSON = Path(__file__).resolve().parents[1] / \
+    "BENCH_fault_recovery.json"
+
+
+def chaos_once(model: str, env: str, *, fault_rate: float, seed: int,
+               rate_hz: float, n_requests: int, prompt_len: int = 64,
+               max_new: int = 24) -> Dict[str, float]:
+    """One seeded serving run at ``fault_rate`` per tick per fault kind
+    (0.0 = the fault-free control, injector detached)."""
+    cfg = get_config(model)
+    faults = (FaultInjector(seed=seed,
+                            rates={k: fault_rate for k in FAULT_KINDS})
+              if fault_rate > 0 else None)
+    eng = FiddlerEngine(cfg, policy="fiddler", hw=ENVS[env], seed=seed,
+                        faults=faults,
+                        rebalance_interval=REBALANCE_INTERVAL)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=MAX_SEQ),
+                               n_slots=N_SLOTS, max_seq=MAX_SEQ,
+                               prefill_chunk=PREFILL_CHUNK)
+    for r in poisson_requests(rate_hz, n_requests, prompt_len=prompt_len,
+                              max_new=max_new, seed=seed):
+        serving.submit(r)
+    done = serving.run(max_steps=200_000, on_exhausted="raise")
+    led = eng.ledger
+    meta = serving.cache["meta"]
+    meta.check()   # refcount conservation, not just the totals below
+    n_tokens = sum(len(r.output) for r in done)
+    ttfts = [r.ttft for r in done]
+    out = {
+        "fault_rate": fault_rate,
+        "completed": float(len(done)),
+        "submitted": float(n_requests),
+        "completion_frac": len(done) / n_requests,
+        "throughput_tok_per_s": (n_tokens / led.sim_time
+                                 if led.sim_time else 0.0),
+        "mean_ttft": float(np.mean(ttfts)),
+        "p95_ttft": float(np.percentile(ttfts, 95)),
+        "leaked_blocks": float(meta.blocks_in_use()),
+        "reserved_blocks": float(meta.n_reserved),
+        "preemptions": float(sum(r.preemptions for r in done)),
+        "degraded_steps": float(led.degraded_steps),
+        "retries": float(led.retries),
+        "fault_time_s": led.fault_time,
+        "fault_exposed_s": led.fault_exposed,
+        "breaker_trips": float(eng.link_breaker.trips),
+        "health_trips": float(eng.host_health.trips),
+    }
+    if faults is not None:
+        for kind, n in faults.stats()["injected"].items():
+            out[f"injected_{kind}"] = float(n)
+        out["injected_total"] = float(
+            sum(faults.stats()["injected"].values()))
+    return out
+
+
+def run(fast: bool = True, smoke: bool = False) -> Dict[str, Dict]:
+    model, env = "mixtral-8x7b", "env1"
+    if smoke:
+        fault_rates = [0.0, GATE_RATE]
+        seeds = [0]
+        n_requests, rate_hz = 8, 16.0
+    elif fast:
+        fault_rates = [0.0, GATE_RATE, 0.15]
+        seeds = [0, 1]
+        n_requests, rate_hz = 16, 16.0
+    else:
+        fault_rates = [0.0, GATE_RATE, 0.15]
+        seeds = [0, 1, 2]
+        n_requests, rate_hz = 32, 16.0
+
+    results: Dict[str, Dict] = {}
+    by_rate: Dict[float, List[Dict]] = {}
+    for rate in fault_rates:
+        for seed in seeds:
+            r = chaos_once(model, env, fault_rate=rate, seed=seed,
+                           rate_hz=rate_hz, n_requests=n_requests)
+            key = f"fault_recovery/{env}/fiddler/rate{rate:g}_seed{seed}"
+            emit(key, r["mean_ttft"] * 1e6,
+                 f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+                 f"done={r['completed']:.0f}/{r['submitted']:.0f} "
+                 f"leaked={r['leaked_blocks']:.0f} "
+                 f"retries={r['retries']:.0f} "
+                 f"degraded={r['degraded_steps']:.0f} "
+                 f"injected={r.get('injected_total', 0.0):.0f}")
+            results[key] = r
+            by_rate.setdefault(rate, []).append(r)
+
+    # -- standing gates ------------------------------------------------------
+    baseline = float(np.mean([r["throughput_tok_per_s"]
+                              for r in by_rate[0.0]]))
+    gate_tput = min(r["throughput_tok_per_s"] for r in by_rate[GATE_RATE])
+    degrade = baseline / gate_tput if gate_tput else float("inf")
+    summary = {
+        "all_complete": all(r["completion_frac"] == 1.0
+                            for rs in by_rate.values() for r in rs),
+        "zero_leaks": all(r["leaked_blocks"] == 0.0
+                          and r["reserved_blocks"] == 0.0
+                          for rs in by_rate.values() for r in rs),
+        "faults_injected": all(r.get("injected_total", 0.0) > 0
+                               for rate, rs in by_rate.items()
+                               if rate > 0 for r in rs),
+        "baseline_tok_per_s": baseline,
+        "gate_rate": GATE_RATE,
+        "gate_tok_per_s": gate_tput,
+        "degrade_factor": degrade,
+        "degrade_factor_limit": DEGRADE_FACTOR,
+        "degraded_within_limit": degrade <= DEGRADE_FACTOR,
+    }
+    record = {
+        "_meta": {
+            "mode": "smoke" if smoke else ("fast" if fast else "full"),
+            "model": model, "env": env,
+            "fault_rates": fault_rates, "seeds": seeds,
+            "n_requests": n_requests, "rate_hz": rate_hz,
+            "fault_kinds": list(FAULT_KINDS),
+        },
+        "summary": summary,
+        "results": results,
+    }
+    RESULTS_JSON.write_text(json.dumps(record, indent=2, sort_keys=True))
+    print(f"summary: all_complete={summary['all_complete']} "
+          f"zero_leaks={summary['zero_leaks']} "
+          f"degrade_factor={degrade:.3f} "
+          f"(limit {DEGRADE_FACTOR})")
+    assert summary["all_complete"], "requests dropped under faults"
+    assert summary["zero_leaks"], "paged-KV blocks leaked"
+    assert summary["degraded_within_limit"], (
+        f"degraded throughput {gate_tput:.2f} tok/s is more than "
+        f"{DEGRADE_FACTOR}x below fault-free {baseline:.2f} tok/s")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="full sweep (default is the fast dev subset)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI chaos-smoke lane: minimal sweep")
+    a = ap.parse_args()
+    run(fast=not a.full, smoke=a.smoke)

@@ -15,7 +15,7 @@ from dataclasses import dataclass, field, replace
 from pathlib import Path
 from typing import Dict, List, Optional
 
-RULE_IDS = ("FID001", "FID002", "FID003", "FID004", "FID005")
+RULE_IDS = ("FID001", "FID002", "FID003", "FID004", "FID005", "FID006")
 
 
 @dataclass(frozen=True)
@@ -62,6 +62,10 @@ class FiddlintConfig:
         "HostExpert.__call__",
         "QuantizedHostExpert.__call__",
     ])
+
+    # FID006 — future-awaiting method names that need a watchdog timeout
+    future_await_methods: List[str] = field(
+        default_factory=lambda: ["result"])
 
     def with_overrides(self, **kw) -> "FiddlintConfig":
         return replace(self, **{k: v for k, v in kw.items() if v is not None})

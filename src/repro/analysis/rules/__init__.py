@@ -11,6 +11,7 @@ from repro.analysis.rules.fid002_jit_cache import check_jit_cache
 from repro.analysis.rules.fid003_refcount import check_refcount
 from repro.analysis.rules.fid004_ledger import check_ledger
 from repro.analysis.rules.fid005_threads import check_threads
+from repro.analysis.rules.fid006_watchdog import check_watchdog
 
 Rule = Callable[[Project, FiddlintConfig], List[Finding]]
 
@@ -20,6 +21,7 @@ RULES = {
     "FID003": check_refcount,
     "FID004": check_ledger,
     "FID005": check_threads,
+    "FID006": check_watchdog,
 }
 
 

@@ -1,0 +1,111 @@
+"""FID006 unwatched-future / blanket-handler.
+
+The chaos layer (core/faults.py, docs/resilience.md) only works if the
+hot path *observes* failures instead of hanging on them or eating them.
+Two patterns:
+
+* **future awaited without a timeout** — ``fut.result()`` with neither a
+  positional timeout nor ``timeout=``, inside a function that submits
+  work to an executor (contains a ``.submit(`` call) or is reachable
+  from the configured hot roots.  A stalled host-pool worker then hangs
+  the scheduler thread forever; the watchdog idiom is
+  ``fut.result(timeout=...)`` with bounded retry/backoff and an inline
+  fallback (``FiddlerEngine._await_host``).  The awaited method names
+  are configurable (``future_await_methods``, default ``["result"]``).
+* **blanket exception handler on the hot path** — ``except Exception:``
+  / ``except BaseException:`` / bare ``except:`` without a re-raise, in
+  a hot-reachable function.  Injected faults are recoverable *by type*
+  (``FaultError``, ``KVPoolExhausted``); a blanket handler silently
+  converts real bugs into "recovered" faults.  Handlers that re-raise
+  (including ``raise X from e``) pass — they narrate, not swallow.
+
+The ``.submit(``-containing criterion exists because the call graph
+resolves attribute calls by method name and misses calls through local
+variables — the dispatch closure handed to ``_run_moe_layer`` — so an
+awaiting function can be hot in fact yet unreachable in the graph.
+Submitting work is itself the evidence that futures are awaited here.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.project import FunctionInfo, Project
+
+
+def _calls_submit(fn: FunctionInfo) -> bool:
+    for node in ast.walk(fn.node):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "submit"):
+            return True
+    return False
+
+
+def _broad_exc_name(node: ast.ExceptHandler) -> str:
+    """"Exception"/"BaseException"/"" (bare) when the handler is blanket,
+    else None.  Tuples count if any member is blanket."""
+    if node.type is None:
+        return ""
+    names = (node.type.elts if isinstance(node.type, ast.Tuple)
+             else [node.type])
+    for t in names:
+        if isinstance(t, ast.Name) and t.id in ("Exception", "BaseException"):
+            return t.id
+    return None
+
+
+def _check_awaits(fn: FunctionInfo, methods: Set[str], path: str,
+                  via: str, out: List[Finding]) -> None:
+    for node in ast.walk(fn.node):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in methods):
+            continue
+        if node.args or any(kw.arg == "timeout" for kw in node.keywords):
+            continue  # positional or keyword timeout: watchdogged
+        out.append(Finding(
+            "FID006", path, node.lineno, node.col_offset,
+            f"future awaited without a timeout: `.{node.func.attr}()` "
+            f"hangs the scheduler forever on a stalled host worker{via}; "
+            f"pass `timeout=` and retry/fall back on expiry (the watchdog "
+            f"idiom — docs/resilience.md)", fn.qualname))
+
+
+def _check_handlers(fn: FunctionInfo, path: str, via: str,
+                    out: List[Finding]) -> None:
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        name = _broad_exc_name(node)
+        if name is None:
+            continue
+        if any(isinstance(n, ast.Raise) for n in ast.walk(node)):
+            continue  # re-raises: narrates the failure, doesn't swallow it
+        label = f"`except {name}`" if name else "bare `except:`"
+        out.append(Finding(
+            "FID006", path, node.lineno, node.col_offset,
+            f"blanket {label} on the serving hot path{via} swallows real "
+            f"bugs alongside recoverable faults; catch the specific types "
+            f"(FaultError, KVPoolExhausted) or re-raise", fn.qualname))
+
+
+def check_watchdog(project: Project,
+                   config: FiddlintConfig) -> List[Finding]:
+    out: List[Finding] = []
+    methods = set(config.future_await_methods)
+    hot = project.reachable_from(project.resolve_roots(config.hot_roots))
+    for qual, fn in project.functions.items():
+        root = hot.get(qual)
+        submitter = _calls_submit(fn)
+        if root is None and not submitter:
+            continue
+        via = ("" if root is None or qual == root
+               else f" (reachable from {root})")
+        path = relpath(fn.file.path)
+        _check_awaits(fn, methods, path, via, out)
+        if root is not None:
+            _check_handlers(fn, path, via, out)
+    return out

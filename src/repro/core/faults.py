@@ -1,0 +1,303 @@
+"""Deterministic fault injection + resilience primitives (docs/resilience.md).
+
+The serving hot path straddles two failure-prone domains: a host
+``ThreadPoolExecutor`` running CPU expert kernels concurrently with the
+fast-tier launches, and an async prefetch queue moving expert weights
+over the link mid-decode.  :class:`FaultInjector` is the single seam all
+three ``ServingBackend``\\s consult to exercise those failure modes on
+purpose — seeded and scripted, so every chaos run is reproducible bit
+for bit and a recovery regression is a deterministic test failure, not
+a flake.
+
+Fault kinds (``FAULT_KINDS``):
+
+* ``host_stall``      — a slow-tier worker hangs (real path: the
+  submitted kernel sleeps past the watchdog; simulation: the stall
+  penalty is charged directly).
+* ``host_crash``      — a slow-tier worker dies mid-kernel
+  (:class:`HostWorkerFault`); the watchdog's retry path resubmits the
+  clean kernel.
+* ``link_stall``      — the slow↔fast link blocks for a beat while
+  transfers are in flight.
+* ``prefetch_lost`` / ``prefetch_corrupt`` — a completed async
+  promotion transfer fails verification and must be requeued at full
+  length (feeds the link :class:`CircuitBreaker`).
+* ``latency_spike``   — an unattributed per-step latency spike
+  (background load, SMI, page fault storm).
+* ``kv_pressure``     — a transient KV block-pool pressure spike:
+  blocks are reserved out of the pool for a few ticks
+  (``BlockMeta.reserve_blocks``), forcing admission/decode into the
+  exhaustion→recovery path.
+
+Faults arm at :meth:`FaultInjector.begin_step` — once per scheduler
+tick — from two deterministic sources: an explicit scripted
+``schedule`` of :class:`FaultEvent`\\s, and per-kind Bernoulli ``rates``
+drawn from a seeded generator in fixed kind order.  Injection sites
+then *consume* armed events via :meth:`FaultInjector.fires`; at most
+one event per kind arms per tick, and unconsumed events lapse at the
+next tick (an armed host fault on a tick that ran no slow experts never
+happened).  The rng state only advances inside ``begin_step``, so the
+fault sequence depends on the seed and the tick count alone — never on
+how many sites polled.
+
+The defenses these faults exercise live in the orchestrator and the
+serving engines: watchdog timeouts with bounded retry/backoff on
+host-expert futures, prefetch transfer verification with
+requeue-on-failure behind the circuit breaker, degraded SLOW→stream
+routing while the host tier is unhealthy (:class:`HostHealth`), and
+slot-level evict→requeue→re-prefill recovery in
+``ContinuousEngine``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAULT_KINDS = (
+    "host_stall",
+    "host_crash",
+    "link_stall",
+    "prefetch_lost",
+    "prefetch_corrupt",
+    "latency_spike",
+    "kv_pressure",
+)
+
+
+class FaultError(RuntimeError):
+    """Base class of injected faults that escape their injection site.
+
+    Recovery code catches *this* (plus ``KVPoolExhausted``) — never bare
+    ``Exception`` (fiddlint FID006): an injected fault is recoverable by
+    construction, an arbitrary exception is a bug that must surface."""
+
+
+class HostWorkerFault(FaultError):
+    """An injected slow-tier worker crash (raised inside the submitted
+    kernel; surfaces through the future on the scheduler thread)."""
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One armed fault: ``kind`` at scheduler tick ``step``;
+    ``magnitude`` scales the kind's base penalty/size knob."""
+    kind: str
+    step: int
+    magnitude: float = 1.0
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+
+
+class FaultInjector:
+    """Seeded, scripted fault source — see the module docstring.
+
+    ``rates`` maps fault kind → per-tick Bernoulli probability;
+    ``schedule`` is an explicit sequence of :class:`FaultEvent`\\s fired
+    at exact ticks (both may be used together — a scripted event
+    pre-empts that tick's random draw for its kind).  The remaining
+    knobs size the injected damage and the matching defense:
+
+    * ``host_stall_s`` / ``latency_spike_s`` / ``link_stall_s`` —
+      simulated-seconds penalty per fired fault (scaled by the event's
+      ``magnitude``).
+    * ``kv_pressure_blocks`` / ``kv_pressure_hold`` — blocks reserved
+      out of each consulted pool per ``kv_pressure`` event, and how
+      many ticks they stay reserved.
+    * ``real_stall_s`` — *wall-clock* sleep an injected stall adds to a
+      real host worker (long enough that ``watchdog_s`` — the watchdog
+      timeout the orchestrator uses while an injector is attached —
+      genuinely expires first).
+    """
+
+    def __init__(self, seed: int = 0,
+                 rates: Optional[Dict[str, float]] = None,
+                 schedule: Sequence[FaultEvent] = (), *,
+                 host_stall_s: float = 5e-3,
+                 latency_spike_s: float = 5e-3,
+                 link_stall_s: float = 5e-3,
+                 kv_pressure_blocks: int = 4,
+                 kv_pressure_hold: int = 4,
+                 real_stall_s: float = 0.05,
+                 watchdog_s: float = 0.005):
+        self.rates = dict(rates or {})
+        unknown = set(self.rates) - set(FAULT_KINDS)
+        assert not unknown, f"unknown fault kinds: {sorted(unknown)}"
+        self.schedule = sorted(schedule, key=lambda ev: ev.step)
+        self.rng = np.random.default_rng(seed)
+        self.host_stall_s = float(host_stall_s)
+        self.latency_spike_s = float(latency_spike_s)
+        self.link_stall_s = float(link_stall_s)
+        self.kv_pressure_blocks = int(kv_pressure_blocks)
+        self.kv_pressure_hold = int(kv_pressure_hold)
+        self.real_stall_s = float(real_stall_s)
+        self.watchdog_s = float(watchdog_s)
+        self.step = -1
+        self._armed: Dict[str, FaultEvent] = {}
+        # consumed (actually delivered) events per kind; armed counts
+        # every arming including ones that lapsed unconsumed
+        self.injected: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self.armed_total: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        # live kv-pressure holds: (pool meta, reserved block ids,
+        # release-at step)
+        self._held: List[Tuple[object, List[int], int]] = []
+
+    # -- tick protocol -----------------------------------------------------
+    def begin_step(self, step: Optional[int] = None) -> None:
+        """Advance to scheduler tick ``step`` (monotone; ``None``
+        auto-increments), release expired KV-pressure holds, and arm
+        this tick's faults.  Unconsumed events from the previous tick
+        lapse.  Repeated calls with the same step are idempotent."""
+        step = self.step + 1 if step is None else int(step)
+        if step <= self.step:
+            return
+        self.step = step
+        self._release_due(step)
+        self._armed = {}
+        for ev in self.schedule:
+            if ev.step == step:
+                self._armed[ev.kind] = ev
+        for kind in FAULT_KINDS:  # fixed order: rng stream is stable
+            rate = self.rates.get(kind, 0.0)
+            if rate <= 0.0:
+                continue
+            hit = self.rng.random() < rate
+            if hit and kind not in self._armed:
+                self._armed[kind] = FaultEvent(kind, step)
+        for kind in self._armed:
+            self.armed_total[kind] += 1
+
+    def fires(self, kind: str) -> Optional[FaultEvent]:
+        """Consume this tick's armed ``kind`` event, if any.  Each event
+        is delivered at most once."""
+        ev = self._armed.pop(kind, None)
+        if ev is not None:
+            self.injected[kind] += 1
+        return ev
+
+    # -- kv pressure -------------------------------------------------------
+    def kv_pressure_tick(self, metas: Sequence[object]) -> int:
+        """Consume an armed ``kv_pressure`` event by reserving blocks
+        out of every pool in ``metas`` (``BlockMeta.reserve_blocks`` —
+        best-effort, never raises) for ``kv_pressure_hold`` ticks.
+        Returns the number of blocks reserved."""
+        ev = self.fires("kv_pressure")
+        if ev is None:
+            return 0
+        want = max(1, int(round(ev.magnitude * self.kv_pressure_blocks)))
+        taken = 0
+        for meta in metas:
+            blocks = meta.reserve_blocks(want)
+            if blocks:
+                self._held.append(
+                    (meta, blocks, self.step + self.kv_pressure_hold))
+                taken += len(blocks)
+        return taken
+
+    def _release_due(self, step: int) -> None:
+        keep = []
+        for meta, blocks, until in self._held:
+            if step >= until:
+                meta.free_reserved(blocks)
+            else:
+                keep.append((meta, blocks, until))
+        self._held = keep
+
+    def release_all(self) -> None:
+        """Return every still-held reserved block to its pool — the
+        finalize/settlement hook, so a run always ends with zero blocks
+        pinned by the injector."""
+        for meta, blocks, _ in self._held:
+            meta.free_reserved(blocks)
+        self._held = []
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {"injected": dict(self.injected),
+                "armed": dict(self.armed_total)}
+
+
+@dataclass
+class HostHealth:
+    """Sliding-window health tracker for the slow tier.
+
+    ``unhealthy_after`` worker failures within ``window_steps``
+    scheduler ticks flip the tier unhealthy for ``cooldown_steps``
+    ticks; while unhealthy the planner re-routes SLOW experts through
+    the FAST_STREAM path (degraded mode — see
+    ``FiddlerEngine._reroute_slow``).  ``tick()`` is called once per
+    scheduler tick."""
+    unhealthy_after: int = 2
+    window_steps: int = 16
+    cooldown_steps: int = 8
+    failures: int = 0
+    trips: int = 0
+    _since_failure: int = field(default=0, repr=False)
+    _unhealthy_left: int = field(default=0, repr=False)
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        self._since_failure = 0
+        if self.failures >= self.unhealthy_after:
+            self.trips += 1
+            self._unhealthy_left = self.cooldown_steps
+            self.failures = 0
+
+    def tick(self) -> None:
+        if self._unhealthy_left > 0:
+            self._unhealthy_left -= 1
+        self._since_failure += 1
+        if self._since_failure >= self.window_steps:
+            self.failures = 0
+
+    @property
+    def unhealthy(self) -> bool:
+        return self._unhealthy_left > 0
+
+
+class CircuitBreaker:
+    """Closed → open → half-open breaker over the migration link.
+
+    ``fail_threshold`` consecutive transfer-verification failures open
+    the breaker for ``cooldown_s`` simulated seconds — while open,
+    ``maybe_rebalance`` plans no new migrations (in-flight prefetches
+    still drain).  After the cooldown the breaker is *half-open*: plans
+    flow again, but the first failure re-opens it immediately; a
+    verified success closes it fully."""
+
+    def __init__(self, fail_threshold: int = 2, cooldown_s: float = 0.05):
+        assert fail_threshold >= 1, fail_threshold
+        self.fail_threshold = int(fail_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.failures = 0          # consecutive verification failures
+        self.trips = 0
+        self.open_until = float("-inf")
+        self._half_open = False
+
+    def allow(self, now: float) -> bool:
+        if now < self.open_until:
+            return False
+        if self.open_until > float("-inf"):
+            self._half_open = True
+        return True
+
+    def record_failure(self, now: float) -> None:
+        self.failures += 1
+        threshold = 1 if self._half_open else self.fail_threshold
+        if self.failures >= threshold:
+            self.trips += 1
+            self.failures = 0
+            self._half_open = False
+            self.open_until = now + self.cooldown_s
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self._half_open = False
+        self.open_until = float("-inf")
+
+    @property
+    def state(self) -> str:
+        if self._half_open:
+            return "half-open"
+        return "open" if self.open_until > float("-inf") else "closed"

@@ -53,7 +53,9 @@ import atexit
 import dataclasses
 import os
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -68,6 +70,12 @@ from repro.core.cost_model import (
     expert_weight_bytes,
     kv_read_entries,
     link_idle_time,
+)
+from repro.core.faults import (
+    CircuitBreaker,
+    FaultInjector,
+    HostHealth,
+    HostWorkerFault,
 )
 from repro.core.placement import (
     Placement,
@@ -143,6 +151,21 @@ def _host_pool() -> ThreadPoolExecutor:
     return pool
 
 
+def _faulty_worker(fn, ev, real_stall_s: float):
+    """Wrap one submitted slow-tier kernel with an injected fault (see
+    core/faults.py): a crash raises :class:`HostWorkerFault` through the
+    future (the watchdog's retry path resubmits the clean kernel); a
+    stall sleeps long enough *wall-clock* that the watchdog timeout
+    expires first, then computes the true result."""
+    def run(x):
+        if ev.kind == "host_crash":
+            raise HostWorkerFault(
+                f"injected host worker crash (step {ev.step})")
+        time.sleep(real_stall_s * ev.magnitude)
+        return fn(x)
+    return run
+
+
 def _bucket(n: int) -> int:
     """Pad a dispatch dimension (group size / capacity) to the next power
     of two, so each layer geometry compiles at most log2(max) distinct
@@ -199,6 +222,21 @@ class Ledger:
     prefix_lookups: int = 0
     prefix_hits: int = 0
     prefix_tokens: int = 0
+    # fault injection / graceful degradation (core/faults.py): time the
+    # clock spent on fault handling — watchdog backoff on host-expert
+    # futures, injected link/latency stalls — under the same
+    # overlapped/exposed convention.  Fault time never hides under
+    # planned overlap (a stall IS the critical path), so the overlapped
+    # share stays 0 and fault_time == fault_exposed by construction.
+    fault_time: float = 0.0
+    fault_overlapped: float = 0.0
+    fault_exposed: float = 0.0
+    # scheduler ticks that ran in a degraded mode (any fault observed,
+    # recovery taken, or SLOW routing re-routed while the host tier was
+    # unhealthy), and total retry actions (watchdog re-awaits/resubmits,
+    # requeued prefetch transfers, slot-level recoveries)
+    degraded_steps: int = 0
+    retries: int = 0
     # ring buffer of the most recent per-layer charges (0 disables, None
     # keeps everything — old unbounded behavior)
     layer_log_limit: Optional[int] = LAYER_LOG_LIMIT
@@ -372,6 +410,9 @@ class FiddlerEngine:
         kv_layout: str = "paged",
         kv_block_size: int = PAGE_SIZE,
         prefix_cache: bool = True,
+        faults: Optional[FaultInjector] = None,
+        watchdog_s: float = 60.0,
+        host_retries: int = 3,
     ):
         """``params=None`` → pure-simulation mode (routing drawn from the
         profile; only the ledger advances).  ``timing_cfg`` lets the real
@@ -410,7 +451,19 @@ class FiddlerEngine:
         COW) and prefill only the unmatched tail; retired requests'
         blocks stay resident for reuse and are reclaimed LRU under pool
         pressure.  ``prefix_cache=False`` restores the exact pre-cache
-        admission numerics/accounting."""
+        admission numerics/accounting.
+
+        ``faults`` attaches a :class:`FaultInjector` (docs/resilience.md):
+        scripted/seeded host-worker stalls and crashes, link stalls,
+        lost/corrupt prefetch transfers, latency spikes and KV-pressure
+        spikes, exercised against the engine's defenses — host-future
+        watchdogs with bounded retry (``host_retries``) and inline
+        fallback, degraded SLOW→stream routing while the host tier is
+        unhealthy, prefetch verification behind a link circuit breaker.
+        ``watchdog_s`` bounds every host-future await in *wall-clock*
+        seconds even with no injector attached (tightened to the
+        injector's ``watchdog_s`` when one is); with ``faults=None`` no
+        fault ever fires and all numerics/accounting are unchanged."""
         assert policy in POLICIES, policy
         assert dispatch_mode in DISPATCH_MODES, dispatch_mode
         assert kv_layout in KV_LAYOUTS, kv_layout
@@ -430,6 +483,20 @@ class FiddlerEngine:
         self.async_prefetch = (overlap if async_prefetch is None
                                else async_prefetch)
         self._prefetch = PrefetchQueue()
+
+        # --- fault injection + defenses (core/faults.py) ---------------------
+        self.faults = faults
+        self.host_retries = int(host_retries)
+        self.watchdog_s = float(watchdog_s)
+        if faults is not None:
+            self.watchdog_s = min(self.watchdog_s, faults.watchdog_s)
+        self.host_health = HostHealth()
+        # cooldown sized in link terms: a few would-be transfers long
+        self.link_breaker = CircuitBreaker(
+            cooldown_s=8 * self.lat.transfer_lat())
+        # set whenever a tick observed a fault / ran degraded; folded
+        # into ledger.degraded_steps at the next begin_fault_step
+        self._fault_step_dirty = False
         E, L = cfg.moe.n_experts, cfg.n_layers
         self.profile = profile or synthetic_profile(L, E, seed=seed)
 
@@ -622,6 +689,8 @@ class FiddlerEngine:
         on_fast = self._effective_on_fast(li)
         if self.policy == "fiddler":
             plan = plan_layer(counts, on_fast, self.lat)
+            if self.host_health.unhealthy:
+                plan = self._reroute_slow(counts, plan)
             self._post_plan(li, counts, plan)
             return plan
         dec = np.full(counts.shape[0], int(Decision.SKIP), np.int64)
@@ -640,6 +709,27 @@ class FiddlerEngine:
         plan = LayerPlan(dec, est_fast, est_slow, est_stream)
         self._post_plan(li, counts, plan)
         return plan
+
+    def _reroute_slow(self, counts: np.ndarray, plan: LayerPlan) -> LayerPlan:
+        """Degraded routing while the host tier is unhealthy (watchdog
+        trips — :class:`HostHealth`): SLOW experts re-route through the
+        FAST_STREAM path, the eager offload decision, so no new work is
+        handed to the sick tier until the cooldown expires.  Estimates
+        are rebuilt the way the offload policy builds them, so the
+        ledger charges the streamed execution, not the tier we just
+        stopped trusting.  Numerics are unchanged — a streamed expert is
+        computed from the same slow-pool weights on the fast tier."""
+        dec = plan.decisions
+        if not (dec == int(Decision.SLOW)).any():
+            return plan
+        dec = dec.copy()
+        dec[dec == int(Decision.SLOW)] = int(Decision.FAST_STREAM)
+        fast = dec == int(Decision.FAST_RESIDENT)
+        stream = dec == int(Decision.FAST_STREAM)
+        est_fast = float(self.lat.gpu_lat(counts)[fast | stream].sum())
+        est_stream = float(stream.sum()) * self.lat.transfer_lat()
+        self._fault_step_dirty = True
+        return LayerPlan(dec, est_fast, 0.0, est_stream)
 
     def _charge(self, li: int, plan: LayerPlan, n_tokens: int,
                 kv_len: int, kv_unique: Optional[float] = None) -> None:
@@ -664,8 +754,15 @@ class FiddlerEngine:
             # compute keeps the clock busy (minus FAST_STREAM link use)
             idle = link_idle_time(t_nonexp, t_moe, plan.est_stream_time)
             self.ledger.migration_overlapped += self._prefetch.drain(idle)
-        self.ledger.fast_hits += int((plan.decisions == int(Decision.FAST_RESIDENT)).sum())
         n_stream = int((plan.decisions == int(Decision.FAST_STREAM)).sum())
+        if self.faults is not None and (
+                n_stream or self._prefetch.completed or len(self._prefetch)):
+            # the link was in use this layer: an injected stall blocks it
+            ev = self.faults.fires("link_stall")
+            if ev is not None:
+                self._charge_fault(ev.magnitude * self.faults.link_stall_s)
+        self._verify_transfers()
+        self.ledger.fast_hits += int((plan.decisions == int(Decision.FAST_RESIDENT)).sum())
         self.ledger.streams += n_stream
         self.ledger.stream_bytes += n_stream * expert_weight_bytes(self.tcfg)
         self.ledger.slow_runs += int((plan.decisions == int(Decision.SLOW)).sum())
@@ -678,6 +775,11 @@ class FiddlerEngine:
         decode steps.  When the interval expires and the live profile has
         drifted, applies the bounded migration plan and returns it."""
         if self.rebalancer is None:
+            return None
+        if not self.link_breaker.allow(self.ledger.sim_time):
+            # circuit open: the link is flaky (failed transfer
+            # verifications) — pause new migration plans until the
+            # cooldown; in-flight prefetches still drain
             return None
         plan = self.rebalancer.tick(self.placement)
         if plan is not None:
@@ -704,12 +806,17 @@ class FiddlerEngine:
             for li, e in plan.demotes:
                 self.fast_stack[li].demote(e)
                 self.slow_pool[li][e] = self._make_slow_expert(li, e)
-            for li, e in plan.promotes:
+            # the actual slow→fast transfer, batched: ONE device_put of
+            # the whole plan's weight pytree — a single link transaction
+            # instead of one per expert (fewer transactions is also less
+            # fault surface for the link circuit breaker to cover)
+            moved = jax.device_put(
+                [self._expert_weights(li, e) for li, e in plan.promotes])
+            for (li, e), w in zip(plan.promotes, moved):
                 self.slow_pool[li].pop(e)
-                # the actual slow→fast transfer; the stack grows in place
-                # (one row write), doubling its device capacity first
-                # when the padded slots are exhausted
-                w = jax.device_put(self._expert_weights(li, e))
+                # the stack grows in place (one row write), doubling its
+                # device capacity first when the padded slots are
+                # exhausted
                 st = self.fast_stack[li]
                 if not st.promote(e, w):
                     st = st.grown(_bucket(len(st.ids) + 1))
@@ -743,11 +850,110 @@ class FiddlerEngine:
         up (overlapped + exposed == migration_time).  Returns the seconds
         charged."""
         if not len(self._prefetch):
+            self._prefetch.pop_completed()
             return 0.0
         t = self._prefetch.flush()
         self.ledger.sim_time += t
         self.ledger.migration_exposed += t
+        # settlement, not verification: requeueing a failed transfer at
+        # shutdown would never converge — flushed transfers are final
+        self._prefetch.pop_completed()
         return t
+
+    def _verify_transfers(self) -> None:
+        """Post-transfer verification of completed prefetches: a lost or
+        corrupt transfer (injected — see core/faults.py) is requeued at
+        full length, its link-seconds and bytes recommitted to the
+        migration ledger so the overlapped/exposed split still closes,
+        and the failure feeds the link circuit breaker.  In real-numerics
+        mode the weights already landed (``apply_migrations`` put them),
+        so this is a control-plane/accounting defense — numerics stay
+        bit-identical."""
+        done = self._prefetch.pop_completed()
+        if not done:
+            return
+        now = self.ledger.sim_time
+        for p in done:
+            ev = None
+            if self.faults is not None:
+                ev = (self.faults.fires("prefetch_lost")
+                      or self.faults.fires("prefetch_corrupt"))
+            if ev is None:
+                self.link_breaker.record_success()
+                continue
+            self.ledger.retries += 1
+            self._fault_step_dirty = True
+            self.link_breaker.record_failure(now)
+            # the full transfer goes back on the link
+            self.ledger.migration_time += p.total
+            self.ledger.migration_bytes += expert_weight_bytes(self.tcfg)
+            self._prefetch.push(p.layer, p.expert, p.total, weight=p.weight)
+
+    # -- fault injection + defenses (core/faults.py) ----------------------------
+    def begin_fault_step(self, step: Optional[int] = None) -> None:
+        """Per-scheduler-tick fault bookkeeping: settle the previous
+        tick's degraded flag into ``ledger.degraded_steps``, age the
+        host-tier health cooldown, and advance the injector's schedule
+        (arming this tick's faults, releasing expired KV-pressure
+        holds).  The serving backends call this from ``begin_step``."""
+        if self._fault_step_dirty:
+            self.ledger.degraded_steps += 1
+            self._fault_step_dirty = False
+        self.host_health.tick()
+        if self.faults is not None:
+            self.faults.begin_step(step)
+
+    def release_fault_holds(self) -> None:
+        """Finalize hook: return injector-reserved KV blocks and settle
+        the last tick's degraded flag — a finished run pins nothing."""
+        if self.faults is not None:
+            self.faults.release_all()
+        if self._fault_step_dirty:
+            self.ledger.degraded_steps += 1
+            self._fault_step_dirty = False
+
+    def note_recovery(self) -> None:
+        """The serving layer recovered a slot from a mid-step failure
+        (evict→requeue→re-prefill) — charge the retry ledger."""
+        self.ledger.retries += 1
+        self._fault_step_dirty = True
+
+    def _charge_fault(self, seconds: float) -> None:
+        """Serial fault/recovery penalty: extends ``sim_time`` and is
+        always *exposed* — a stall IS the critical path, it never hides
+        under planned overlap — and marks the tick degraded."""
+        if seconds > 0:
+            led = self.ledger
+            led.sim_time += seconds
+            led.fault_time += seconds
+            led.fault_exposed += seconds
+        self._fault_step_dirty = True
+
+    def _fault_spike(self) -> None:
+        """Consume an armed per-step latency spike (background load,
+        SMI, page-fault storm — unattributed wall time)."""
+        if self.faults is None:
+            return
+        ev = self.faults.fires("latency_spike")
+        if ev is not None:
+            self._charge_fault(ev.magnitude * self.faults.latency_spike_s)
+
+    def _fault_host_sim(self) -> None:
+        """Pure-simulation host-tier faults: no real futures exist, so a
+        stall/crash charges the watchdog+backoff penalty directly and a
+        crash feeds the health tracker — repeated crashes flip the tier
+        unhealthy and ``_decide`` re-routes SLOW work through the stream
+        path (the same degraded mode the real watchdog triggers)."""
+        f = self.faults
+        if f is None or self.model is not None:
+            return
+        ev = f.fires("host_crash") or f.fires("host_stall")
+        if ev is None:
+            return
+        self.ledger.retries += 1
+        self._charge_fault(ev.magnitude * f.host_stall_s)
+        if ev.kind == "host_crash":
+            self.host_health.record_failure()
 
     # -- simulated routing ------------------------------------------------------
     def _sample_counts(self, li: int, n_tokens: int) -> np.ndarray:
@@ -906,8 +1112,19 @@ class FiddlerEngine:
         futures = []
         if slow and self.overlap:
             pool = _host_pool()
-            futures = [(e, pool.submit(self.slow_pool[li][e],
-                                       x_np[segs[e][0]])) for e in slow]
+            hostile = (self.faults.fires("host_crash")
+                       or self.faults.fires("host_stall")
+                       if self.faults is not None else None)
+            for e in slow:
+                fn = self.slow_pool[li][e]
+                xe = x_np[segs[e][0]]
+                submitted = fn
+                if hostile is not None:
+                    # the layer's first slow expert takes the armed fault
+                    submitted = _faulty_worker(fn, hostile,
+                                               self.faults.real_stall_s)
+                    hostile = None
+                futures.append((e, pool.submit(submitted, xe), fn, xe))
 
         def _launch(group, fn, uniform):
             # uniform: every expert in the group has the same row count —
@@ -962,8 +1179,8 @@ class FiddlerEngine:
         if slow and not self.overlap:
             for e in slow:
                 ye[e] = self.slow_pool[li][e](x_np[segs[e][0]])
-        for e, fut in futures:
-            ye[e] = fut.result()
+        for e, fut, fn, xe in futures:
+            ye[e] = self._await_host(fut, fn, xe)
 
         out = np.zeros_like(x_np)
         for e in uniq:  # ascending expert id == the eager loop's order
@@ -972,6 +1189,38 @@ class FiddlerEngine:
             out[rows] += gates_np[rows, kpos, None] * ye[e]
         self._drain_deferred_evictions()
         return out
+
+    def _await_host(self, fut, fn, x: np.ndarray) -> np.ndarray:
+        """Watchdog-guarded await of one slow-tier expert future: bounded
+        retry with exponential backoff — each watchdog expiry or worker
+        crash resubmits the clean kernel with a doubled timeout and
+        charges the backoff penalty as exposed fault time — then a final
+        inline fallback on the scheduler thread.  Retry and fallback run
+        the *same* ``HostExpert`` on the same rows, so recovery never
+        changes numerics (fp32 bit-identity holds through any fault)."""
+        timeout = self.watchdog_s
+        backoff = (self.faults.host_stall_s if self.faults is not None
+                   else 0.0)
+        for attempt in range(self.host_retries):
+            try:
+                return fut.result(timeout=timeout)
+            except HostWorkerFault:
+                self.host_health.record_failure()
+            except FuturesTimeout:
+                pass
+            self.ledger.retries += 1
+            self._charge_fault(backoff * (2 ** attempt))
+            timeout *= 2
+            fut = _host_pool().submit(fn, x)
+        try:
+            return fut.result(timeout=timeout)
+        except (HostWorkerFault, FuturesTimeout):
+            # host tier unresponsive after bounded retries: degrade to
+            # running the kernel inline on the scheduler thread
+            self.host_health.record_failure()
+            self.ledger.retries += 1
+            self._charge_fault(backoff * (2 ** self.host_retries))
+            return fn(x)
 
     # -- full forward passes (real numerics) -------------------------------------
     def prefill(self, tokens: jnp.ndarray, max_seq: int):
@@ -1169,6 +1418,7 @@ class FiddlerEngine:
         assert self.model is not None
         model, cfg = self.model, self.cfg
         B, C = tokens.shape
+        self._fault_spike()  # charged outside the absorbable window
         t0 = self.ledger.sim_time
         if caches is None:
             caches = [self._init_layer_cache(li, B, max_seq)
@@ -1201,6 +1451,7 @@ class FiddlerEngine:
             active = np.ones(pos.shape[0], bool)
         active = np.asarray(active, bool)
         assert active.any(), "decode_step_multi needs at least one live slot"
+        self._fault_spike()
         x = self.model.embed({"embed": self.top_params["embed"]}, tokens)
         positions = jnp.asarray(pos)[:, None]
         kv_lens = pos[active].astype(np.int64) + 1
@@ -1319,6 +1570,8 @@ class FiddlerEngine:
         """Charge one prefill chunk (``n_tokens`` tokens attending to
         ``kv_len`` KV entries) without touching ``ledger.ttft`` — the
         serving layer's simulated chunked-admission path."""
+        self._fault_spike()  # charged outside the absorbable window
+        self._fault_host_sim()
         t0 = self.ledger.sim_time
         for li in range(self.cfg.n_layers):
             counts = self._sample_counts(li, n_tokens)
@@ -1339,6 +1592,8 @@ class FiddlerEngine:
         kv_lens = np.asarray(kv_lens, np.int64)
         n = int(kv_lens.shape[0])
         assert n >= 1, "simulate_decode_multi needs at least one live slot"
+        self._fault_spike()
+        self._fault_host_sim()
         t0 = self.ledger.sim_time
         for li in range(self.cfg.n_layers):
             counts = self._sample_counts(li, n)

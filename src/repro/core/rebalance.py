@@ -157,12 +157,18 @@ class _Pending:
     """One in-flight promotion transfer: ``remaining`` link-seconds until
     expert ``expert`` of layer ``layer`` is actually resident.
     ``weight`` is the expert's live routing popularity — the transmission
-    priority."""
+    priority.  ``total`` is the transfer's original full length — what a
+    verification failure must requeue (core/faults.py)."""
 
     layer: int
     expert: int
     remaining: float
     weight: float = 0.0
+    total: float = 0.0
+
+    def __post_init__(self):
+        if self.total <= 0.0:
+            self.total = self.remaining
 
 
 class PrefetchQueue:
@@ -188,6 +194,9 @@ class PrefetchQueue:
 
     def __init__(self) -> None:
         self._q: List[_Pending] = []
+        # transfers completed since the last pop_completed() — the
+        # engine's post-transfer verification hook (docs/resilience.md)
+        self.completed: List[_Pending] = []
 
     def __len__(self) -> int:
         return len(self._q)
@@ -224,6 +233,7 @@ class PrefetchQueue:
         if last < 0:
             return 0.0
         exposed = sum(p.remaining for p in self._q[: last + 1])
+        self.completed.extend(self._q[: last + 1])
         del self._q[: last + 1]
         return exposed
 
@@ -238,15 +248,23 @@ class PrefetchQueue:
             idle -= d
             overlapped += d
             if p.remaining <= 1e-15:
-                self._q.pop(0)
+                self.completed.append(self._q.pop(0))
         return overlapped
 
     def flush(self) -> float:
         """Complete everything now (serialising); returns exposed
         seconds."""
         exposed = self.backlog
+        self.completed.extend(self._q)
         self._q.clear()
         return exposed
+
+    def pop_completed(self) -> List[_Pending]:
+        """Hand over (and clear) the transfers completed since the last
+        call — the engine verifies each one and requeues failures."""
+        done = self.completed
+        self.completed = []
+        return done
 
 
 def apply_plan(placement: Placement, plan: MigrationPlan) -> Placement:

@@ -15,6 +15,7 @@ optimized HLO and sum result-shape bytes of every collective op.
 from __future__ import annotations
 
 import re
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -130,7 +131,13 @@ def analyze_compiled(compiled, arch: str, shape: str, mesh_name: str,
     hbm = float(ca.get("bytes accessed", 0.0))
     try:
         hlo = compiled.as_text()
-    except Exception:
+    except (NotImplementedError, RuntimeError, AttributeError) as e:
+        # some backends/jax versions can't render the optimized HLO —
+        # collective bytes then read as 0, which must not pass silently
+        warnings.warn(
+            f"compiled.as_text() unavailable ({type(e).__name__}: {e}); "
+            f"collective-bytes roofline term will be 0",
+            RuntimeWarning, stacklevel=2)
         hlo = ""
     coll = collective_bytes(hlo)
     mem = None
@@ -140,8 +147,11 @@ def analyze_compiled(compiled, arch: str, shape: str, mesh_name: str,
                + getattr(ma, "argument_size_in_bytes", 0)
                + getattr(ma, "output_size_in_bytes", 0)
                - getattr(ma, "alias_size_in_bytes", 0))
-    except Exception:
-        pass
+    except (NotImplementedError, RuntimeError, AttributeError) as e:
+        warnings.warn(
+            f"compiled.memory_analysis() unavailable "
+            f"({type(e).__name__}: {e}); peak_memory will be absent",
+            RuntimeWarning, stacklevel=2)
     return Roofline(
         arch=arch, shape=shape, mesh=mesh_name,
         flops=flops, hbm_bytes=hbm,

@@ -174,8 +174,11 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         ma = None
         try:
             ma = compiled.memory_analysis()
-        except Exception:
-            pass
+        except (NotImplementedError, RuntimeError, AttributeError) as e:
+            # mirrors launch/analysis.analyze_compiled: absent on some
+            # backends/jax versions — report, don't swallow
+            print(f"  memory_analysis unavailable: "
+                  f"{type(e).__name__}: {e}", file=sys.stderr)
         print(f"[{arch} × {shape_name} × {mesh_name}] ok "
               f"({row['compile_s']:.1f}s compile)")
         if ma is not None:

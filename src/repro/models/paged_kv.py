@@ -141,6 +141,16 @@ class PrefixIndex:
         return min(blocks, key=lambda b: self._stamp.get(b, 0))
 
 
+class KVPoolExhausted(RuntimeError):
+    """The block pool has no free (or reclaimable cached) block left.
+
+    A ``RuntimeError`` subclass for back-compat with callers matching
+    the old bare ``RuntimeError``; the serving layer catches this
+    specifically (together with ``FaultError`` — see core/faults.py) to
+    route mid-step exhaustion into slot-level evict→requeue recovery
+    instead of crashing the run."""
+
+
 class BlockMeta:
     """Host-side block table + refcounts for one layer('s ring window).
 
@@ -169,6 +179,10 @@ class BlockMeta:
         # pool pressure instead of being freed eagerly)
         self.index: Optional[PrefixIndex] = None
         self._cached: set = set()
+        # blocks reserved out of the pool (fault injection: transient
+        # KV-pressure spikes — see core/faults.FaultInjector); ref stays
+        # 0 and they never appear in the table
+        self._reserved: set = set()
 
     # -- introspection ------------------------------------------------------
     @property
@@ -183,6 +197,11 @@ class BlockMeta:
     def n_cached(self) -> int:
         """Unreferenced blocks retained by the prefix cache."""
         return len(self._cached)
+
+    @property
+    def n_reserved(self) -> int:
+        """Blocks reserved out of the pool (injected KV pressure)."""
+        return len(self._reserved)
 
     def enable_prefix_cache(self) -> PrefixIndex:
         if self.index is None:
@@ -222,11 +241,38 @@ class BlockMeta:
             # prefix block (eviction-aware prefix cache, LRU by last match)
             self._evict_cached(self.index.lru_block(self._cached))
         if not self._free:
-            raise RuntimeError("KV block pool exhausted")
+            raise KVPoolExhausted("KV block pool exhausted")
         b = self._free.pop()
         self.ref[b] = 1
         self.fill[b] = 0
         return b
+
+    def reserve_blocks(self, n: int) -> List[int]:
+        """Take up to ``n`` blocks out of circulation (fault injection:
+        a transient pool-pressure spike).  Best-effort — reclaims cached
+        prefix blocks under pressure like ``_alloc`` but never raises;
+        returns the block ids actually reserved (hand them back via
+        :meth:`free_reserved`).  Reserved blocks keep ``ref == 0`` and
+        are invisible to the table."""
+        taken: List[int] = []
+        for _ in range(max(0, int(n))):
+            if not self._free and self._cached:
+                self._evict_cached(self.index.lru_block(self._cached))
+            if not self._free:
+                break
+            b = self._free.pop()
+            self._reserved.add(b)
+            taken.append(b)
+        return taken
+
+    def free_reserved(self, blocks: Sequence[int]) -> None:
+        """Return blocks taken by :meth:`reserve_blocks` to the pool."""
+        for b in blocks:
+            b = int(b)
+            assert b in self._reserved, b
+            self._reserved.discard(b)
+            self.fill[b] = 0
+            self._free.append(b)
 
     def _evict_cached(self, b: int) -> None:
         b = int(b)
@@ -408,8 +454,11 @@ class BlockMeta:
         free = set(self._free)
         assert len(free) == len(self._free), "free-list duplicates"
         assert not (free & self._cached), "cached block on the free list"
+        assert not (free & self._reserved), "reserved block on the free list"
+        assert not (self._cached & self._reserved), "cached block reserved"
         for b in range(1, self.n_blocks):
-            assert (self.ref[b] == 0) == (b in free or b in self._cached), b
+            assert (self.ref[b] == 0) == (
+                b in free or b in self._cached or b in self._reserved), b
         for b in self._cached:
             assert self.index is not None and b in self.index.by_block, b
             assert self.fill[b] == self.block_size, (b, int(self.fill[b]))
@@ -417,7 +466,7 @@ class BlockMeta:
             for b, h in self.index.by_block.items():
                 assert self.index.entries.get(h, (None,))[0] == b, (b, h)
         assert (self.blocks_in_use() + self.n_free + self.n_cached
-                == self.n_blocks - 1)
+                + self.n_reserved == self.n_blocks - 1)
 
 
 class PagedLayerCache:

@@ -75,6 +75,27 @@ class ServingBackend:
         (overlapped + exposed == migration_time).  Default: no-op."""
         return None
 
+    # -- fault injection (core/faults.py) ------------------------------------
+    @property
+    def faults(self):
+        """The backend's :class:`FaultInjector`, if any (``None`` =
+        fault-free — the default)."""
+        return None
+
+    def begin_step(self, step: int) -> None:
+        """Per-scheduler-tick fault bookkeeping hook: backends with an
+        injector arm this tick's scripted/seeded faults, release expired
+        KV-pressure holds, and settle the previous tick's degraded flag
+        here.  The serving engines call it once at the top of every
+        tick.  Default: no-op."""
+        return None
+
+    def record_fault_recovery(self) -> None:
+        """The scheduler recovered a slot from a mid-step failure
+        (evict→requeue→re-prefill) — backends with a ledger charge their
+        retry counters here.  Default: no-op."""
+        return None
+
     # -- cost model (roofline scheduling) ------------------------------------
     def cost_view(self) -> Optional[CostView]:
         """Per-phase roofline constants for phase-aware policies
@@ -215,10 +236,11 @@ def _copy_rows(axis: int):
 class ModelBackend(ServingBackend):
     """Jitted ``repro.models.Model`` execution; wall-clock timing."""
 
-    def __init__(self, model, params, *, max_seq: int = 256):
+    def __init__(self, model, params, *, max_seq: int = 256, faults=None):
         self.model = model
         self.params = params
         self.max_seq = max_seq
+        self._faults = faults
         # group path keeps the model's default (bf16) cache — only the
         # slot path needs fp32 to splice into make_cache(dtype=float32)
         self._prefill_grp = jax.jit(
@@ -238,6 +260,21 @@ class ModelBackend(ServingBackend):
         dt = t - self.clock()
         if dt > 0:
             time.sleep(dt)
+
+    @property
+    def faults(self):
+        return self._faults
+
+    def begin_step(self, step: int) -> None:
+        if self._faults is None:
+            return
+        self._faults.begin_step(step)
+        # wall-clock backend: the only meaningful injection is a real
+        # per-step latency spike (capped — this is a smoke-scale knob)
+        ev = self._faults.fires("latency_spike")
+        if ev is not None:
+            time.sleep(min(ev.magnitude * self._faults.latency_spike_s,
+                           0.05))
 
     # slot API
     def make_cache(self, n_slots: int) -> Any:
@@ -330,6 +367,17 @@ class FiddlerBackend(ServingBackend):
 
     def finalize(self) -> None:
         self.engine.flush_prefetch()
+        self.engine.release_fault_holds()
+
+    @property
+    def faults(self):
+        return self.engine.faults
+
+    def begin_step(self, step: int) -> None:
+        self.engine.begin_fault_step(step)
+
+    def record_fault_recovery(self) -> None:
+        self.engine.note_recovery()
 
     def cost_view(self):
         return _engine_cost_view(self.engine)
@@ -373,6 +421,9 @@ class FiddlerBackend(ServingBackend):
         return super().resize_cache(cache, n_slots=n_slots)
 
     def decode_slots(self, cache, tokens, pos, active):
+        f = self.engine.faults
+        if f is not None and self.engine.kv_layout == "paged":
+            f.kv_pressure_tick([c.meta for c in cache])
         logits, cache = self.engine.decode_step_multi(
             cache, jnp.asarray(tokens, jnp.int32)[:, None], pos,
             self.max_seq, active=active)
@@ -451,6 +502,17 @@ class SimulatedBackend(ServingBackend):
 
     def finalize(self) -> None:
         self.engine.flush_prefetch()
+        self.engine.release_fault_holds()
+
+    @property
+    def faults(self):
+        return self.engine.faults
+
+    def begin_step(self, step: int) -> None:
+        self.engine.begin_fault_step(step)
+
+    def record_fault_recovery(self) -> None:
+        self.engine.note_recovery()
 
     def cost_view(self):
         return _engine_cost_view(self.engine)
@@ -525,6 +587,9 @@ class SimulatedBackend(ServingBackend):
         active = np.asarray(active, bool)
         live = np.nonzero(active)[0]
         meta = cache["meta"]
+        f = self.engine.faults
+        if f is not None:
+            f.kv_pressure_tick([meta])
         for i in live:
             p = int(pos[i])
             meta.write_span(int(i), p, p + 1)

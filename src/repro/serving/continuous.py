@@ -66,7 +66,9 @@ from typing import Any, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import FaultError
 from repro.data.tokenizer import EOS_ID, PAD_ID
+from repro.models.paged_kv import KVPoolExhausted
 from repro.serving.backend import ServingBackend, as_backend
 from repro.serving.beam_search import _top_w
 from repro.serving.engine import Request
@@ -143,6 +145,7 @@ class ContinuousEngine:
         self.queue: List[Request] = []
         self.slots = [_Slot() for _ in range(n_slots)]
         self.steps = 0
+        self._ticks = 0   # scheduler ticks — the fault injector's clock
         self.finished: List[Request] = []
         # roofline constants for phase-aware policies (None = wall-clock
         # backend without a cost model)
@@ -462,55 +465,67 @@ class ContinuousEngine:
                 continue
             if allowed is not None and i not in allowed:
                 continue
-            req = slot.req
-            # gangs (fresh or resuming) prefill the shared prompt once,
-            # into the lead slot only
-            resume = slot.group is None and len(req.output) > 0
-            seq = self._prefill_seq(slot)
-            if slot.staging is None and slot.prefilled == 0:
-                # admission: runs exactly once per prefill (a chunk is
-                # processed right after, making staging/prefilled truthy)
-                slot.prefilled = self.backend.match_prefix(self.cache, i, seq)
-            size = sizes.get(i) or self.prefill_chunk or len(seq)
-            chunk = seq[slot.prefilled: slot.prefilled + size]
-            logits, slot.staging = self.backend.prefill_chunk(
-                slot.staging, chunk, slot.prefilled,
-                cache=self.cache, slot=i)
-            slot.prefilled += len(chunk)
-            if slot.prefilled < len(seq):
-                continue  # more chunks; in-flight decodes run meanwhile
-            # prefill complete: join the multi-slot batch
-            self.cache = self.backend.write_slot(self.cache, slot.staging, i)
-            slot.staging = None
-            self.backend.register_prefix(self.cache, i, seq)
-            if slot.group is not None:
-                if slot.group.resuming:
-                    self._resume_group_fork(i)
-                else:
-                    self._activate_group(i, logits)
-                continue
-            slot.phase = "decode"
-            if resume:
-                # decoding continues from the last emitted token; the
-                # re-prefill logits (which re-predict it) are discarded
-                slot.pos = len(seq)
-                slot.last_token = req.output[-1]
-                slot.steps_left = req.max_new_tokens - len(req.output)
-                if (slot.last_token == EOS_ID or slot.steps_left <= 0
-                        or slot.pos >= self.max_seq - 1):
-                    self._retire(i)
-                continue
-            # fresh admission: the prompt's first generated token
-            tok = int(np.argmax(logits))
-            now = self.clock()
-            req.output.append(tok)
-            req.token_times.append(now)
-            req.ttft = now - req.arrival
-            slot.pos = len(req.prompt)
-            slot.last_token = tok
-            slot.steps_left = req.max_new_tokens - 1
-            if tok == EOS_ID or slot.steps_left <= 0:
+            try:
+                self._prefill_slot(i, slot, sizes)
+            except (FaultError, KVPoolExhausted):
+                # injected fault / pool pressure mid-prefill: recover this
+                # slot through the evict→requeue→re-prefill path
+                self._recover_slot(i)
+
+    def _prefill_slot(self, i: int, slot: _Slot, sizes: Dict[int, int]
+                      ) -> None:
+        """One chunk of slot ``i``'s prefill (the whole loop body of
+        :meth:`_prefill_step` — split out so a fault raised anywhere in
+        it maps to exactly one slot's recovery)."""
+        req = slot.req
+        # gangs (fresh or resuming) prefill the shared prompt once,
+        # into the lead slot only
+        resume = slot.group is None and len(req.output) > 0
+        seq = self._prefill_seq(slot)
+        if slot.staging is None and slot.prefilled == 0:
+            # admission: runs exactly once per prefill (a chunk is
+            # processed right after, making staging/prefilled truthy)
+            slot.prefilled = self.backend.match_prefix(self.cache, i, seq)
+        size = sizes.get(i) or self.prefill_chunk or len(seq)
+        chunk = seq[slot.prefilled: slot.prefilled + size]
+        logits, slot.staging = self.backend.prefill_chunk(
+            slot.staging, chunk, slot.prefilled,
+            cache=self.cache, slot=i)
+        slot.prefilled += len(chunk)
+        if slot.prefilled < len(seq):
+            return  # more chunks; in-flight decodes run meanwhile
+        # prefill complete: join the multi-slot batch
+        self.cache = self.backend.write_slot(self.cache, slot.staging, i)
+        slot.staging = None
+        self.backend.register_prefix(self.cache, i, seq)
+        if slot.group is not None:
+            if slot.group.resuming:
+                self._resume_group_fork(i)
+            else:
+                self._activate_group(i, logits)
+            return
+        slot.phase = "decode"
+        if resume:
+            # decoding continues from the last emitted token; the
+            # re-prefill logits (which re-predict it) are discarded
+            slot.pos = len(seq)
+            slot.last_token = req.output[-1]
+            slot.steps_left = req.max_new_tokens - len(req.output)
+            if (slot.last_token == EOS_ID or slot.steps_left <= 0
+                    or slot.pos >= self.max_seq - 1):
                 self._retire(i)
+            return
+        # fresh admission: the prompt's first generated token
+        tok = int(np.argmax(logits))
+        now = self.clock()
+        req.output.append(tok)
+        req.token_times.append(now)
+        req.ttft = now - req.arrival
+        slot.pos = len(req.prompt)
+        slot.last_token = tok
+        slot.steps_left = req.max_new_tokens - 1
+        if tok == EOS_ID or slot.steps_left <= 0:
+            self._retire(i)
 
     def _retire(self, i: int) -> None:
         slot = self.slots[i]
@@ -613,8 +628,22 @@ class ContinuousEngine:
             if decoding[i]:
                 tokens[i] = self.slots[i].last_token
                 pos[i] = self.slots[i].pos
-        logits, self.cache = self.backend.decode_slots(
-            self.cache, tokens, pos, np.asarray(decoding))
+        try:
+            logits, self.cache = self.backend.decode_slots(
+                self.cache, tokens, pos, np.asarray(decoding))
+        except (FaultError, KVPoolExhausted):
+            # mid-step failure (injected pool pressure, host fault that
+            # escaped the watchdog's fallback): pick a victim — lowest
+            # effective priority, most KV held as the tiebreak — and
+            # recover it; the surviving slots retry next tick.  Partially
+            # written spans are rewritten idempotently then (fill = max,
+            # COW already resolved at write time).
+            cands = [i for i in range(self._alloc)
+                     if decoding[i] and self.slots[i].req is not None]
+            victim = min(cands, key=lambda i: (
+                self.slots[i].req.effective_priority, -self.slots[i].pos))
+            self._recover_slot(victim)
+            return
         next_tok = greedy(logits)
         now = self.clock()
         self.steps += 1
@@ -649,6 +678,59 @@ class ContinuousEngine:
         for grp in groups.values():
             self._beam_step(grp, logits, now)
 
+    def _requeue_slot(self, i: int) -> Optional[Request]:
+        """Release slot ``i`` — the *whole gang* for a beam member, in
+        any phase (unlike policy preemption, which refuses non-ready
+        gangs and non-decoding slots) — stash resumable beam state, and
+        return its request to the queue.  Every paged-KV block the slot
+        holds is released; re-admission goes through the (chunked)
+        re-prefill path.  Returns the requeued request, or ``None`` for
+        an idle slot."""
+        slot = self.slots[i]
+        if slot.req is None:
+            return None
+        if slot.group is not None:
+            grp = slot.group
+            req = grp.req
+            if grp.scores is not None:
+                # live beam state (a gang still prefilling its shared
+                # prompt has none — it re-admits fresh)
+                req.beam_resume = {
+                    "tokens": [list(t) for t in grp.tokens],
+                    "scores": np.asarray(grp.scores).copy(),
+                    "done": list(grp.done)}
+            members = list(grp.slots)
+        else:
+            req = slot.req
+            members = [i]
+        for si in members:
+            self.cache = self.backend.release_slot(self.cache, slot=si)
+            self.slots[si] = _Slot()
+        self.queue.append(req)
+        return req
+
+    def _recover_slot(self, i: int) -> None:
+        """Fault recovery for slot ``i``: evict → requeue → (chunked)
+        re-prefill, with the retry charged to the backend's ledger
+        (``Ledger.retries``).  Greedy outputs are preemption-invariant,
+        so recovery changes *when* tokens appear, never *which*."""
+        req = self._requeue_slot(i)
+        if req is not None:
+            req.preemptions += 1
+            self.backend.record_fault_recovery()
+
+    def _drain_in_flight(self) -> int:
+        """Step-budget exhaustion cleanup: return every in-flight
+        request to the queue (outputs and beam state preserved, so a
+        later ``run`` could resume them) and release all their paged-KV
+        blocks — an exhausted budget must never leak pool blocks.
+        Returns the number of requests drained."""
+        drained = 0
+        for i in range(len(self.slots)):
+            if self._requeue_slot(i) is not None:
+                drained += 1
+        return drained
+
     def step(self) -> None:
         """One scheduler tick: observe arrivals → resize the live pool →
         preempt → admit → run the policy's :class:`StepPlan`.  The legacy
@@ -660,6 +742,10 @@ class ContinuousEngine:
         exposed time).  Ends with one placement-rebalance tick (dynamic
         backends may migrate experts between tiers here, charging the
         transfer to their clock — see core/rebalance.py)."""
+        # fault-injection tick: arm this tick's faults (and release
+        # expired KV-pressure holds) before any mechanism runs
+        self.backend.begin_step(self._ticks)
+        self._ticks += 1
         self._update_rate(self.clock())
         self._autoscale()
         self._preempt()
@@ -709,10 +795,18 @@ class ContinuousEngine:
                 on_step(self)
             steps += 1
         if self.queue or self.active:
+            queued, in_flight = len(self.queue), self.active
+            # drain in-flight slots so an exhausted budget never leaks
+            # paged-KV blocks (requests keep their outputs/beam state and
+            # return to the queue — a later run() could resume them)
+            drained = self._drain_in_flight()
             msg = (f"ContinuousEngine.run: step budget max_steps="
-                   f"{max_steps} exhausted with {len(self.queue)} queued "
-                   f"and {self.active} in-flight requests unfinished")
+                   f"{max_steps} exhausted with {queued} queued "
+                   f"and {in_flight} in-flight requests unfinished "
+                   f"({drained} drained back to the queue, their KV "
+                   f"blocks released)")
             if on_exhausted == "raise":
+                self.backend.finalize()
                 raise RuntimeError(msg)
             if on_exhausted == "warn":
                 warnings.warn(msg, RuntimeWarning, stacklevel=2)

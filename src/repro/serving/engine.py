@@ -99,6 +99,7 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self.policy = get_policy(policy)
+        self._fault_steps = 0   # scheduler ticks — the fault injector's clock
 
     @property
     def backend(self):
@@ -118,6 +119,12 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def _clock(self) -> float:
         return self._backend.clock()
+
+    def _tick_faults(self) -> None:
+        """Advance the backend's fault-injection clock one tick (no-op
+        without an attached injector — see core/faults.py)."""
+        self._backend.begin_step(self._fault_steps)
+        self._fault_steps += 1
 
     def _sample_step(self, group: List[Request], logits) -> np.ndarray:
         """Next token per row, honoring each request's own temperature
@@ -149,6 +156,7 @@ class ServingEngine:
         prompts = np.full((B, S), PAD_ID, np.int32)
         for i, r in enumerate(group):
             prompts[i, S - len(r.prompt):] = r.prompt  # left-pad
+        self._tick_faults()
         logits, cache = self._backend.prefill_group(prompts)
         t_first = self._clock()
         for r in group:
@@ -167,6 +175,7 @@ class ServingEngine:
             if done.all():
                 break
             pos = S + step
+            self._tick_faults()
             logits, cache = self._backend.decode_group(cache, tok, pos)
             # placement-rebalance tick between decode steps (no-op for
             # static backends — see core/rebalance.py)

@@ -1,0 +1,65 @@
+"""FID006 fixture: watchdogged future awaits + blanket handlers.
+
+Hot root for this module: ``Engine.step``.
+"""
+from concurrent.futures import ThreadPoolExecutor
+
+POOL = ThreadPoolExecutor(2)
+
+
+def kernel(x):
+    return x + 1
+
+
+def dispatch_unbounded(xs):
+    futs = [POOL.submit(kernel, x) for x in xs]
+    return [f.result() for f in futs]  # EXPECT: FID006
+
+
+def dispatch_watchdogged(xs):
+    futs = [POOL.submit(kernel, x) for x in xs]
+    return [f.result(timeout=1.0) for f in futs]  # ok: bounded await
+
+
+def dispatch_positional(xs):
+    futs = [POOL.submit(kernel, x) for x in xs]
+    return [f.result(1.0) for f in futs]  # ok: positional timeout
+
+
+def offline_result(report):
+    # false-positive candidate: submits nothing and is not hot-reachable —
+    # ``.result()`` here is some other object's API, not a future await
+    return report.result()
+
+
+class Engine:
+    def step(self, xs):
+        out = self.guarded(xs)
+        out += self.narrated(xs)
+        out += self.swallowing(xs)
+        out += self.swallowing_bare(xs)
+        return out
+
+    def guarded(self, xs):
+        try:
+            return sum(xs)
+        except ValueError:  # ok: specific recoverable type
+            return 0
+
+    def narrated(self, xs):
+        try:
+            return sum(xs)
+        except Exception as e:  # ok: re-raises (narrates, doesn't swallow)
+            raise RuntimeError("step failed") from e
+
+    def swallowing(self, xs):
+        try:
+            return sum(xs)
+        except Exception:  # EXPECT: FID006
+            return 0
+
+    def swallowing_bare(self, xs):
+        try:
+            return sum(xs)
+        except:  # EXPECT: FID006
+            return 0

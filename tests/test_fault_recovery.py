@@ -1,0 +1,374 @@
+"""Chaos layer: fault injection, watchdogs, and graceful degradation.
+
+Covers the primitives (FaultInjector determinism, CircuitBreaker,
+HostHealth, BlockMeta reservations), the serving-level defenses
+(watchdog retry/fallback on host futures, KV-pressure evict→requeue
+recovery, exhaustion drain), and the standing invariants: every request
+completes under injected faults, zero paged-KV blocks leak, ledger
+charges are complete (``fault_time == fault_overlapped +
+fault_exposed``), and greedy outputs are preemption-invariant — faults
+change *when* tokens appear, never *which*.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import reduced_model
+from repro.configs import get_config
+from repro.core.faults import (
+    FAULT_KINDS,
+    CircuitBreaker,
+    FaultEvent,
+    FaultInjector,
+    HostHealth,
+)
+from repro.core.orchestrator import FiddlerEngine
+from repro.models.paged_kv import BlockMeta, KVPoolExhausted
+from repro.serving.backend import SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+
+@pytest.fixture(scope="module")
+def mixtral():
+    return reduced_model("mixtral-8x7b")
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector primitives
+# ---------------------------------------------------------------------------
+
+
+def _drive(seed, rates, steps=64):
+    fi = FaultInjector(seed=seed, rates=rates)
+    seq = []
+    for s in range(steps):
+        fi.begin_step(s)
+        seq.append(tuple(k for k in FAULT_KINDS if fi.fires(k)))
+    return seq
+
+
+def test_injector_is_deterministic_in_seed_and_tick():
+    rates = {k: 0.3 for k in FAULT_KINDS}
+    assert _drive(7, rates) == _drive(7, rates)
+    assert _drive(7, rates) != _drive(8, rates)
+
+
+def test_injector_rng_independent_of_polling():
+    """The rng only advances in begin_step: a site that polls twice (or
+    never) must not shift later ticks' draws."""
+    rates = {"host_stall": 0.5, "latency_spike": 0.5}
+    a = FaultInjector(seed=3, rates=rates)
+    b = FaultInjector(seed=3, rates=rates)
+    got_a, got_b = [], []
+    for s in range(40):
+        a.begin_step(s)
+        got_a.append(a.fires("host_stall") is not None)
+        a.fires("host_stall")  # double poll
+        a.fires("latency_spike")
+        b.begin_step(s)
+        got_b.append(b.fires("host_stall") is not None)
+        # b never polls latency_spike: the event lapses at the next tick
+    assert got_a == got_b
+
+
+def test_scripted_event_preempts_random_draw():
+    ev = FaultEvent("host_crash", step=5, magnitude=3.0)
+    fi = FaultInjector(seed=0, rates={"host_crash": 1.0}, schedule=[ev])
+    for s in range(6):
+        fi.begin_step(s)
+        got = fi.fires("host_crash")
+        assert got is not None  # rate 1.0 fires every tick
+    assert got is ev  # the scripted magnitude won at its tick
+    assert fi.fires("host_crash") is None  # consumed
+
+
+def test_begin_step_is_idempotent_and_monotone():
+    fi = FaultInjector(seed=0, schedule=[FaultEvent("link_stall", 2)])
+    fi.begin_step(2)
+    fi.begin_step(2)   # same tick again: armed event survives
+    assert fi.fires("link_stall") is not None
+    fi.begin_step(1)   # going backwards is a no-op
+    assert fi.step == 2
+
+
+def test_unknown_rate_kind_rejected():
+    with pytest.raises(AssertionError):
+        FaultInjector(rates={"gamma_ray": 0.1})
+    with pytest.raises(AssertionError):
+        FaultEvent("gamma_ray", 0)
+
+
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(fail_threshold=2, cooldown_s=1.0)
+    assert br.state == "closed" and br.allow(0.0)
+    br.record_failure(0.0)
+    assert br.state == "closed"  # one failure: below threshold
+    br.record_failure(0.0)
+    assert br.state == "open" and not br.allow(0.5)
+    assert br.allow(1.5)                  # cooldown over → half-open
+    assert br.state == "half-open"
+    br.record_failure(1.5)                # first failure re-opens
+    assert not br.allow(2.0) and br.trips == 2
+    assert br.allow(3.0)
+    br.record_success()                   # verified success closes fully
+    assert br.state == "closed" and br.failures == 0
+
+
+def test_host_health_window_and_cooldown():
+    h = HostHealth(unhealthy_after=2, window_steps=4, cooldown_steps=3)
+    h.record_failure()
+    for _ in range(4):
+        h.tick()       # window passes failure-free: counter resets
+    h.record_failure()
+    assert not h.unhealthy  # old failure forgotten, this is the first
+    h.record_failure()
+    assert h.unhealthy and h.trips == 1
+    for _ in range(3):
+        h.tick()
+    assert not h.unhealthy  # cooldown expired
+
+
+# ---------------------------------------------------------------------------
+# BlockMeta reservations (the kv_pressure mechanism)
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_blocks_invisible_to_tables_and_checked():
+    meta = BlockMeta(2, 64)
+    taken = meta.reserve_blocks(3)
+    assert len(taken) == 3 and meta.n_reserved == 3
+    meta.check()   # reserved blocks keep the pool identity balanced
+    free_before = meta.n_free
+    meta.free_reserved(taken)
+    assert meta.n_reserved == 0 and meta.n_free == free_before + 3
+    meta.check()
+
+
+def test_reserve_blocks_is_best_effort():
+    meta = BlockMeta(1, 16)
+    got = meta.reserve_blocks(10_000)   # more than the pool holds
+    assert 0 < len(got) < 10_000
+    assert meta.n_free == 0
+    with pytest.raises(KVPoolExhausted):
+        meta.write_span(0, 0, 1)   # pool empty: allocation must fail
+    meta.free_reserved(got)
+    meta.write_span(0, 0, 1)       # released blocks circulate again
+    meta.check()
+
+
+def test_injector_releases_held_blocks():
+    meta = BlockMeta(2, 64)
+    fi = FaultInjector(seed=0, schedule=[FaultEvent("kv_pressure", 0)],
+                       kv_pressure_blocks=2, kv_pressure_hold=3)
+    fi.begin_step(0)
+    assert fi.kv_pressure_tick([meta]) == 2
+    assert meta.n_reserved == 2
+    for s in range(1, 3):
+        fi.begin_step(s)
+        assert meta.n_reserved == 2   # hold not yet expired
+    fi.begin_step(3)
+    assert meta.n_reserved == 0       # released on schedule
+    # release_all is idempotent settlement
+    fi.release_all()
+    meta.check()
+
+
+# ---------------------------------------------------------------------------
+# serving-level chaos (simulated backend — paper-scale config, no weights)
+# ---------------------------------------------------------------------------
+
+
+def _chaos_serve(cfg, *, faults, n_requests=10, prompt=36, new=20,
+                 max_seq=128, chunk=8, rebalance=16, max_steps=50_000,
+                 on_exhausted="raise"):
+    eng = FiddlerEngine(cfg, faults=faults, rebalance_interval=rebalance)
+    be = SimulatedBackend(eng, max_seq=max_seq)
+    ce = ContinuousEngine(be, n_slots=4, max_seq=max_seq,
+                          prefill_chunk=chunk)
+    rng = np.random.default_rng(0)
+    for r in range(n_requests):
+        ce.submit(Request(rid=str(r),
+                          prompt=list(rng.integers(5, 99, prompt)),
+                          max_new_tokens=new, arrival=0.002 * r))
+    done = ce.run(max_steps=max_steps, on_exhausted=on_exhausted)
+    return ce, eng, done
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_run_completes_without_leaks(seed):
+    fi = FaultInjector(seed=seed, rates={k: 0.1 for k in FAULT_KINDS})
+    cfg = get_config("mixtral-8x7b")
+    ce, eng, done = _chaos_serve(cfg, faults=fi)
+    assert len(done) == 10
+    assert all(len(r.output) > 0 for r in done)
+    meta = ce.cache["meta"]
+    meta.check()
+    assert meta.blocks_in_use() == 0, "leaked paged-KV blocks"
+    assert meta.n_reserved == 0, "injector left blocks pinned"
+    led = eng.ledger
+    assert led.fault_time == pytest.approx(
+        led.fault_overlapped + led.fault_exposed)
+    assert led.fault_time > 0 and led.retries > 0
+    assert sum(fi.stats()["injected"].values()) > 0
+
+
+def test_kv_pressure_forces_recovery_and_outputs_are_invariant():
+    """Scripted pool-pressure spikes big enough to exhaust the pool must
+    drive the evict→requeue→re-prefill path — and greedy outputs must be
+    bit-identical to the fault-free run."""
+    cfg = get_config("mixtral-8x7b")
+    sched = [FaultEvent("kv_pressure", s, magnitude=12.0)
+             for s in (3, 9, 15)]
+    fi = FaultInjector(seed=0, schedule=sched, kv_pressure_blocks=16,
+                       kv_pressure_hold=3)
+    ce, eng, done = _chaos_serve(cfg, faults=fi, n_requests=8, prompt=30,
+                                 new=16, max_seq=64)
+    assert len(done) == 8
+    assert sum(r.preemptions for r in done) > 0, \
+        "pressure never exercised the recovery path"
+    assert eng.ledger.retries > 0
+    meta = ce.cache["meta"]
+    meta.check()
+    assert meta.blocks_in_use() == 0
+
+    ce2, _, done2 = _chaos_serve(cfg, faults=None, n_requests=8, prompt=30,
+                                 new=16, max_seq=64)
+    assert ({r.rid: r.output for r in done}
+            == {r.rid: r.output for r in done2})
+
+
+def test_degraded_mode_reroutes_slow_tier():
+    """Back-to-back host crashes flip HostHealth unhealthy; the planner
+    must stop scheduling SLOW experts while degraded (SLOW→stream
+    remap), and the degraded ticks must be charged to the ledger."""
+    cfg = get_config("mixtral-8x7b")
+    sched = [FaultEvent("host_crash", s) for s in range(2, 12)]
+    fi = FaultInjector(seed=0, schedule=sched)
+    ce, eng, done = _chaos_serve(cfg, faults=fi)
+    assert len(done) == 10
+    assert eng.host_health.trips > 0
+    assert eng.ledger.degraded_steps > 0
+
+
+def test_exhaustion_drain_releases_all_blocks():
+    """Satellite regression: run() with an exhausted step budget must
+    drain in-flight slots — zero leaked blocks, requests requeued with
+    their progress intact."""
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg)
+    be = SimulatedBackend(eng, max_seq=64)
+    ce = ContinuousEngine(be, n_slots=4, max_seq=64, prefill_chunk=8)
+    for r in range(4):
+        ce.submit(Request(rid=str(r), prompt=list(range(5, 25)),
+                          max_new_tokens=16, arrival=0.0))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = ce.run(max_steps=5, on_exhausted="warn")
+    assert len(out) == 0 and ce.active == 0
+    assert len(ce.queue) == 4        # drained back, nothing dropped
+    meta = ce.cache["meta"]
+    meta.check()
+    assert meta.blocks_in_use() == 0, "exhaustion leaked paged-KV blocks"
+    assert any("drained" in str(x.message) for x in w)
+    # the drained requests keep their emitted tokens for a future resume
+    assert any(r.output for r in ce.queue)
+
+
+def test_exhaustion_drain_on_raise():
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg)
+    be = SimulatedBackend(eng, max_seq=64)
+    ce = ContinuousEngine(be, n_slots=2, max_seq=64, prefill_chunk=8)
+    ce.submit(Request(rid="r", prompt=list(range(5, 25)),
+                      max_new_tokens=16, arrival=0.0))
+    with pytest.raises(RuntimeError, match="drained"):
+        ce.run(max_steps=2, on_exhausted="raise")
+    meta = ce.cache["meta"]
+    meta.check()
+    assert meta.blocks_in_use() == 0
+
+
+# ---------------------------------------------------------------------------
+# property test: random seeded fault schedules
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       rate=st.floats(min_value=0.0, max_value=0.3),
+       spike=st.booleans())
+def test_random_fault_schedules_conserve_invariants(seed, rate, spike):
+    """Any seeded fault schedule: every request completes, block
+    refcounts balance (meta.check + zero in use), ledger charges are
+    complete, and greedy outputs match the fault-free twin."""
+    cfg = get_config("mixtral-8x7b")
+    rates = {k: rate for k in FAULT_KINDS}
+    sched = ([FaultEvent("kv_pressure", s, magnitude=10.0)
+              for s in (4, 11)] if spike else [])
+    fi = FaultInjector(seed=seed, rates=rates, schedule=sched,
+                       kv_pressure_blocks=12, kv_pressure_hold=2)
+    ce, eng, done = _chaos_serve(cfg, faults=fi, n_requests=6, prompt=24,
+                                 new=12, max_seq=64)
+    assert len(done) == 6
+    assert all(len(r.output) > 0 for r in done)
+    meta = ce.cache["meta"]
+    meta.check()
+    assert meta.blocks_in_use() == 0
+    assert meta.n_reserved == 0
+    led = eng.ledger
+    assert led.fault_time == pytest.approx(
+        led.fault_overlapped + led.fault_exposed)
+    assert led.sim_time > 0
+
+    ce2, _, done2 = _chaos_serve(cfg, faults=None, n_requests=6, prompt=24,
+                                 new=12, max_seq=64)
+    assert ({r.rid: r.output for r in done}
+            == {r.rid: r.output for r in done2})
+
+
+# ---------------------------------------------------------------------------
+# real numerics: watchdog retry/fallback must not perturb fp32 outputs
+# ---------------------------------------------------------------------------
+
+
+def _forward(eng, tokens, n_decode=2):
+    outs = []
+    logits, caches = eng.prefill(tokens, max_seq=32)
+    outs.append(np.asarray(logits))
+    for step in range(n_decode):
+        logits, caches = eng.decode_step(caches, tokens[:, :1],
+                                         pos=tokens.shape[1] + step,
+                                         max_seq=32)
+        outs.append(np.asarray(logits))
+    return outs
+
+
+def test_host_fault_retry_is_bit_identical(mixtral):
+    """Injected worker stalls/crashes exercise watchdog → retry →
+    inline fallback; every path re-runs the same fp32 kernel, so logits
+    must be bit-identical to the fault-free engine.  Also guards the
+    fault-free path: attaching an idle injector changes nothing."""
+    cfg, model, params = mixtral
+    kw = dict(expert_budget=cfg.n_layers * cfg.moe.n_experts // 2,
+              host_precision="fp32")
+    tokens = np.arange(1, 9, dtype=np.int32)[None, :]
+    base = _forward(FiddlerEngine(cfg, params, **kw), tokens)
+
+    idle = FiddlerEngine(cfg, params, faults=FaultInjector(seed=0), **kw)
+    for a, b in zip(base, _forward(idle, tokens)):
+        assert np.array_equal(a, b)
+    assert idle.ledger.fault_time == 0.0
+
+    sched = [FaultEvent("host_stall", 0), FaultEvent("host_crash", 1)]
+    for step0 in (0, 1):
+        fi = FaultInjector(seed=0, schedule=sched)
+        eng = FiddlerEngine(cfg, params, faults=fi, **kw)
+        eng.begin_fault_step(step0)   # arm stall (0) or crash (1)
+        got = _forward(eng, tokens)
+        for a, b in zip(base, got):
+            assert np.array_equal(a, b), "host-fault retry changed logits"
+        assert eng.ledger.retries > 0
+        assert eng.ledger.fault_time > 0

@@ -77,6 +77,12 @@ def test_fid005_fixture():
     assert got == expected_findings(fx)
 
 
+def test_fid006_fixture():
+    fx = FIXTURES / "fid006_cases.py"
+    got = run_rule("FID006", fx, hot_roots=["Engine.step"])
+    assert got == expected_findings(fx)
+
+
 # ---------------------------------------------------------------------------
 # suppression semantics
 # ---------------------------------------------------------------------------
@@ -149,7 +155,7 @@ def test_committed_baseline_entries_have_reasons():
     for entry in data["findings"]:
         assert entry["reason"].strip(), entry
         assert entry["rule"] in {"FID001", "FID002", "FID003", "FID004",
-                                 "FID005"}
+                                 "FID005", "FID006"}
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +177,8 @@ def test_repo_is_fiddlint_clean(monkeypatch):
 def test_repo_config_loads_hot_roots():
     cfg = load_config(REPO)
     assert any(r.endswith("ContinuousEngine.step") for r in cfg.hot_roots)
-    assert cfg.select == ["FID001", "FID002", "FID003", "FID004", "FID005"]
+    assert cfg.select == ["FID001", "FID002", "FID003", "FID004", "FID005",
+                          "FID006"]
 
 
 def test_cli_smoke():
