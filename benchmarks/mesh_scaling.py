@@ -1,0 +1,188 @@
+"""Expert-parallel mesh scaling: throughput vs fast-device count.
+
+Paper-scale pure simulation (full Mixtral-8x7B config, param-less
+engine) of the continuous-batching scheduler at a saturating Poisson
+rate, swept over ``n_fast_devices`` D ∈ {1, 2, 4} on the paper's env2
+hardware spec — every fast device is one RTX 6000 Ada's worth of HBM,
+so D=2 nearly doubles expert residency and D=4 makes the whole model
+fast-resident.  Each extra fast
+device adds one chip's worth of expert residency (``expert_budget`` is
+per device), one host↔device DMA link for migration prefetches, and its
+own share of the dispatch/combine all-to-all — so throughput must grow
+with D, and the ledger must show the fabric was *charged*, not assumed
+free: ``alltoall_time > 0`` on every D > 1 point, and dynamic
+rebalancing stays on so every planned migration pays link time
+(``migration_time > 0`` whenever ``migrations > 0``; a fully resident
+D=4 model correctly plans none).  Each device also owns its own
+paged-KV pool shard in the ``SimulatedBackend``; the per-device leak
+audit must come back all zeros after every run.
+
+A reduced real-numerics twin checks the other half of the contract: an
+engine built through the mesh path at 1×1 (``make_serving_mesh("1,1")``
+→ no mesh object, one fast device, global paged-KV pool) must produce
+fp32 **bit-identical** prefill + decode logits to the historical
+single-device engine (``bit_identical_fp32`` in the JSON).
+
+CI gates (.github/workflows/ci.yml mesh-smoke lane, --smoke mode):
+throughput monotone in D, zero leaked blocks per device, and
+``bit_identical_fp32`` true.  The committed full run additionally shows
+>= 1.7x throughput from 1 -> 2 devices and >= 3x from 1 -> 4.
+Results land in ``BENCH_mesh_scaling.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ENVS, emit
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.launch.mesh import make_serving_mesh
+from repro.serving.backend import SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+SIM_MAX_SEQ = 256
+SIM_PREFILL_CHUNK = 16
+DEVICE_COUNTS = (1, 2, 4)
+RESULTS_JSON = Path(__file__).resolve().parents[1] / "BENCH_mesh_scaling.json"
+
+
+def poisson_requests(rate_hz: float, n: int, *, prompt_len: int = 64,
+                     max_new: int = 24, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_hz)
+        plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
+        prompt = [1] + rng.integers(3, 250, size=plen - 1).tolist()
+        reqs.append(Request(rid=f"r{i}", prompt=prompt,
+                            max_new_tokens=max_new, arrival=t))
+    return reqs
+
+
+def simulate_scale(model_name: str, env: str, n_devices: int, *,
+                   rate_hz: float, n_slots: int, n_requests: int,
+                   seed: int = 0) -> Dict[str, float]:
+    """One sweep point: paper-scale simulation with ``n_devices`` fast
+    devices, dynamic rebalancing on (so the per-link migration cost is
+    exercised), per-device KV pools in the backend."""
+    cfg = get_config(model_name)
+    eng = FiddlerEngine(cfg, policy="fiddler", hw=ENVS[env], seed=seed,
+                        n_fast_devices=n_devices, rebalance_interval=16)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=SIM_MAX_SEQ),
+                               n_slots=n_slots, max_seq=SIM_MAX_SEQ,
+                               prefill_chunk=SIM_PREFILL_CHUNK)
+    for r in poisson_requests(rate_hz, n_requests, seed=seed):
+        serving.submit(r)
+    done = serving.run(max_steps=200_000, on_exhausted="raise")
+    assert len(done) == n_requests, (len(done), n_requests)
+
+    led = eng.ledger
+    n_tokens = sum(len(r.output) for r in done)
+    leaked = serving.backend.kv_check(serving.cache)
+    busy = list(led.device_busy) or [0.0]
+    return {
+        "n_devices": n_devices,
+        "throughput_tok_per_s": n_tokens / led.sim_time if led.sim_time
+        else 0.0,
+        "mean_ttft": float(np.mean([r.ttft for r in done])),
+        "hit_rate": led.fast_hits / max(led.fast_hits + led.streams
+                                        + led.slow_runs, 1),
+        "resident_experts": int(eng.expert_budget),
+        "alltoall_time": led.alltoall_time,
+        "alltoall_exposed": led.alltoall_exposed,
+        "migrations": led.migrations,
+        "migration_time": led.migration_time,
+        "device_busy": busy,
+        "busy_balance": min(busy) / max(busy) if max(busy) else 1.0,
+        "leaked_blocks_per_device": leaked,
+        "leaked_blocks": int(sum(leaked)),
+    }
+
+
+def bit_identity_1x1(model_name: str, seed: int = 0) -> bool:
+    """fp32 prefill + decode logits of the mesh-path 1x1 engine vs the
+    historical single-device engine, on reduced real numerics."""
+    from repro.models import Model
+
+    full = get_config(model_name)
+    cfg = full.reduced()
+    model = Model(cfg, param_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(seed))
+    kw = dict(policy="fiddler", host_precision="fp32",
+              expert_budget=cfg.n_layers * cfg.moe.n_experts // 2)
+    plain = FiddlerEngine(cfg, params, **kw)
+    meshed = FiddlerEngine(cfg, params, mesh=make_serving_mesh("1,1"),
+                           n_fast_devices=1, kv_global_pool=True, **kw)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 10), 3,
+                                cfg.vocab_size)
+    outs = []
+    for eng in (plain, meshed):
+        rows = []
+        logits, caches = eng.prefill(tokens, max_seq=32)
+        rows.append(np.asarray(logits))
+        for step in range(2):
+            logits, caches = eng.decode_step(
+                caches, tokens[:, :1], pos=tokens.shape[1] + step, max_seq=32)
+            rows.append(np.asarray(logits))
+        outs.append(np.stack(rows))
+    return bool(np.array_equal(outs[0], outs[1]))
+
+
+def run(model: str = "mixtral-8x7b", env: str = "env2",
+        smoke: bool = False) -> Dict[str, object]:
+    rate = 32.0 if smoke else 64.0          # saturating either way
+    n_requests = 6 if smoke else 32
+    n_slots = 4
+
+    results: Dict[str, object] = {}
+    for D in DEVICE_COUNTS:
+        r = simulate_scale(model, env, D, rate_hz=rate, n_slots=n_slots,
+                           n_requests=n_requests)
+        key = f"mesh_scaling/{env}/fiddler/devices{D}_rate{rate:g}"
+        emit(key, r["alltoall_time"] * 1e6,
+             f"tok_per_s={r['throughput_tok_per_s']:.2f} "
+             f"hit_rate={r['hit_rate']:.3f} "
+             f"migr={r['migrations']:.0f} "
+             f"balance={r['busy_balance']:.2f} "
+             f"leaked={r['leaked_blocks']:.0f}")
+        results[key] = r
+
+    xs = {r["n_devices"]: r["throughput_tok_per_s"]
+          for r in results.values()}
+    bit_ok = bit_identity_1x1(model)
+    emit("mesh_scaling/bit_identical_fp32_1x1", 0.0, str(bit_ok))
+    emit("mesh_scaling/speedup_1to2", 0.0, f"{xs[2] / xs[1]:.2f}x")
+    emit("mesh_scaling/speedup_1to4", 0.0, f"{xs[4] / xs[1]:.2f}x")
+
+    record = {
+        "_meta": {
+            "mode": "smoke" if smoke else "full",
+            "model": model, "env": env, "rate_hz": rate,
+            "n_requests": n_requests, "n_slots": n_slots,
+            "device_counts": list(DEVICE_COUNTS),
+        },
+        "bit_identical_fp32": bit_ok,
+        "speedup_1to2": xs[2] / xs[1],
+        "speedup_1to4": xs[4] / xs[1],
+        "results": results,
+    }
+    RESULTS_JSON.write_text(json.dumps(record, indent=2, sort_keys=True))
+    return record
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mesh-smoke lane: tiny workload, same gates")
+    ap.add_argument("--env", default="env2", choices=sorted(ENVS))
+    a = ap.parse_args()
+    run(env=a.env, smoke=a.smoke)

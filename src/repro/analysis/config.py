@@ -15,7 +15,8 @@ from dataclasses import dataclass, field, replace
 from pathlib import Path
 from typing import Dict, List, Optional
 
-RULE_IDS = ("FID001", "FID002", "FID003", "FID004", "FID005", "FID006")
+RULE_IDS = ("FID001", "FID002", "FID003", "FID004", "FID005", "FID006",
+            "FID007")
 
 
 @dataclass(frozen=True)
@@ -66,6 +67,12 @@ class FiddlintConfig:
     # FID006 — future-awaiting method names that need a watchdog timeout
     future_await_methods: List[str] = field(
         default_factory=lambda: ["result"])
+
+    # FID007 — call-graph roots of the expert-migration path (per-device
+    # device_put batching is checked on everything reachable from these)
+    migration_roots: List[str] = field(default_factory=lambda: [
+        "repro.core.orchestrator.FiddlerEngine.apply_migrations",
+    ])
 
     def with_overrides(self, **kw) -> "FiddlintConfig":
         return replace(self, **{k: v for k, v in kw.items() if v is not None})

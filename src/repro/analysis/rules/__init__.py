@@ -12,6 +12,7 @@ from repro.analysis.rules.fid003_refcount import check_refcount
 from repro.analysis.rules.fid004_ledger import check_ledger
 from repro.analysis.rules.fid005_threads import check_threads
 from repro.analysis.rules.fid006_watchdog import check_watchdog
+from repro.analysis.rules.fid007_mesh_dispatch import check_mesh_dispatch
 
 Rule = Callable[[Project, FiddlintConfig], List[Finding]]
 
@@ -22,6 +23,7 @@ RULES = {
     "FID004": check_ledger,
     "FID005": check_threads,
     "FID006": check_watchdog,
+    "FID007": check_mesh_dispatch,
 }
 
 

@@ -1,0 +1,182 @@
+"""FID007 per-device-work-in-mesh-dispatch.
+
+Expert-parallel serving multiplies every per-step mistake by the device
+count: a host sync inside a ``shard_map`` body runs once *per device per
+step* and serialises the all-to-all it was supposed to overlap, and a
+migration loop that ``device_put``s one expert at a time turns one link
+transaction per device into one per expert.  Two patterns:
+
+* **host sync inside a shard_map dispatch body** — the function object
+  passed to ``shard_map(...)`` (positional arg or decorator; nested defs,
+  lambdas, and module-level functions all resolve) must stay traced jax
+  end to end.  ``.item()`` / ``.tolist()`` / ``.block_until_ready()``,
+  ``jax.device_get``, ``np.asarray`` / ``np.array``, and ``float`` /
+  ``int`` / ``bool`` on non-literal values are flagged unconditionally:
+  inside a shard_map body every value is a traced shard, so there is no
+  host-side false-positive population to gate on (unlike FID001's
+  dataflow-gated hot-path scan).
+
+* **unbatched per-device ``device_put`` in a migration path** — inside
+  functions reachable from the configured ``migration_roots``, a
+  ``jax.device_put`` under a ``for`` loop whose payload is a single
+  array (not a list/tuple literal, comprehension, or a local name bound
+  to one) moves weights one transfer at a time; batch the group into one
+  put per target device.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.config import FiddlintConfig
+from repro.analysis.core import Finding, relpath
+from repro.analysis.project import FunctionInfo, Project, attr_chain
+
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+SYNC_CASTS = {"float", "int", "bool"}
+NP_SYNC_FUNCS = {"asarray", "array"}
+BATCHED_NODES = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp)
+
+
+def _is_shard_map_call(node: ast.Call) -> bool:
+    chain = attr_chain(node.func)
+    return bool(chain) and chain[-1] == "shard_map"
+
+
+def _named_defs(scope: ast.AST) -> Dict[str, ast.AST]:
+    """Every function definition visible under ``scope`` by name
+    (innermost wins — matches how a nested ``body`` shadows)."""
+    out: Dict[str, ast.AST] = {}
+    for n in ast.walk(scope):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[n.name] = n
+        elif isinstance(n, ast.Assign) and isinstance(n.value, ast.Lambda):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = n.value
+    return out
+
+
+def _dispatch_bodies(project: Project, fn: FunctionInfo) -> List[ast.AST]:
+    """AST nodes of every shard_map body rooted in ``fn``: the first
+    positional argument of each ``shard_map(...)`` call (resolved against
+    nested defs, then module-level functions), plus ``fn`` itself when a
+    decorator wraps it in shard_map."""
+    bodies: List[ast.AST] = []
+    local = _named_defs(fn.node)
+    for node in ast.walk(fn.node):
+        if not (isinstance(node, ast.Call) and _is_shard_map_call(node)
+                and node.args):
+            continue
+        target = node.args[0]
+        if isinstance(target, ast.Lambda):
+            bodies.append(target)
+        elif isinstance(target, ast.Name):
+            if target.id in local:
+                bodies.append(local[target.id])
+            else:
+                top = project.functions.get(f"{fn.module}.{target.id}")
+                if top is not None:
+                    bodies.append(top.node)
+    decs = getattr(fn.node, "decorator_list", [])
+    if any(isinstance(d, ast.Call) and _is_shard_map_call(d) for d in decs):
+        bodies.append(fn.node)
+    return bodies
+
+
+def _check_body_syncs(body: ast.AST, fn: FunctionInfo, path: str,
+                      np_aliases: Set[str], jax_aliases: Set[str],
+                      out: List[Finding]) -> None:
+    for node in ast.walk(body):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        label: Optional[str] = None
+        if isinstance(func, ast.Attribute) and func.attr in SYNC_METHODS:
+            label = f"`.{func.attr}()`"
+        else:
+            chain = attr_chain(func)
+            if (chain and chain[-1] == "device_get"
+                    and chain[0] in jax_aliases):
+                label = "`jax.device_get`"
+            elif (chain and len(chain) == 2 and chain[0] in np_aliases
+                    and chain[1] in NP_SYNC_FUNCS):
+                label = f"`{chain[0]}.{chain[1]}`"
+            elif (isinstance(func, ast.Name) and func.id in SYNC_CASTS
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)):
+                label = f"`{func.id}()`"
+        if label is not None:
+            out.append(Finding(
+                "FID007", path, node.lineno, node.col_offset,
+                f"{label} inside a shard_map dispatch body runs a host "
+                f"sync once per device per step and serialises the "
+                f"collective; keep the body traced jax end to end",
+                fn.qualname))
+
+
+def _batched_names(fn_node: ast.AST) -> Set[str]:
+    """Local names bound to list/tuple literals or comprehensions — a
+    ``device_put`` of one of these IS the batched idiom."""
+    names: Set[str] = set()
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                       BATCHED_NODES):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+    return names
+
+
+def _check_migration_puts(fn: FunctionInfo, path: str, root: str,
+                          jax_aliases: Set[str],
+                          out: List[Finding]) -> None:
+    batched = _batched_names(fn.node)
+    via = "" if fn.qualname == root else f" (reachable from {root})"
+    for loop in ast.walk(fn.node):
+        if not isinstance(loop, (ast.For, ast.AsyncFor)):
+            continue
+        for node in ast.walk(loop):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            if not (chain and chain[-1] == "device_put"
+                    and (len(chain) == 1 or chain[0] in jax_aliases)):
+                continue
+            if not node.args:
+                continue
+            payload = node.args[0]
+            if isinstance(payload, BATCHED_NODES):
+                continue
+            if isinstance(payload, ast.Name) and payload.id in batched:
+                continue
+            out.append(Finding(
+                "FID007", path, node.lineno, node.col_offset,
+                f"unbatched `device_put` inside a migration loop{via}: "
+                f"one link transaction per iteration — group the "
+                f"transfers and issue one put per target device",
+                fn.qualname))
+
+
+def check_mesh_dispatch(project: Project,
+                        config: FiddlintConfig) -> List[Finding]:
+    out: List[Finding] = []
+
+    # (a) host syncs inside shard_map dispatch bodies, project-wide
+    for fn in project.functions.values():
+        mod = project.modules[fn.module]
+        path = relpath(fn.file.path)
+        for body in _dispatch_bodies(project, fn):
+            _check_body_syncs(body, fn, path, mod.np_aliases,
+                              mod.jax_aliases, out)
+
+    # (b) unbatched per-device puts on migration-reachable paths
+    roots = project.resolve_roots(config.migration_roots)
+    reach = project.reachable_from(roots)
+    for qual, root in reach.items():
+        fn = project.functions.get(qual)
+        if fn is not None:
+            mod = project.modules[fn.module]
+            _check_migration_puts(fn, relpath(fn.file.path), root,
+                                  mod.jax_aliases, out)
+    return out

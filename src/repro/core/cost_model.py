@@ -45,6 +45,15 @@ class HardwareSpec:
     fast_capacity: float = 16e9       # HBM bytes per chip
     slow_capacity: float = 256e9      # host DRAM bytes
 
+    @property
+    def alltoall_bw(self) -> float:
+        """Per-link inter-fast-device bandwidth for expert-parallel
+        all-to-all routing.  Uses the ICI/NVLink rate when the platform
+        has one; the paper envs are single-GPU boxes (``ici_bw=0``), so
+        a multi-GPU extrapolation of them falls back to PCIe
+        peer-to-peer at the host-link rate."""
+        return self.ici_bw if self.ici_bw > 0 else self.link_bw
+
     @staticmethod
     def paper_env1() -> "HardwareSpec":
         """Quadro RTX 6000 + Xeon Gold 6126 (paper Table 1), for replaying
@@ -186,6 +195,20 @@ def kv_read_entries(kv_len, kv_unique=None) -> float:
     if kv_unique is not None:
         return float(kv_unique)
     return float(np.sum(kv_len)) if np.ndim(kv_len) else float(kv_len)
+
+
+def alltoall_time(cfg: ModelConfig, n_remote_assignments: float,
+                  hw: HardwareSpec, n_devices: int,
+                  bytes_per_el: int = 2) -> float:
+    """Seconds one MoE layer spends exchanging dispatch activations
+    between fast devices under expert parallelism: every token routed to
+    an expert resident on another device crosses the fabric twice (the
+    dispatch all-to-all and the combine all-to-all back), and the D
+    per-device links move their shares concurrently."""
+    if n_devices <= 1 or n_remote_assignments <= 0:
+        return 0.0
+    bytes_moved = 2.0 * n_remote_assignments * cfg.d_model * bytes_per_el
+    return bytes_moved / (hw.alltoall_bw * n_devices)
 
 
 def link_idle_time(t_nonexpert: float, t_moe: float,

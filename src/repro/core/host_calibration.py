@@ -1,0 +1,112 @@
+"""One-shot host-CPU throughput calibration (engine init).
+
+The derived :class:`~repro.core.cost_model.LatencyModel` guesses the slow
+tier's GEMM rate from a hardware spec, and the slow-tier worker pool
+(core/orchestrator.py ``_host_pool``) guesses its width from
+``os.cpu_count()``.  Both guesses are wrong on shared/throttled containers.
+``calibrate_host_pool`` replaces them with measurement, mirroring the
+paper's initialization-phase microbenchmarks:
+
+* a small numpy GEMM probe measures the *achieved* host flop rate
+  (single worker), which rescales the cost model's ``cpu_per_token``;
+* the same probe is run at widths 1, 2, 4, ... across a thread pool, and
+  the worker count is set to the scaling knee — the last width whose
+  marginal speedup still clears ``KNEE_GAIN`` — so the pool never holds
+  more threads than the memory bus can feed.
+
+The probe is deliberately tiny (a few ms): it runs once per engine when
+``FiddlerEngine(calibrate_host=True)`` and never touches jax.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, replace
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import LatencyModel, expert_flops_per_token
+
+# Marginal-speedup floor: doubling the workers must buy at least this
+# factor over the previous width to keep growing the pool.
+KNEE_GAIN = 1.2
+
+# Probe GEMM geometry: big enough to exercise the BLAS kernel, small
+# enough that the whole calibration stays in the low milliseconds.
+_PROBE_TOKENS = 32
+_PROBE_DIM = 256
+_PROBE_FF = 512
+_MAX_WORKERS = 8
+
+
+@dataclass(frozen=True)
+class HostCalibration:
+    """Measured host-tier constants: the achieved GEMM flop rate of one
+    worker (``gemm_flops``), the pool width at the measured scaling knee
+    (``workers``), and the aggregate rate at that width
+    (``pool_flops``)."""
+
+    gemm_flops: float
+    workers: int
+    pool_flops: float
+
+    def apply(self, lat: LatencyModel, cfg: ModelConfig) -> LatencyModel:
+        """The latency model with its CPU GEMM term re-derived from the
+        measured aggregate rate (the slow tier runs experts across the
+        whole pool)."""
+        per_token = expert_flops_per_token(cfg) / max(self.pool_flops, 1.0)
+        return replace(lat, cpu_per_token=per_token)
+
+
+def _probe_once(x: np.ndarray, w1: np.ndarray, w2: np.ndarray) -> None:
+    ((x @ w1) @ w2).sum()
+
+
+def _time_workers(n_workers: int, reps: int, x, w1, w2) -> float:
+    """Seconds per probe GEMM with ``reps`` probes spread over
+    ``n_workers`` threads (reps ≥ n_workers, so every thread is busy)."""
+    if n_workers == 1:
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _probe_once(x, w1, w2)
+        return (time.perf_counter() - t0) / reps
+    with ThreadPoolExecutor(max_workers=n_workers) as pool:
+        t0 = time.perf_counter()
+        futs = [pool.submit(_probe_once, x, w1, w2) for _ in range(reps)]
+        for f in futs:
+            # a probe GEMM is low-ms work; a stalled worker must not hang
+            # engine init (the FID006 watchdog discipline)
+            f.result(timeout=30.0)
+        return (time.perf_counter() - t0) / reps
+
+
+def calibrate_host_pool(cfg: ModelConfig, *, max_workers: int = _MAX_WORKERS,
+                        reps: int = 8) -> HostCalibration:
+    """Run the probe and return the measured constants.  ``cfg`` only
+    feeds the flops-per-token conversion in :meth:`HostCalibration.apply`;
+    the probe geometry is fixed so calibration cost is config-independent.
+    """
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((_PROBE_TOKENS, _PROBE_DIM)).astype(np.float32)
+    w1 = rng.standard_normal((_PROBE_DIM, _PROBE_FF)).astype(np.float32)
+    w2 = rng.standard_normal((_PROBE_FF, _PROBE_DIM)).astype(np.float32)
+    flops = 2.0 * _PROBE_TOKENS * (_PROBE_DIM * _PROBE_FF * 2)
+
+    _time_workers(1, 2, x, w1, w2)  # warm the BLAS threads / caches
+    t1 = max(_time_workers(1, reps, x, w1, w2), 1e-9)
+    gemm_flops = flops / t1
+
+    workers, best_rate = 1, reps / (t1 * reps)  # probes per second / rep
+    prev_rate = 1.0 / t1
+    width = 2
+    while width <= max_workers:
+        t = max(_time_workers(width, max(reps, width * 2), x, w1, w2), 1e-9)
+        rate = 1.0 / t
+        if rate < prev_rate * KNEE_GAIN:
+            break  # marginal speedup collapsed: past the memory-bw knee
+        workers, prev_rate, best_rate = width, rate, rate
+        width *= 2
+    pool_flops = flops * best_rate if workers > 1 else gemm_flops
+    return HostCalibration(gemm_flops=gemm_flops, workers=max(2, workers),
+                           pool_flops=pool_flops)

@@ -67,6 +67,7 @@ from repro.configs.base import ModelConfig
 from repro.core.cost_model import (
     HardwareSpec,
     LatencyModel,
+    alltoall_time,
     expert_weight_bytes,
     kv_read_entries,
     link_idle_time,
@@ -78,10 +79,12 @@ from repro.core.faults import (
     HostWorkerFault,
 )
 from repro.core.placement import (
+    DevicePlacement,
     Placement,
     fast_tier_expert_budget,
     place_by_popularity,
     place_static_split,
+    to_device_placement,
 )
 from repro.core.planner import Decision, LayerPlan, plan_layer
 from repro.core.popularity import ExpertProfile, OnlineProfile, synthetic_profile
@@ -99,7 +102,12 @@ from repro.kernels.ops import (
 )
 from repro.models.model import Model
 from repro.models.moe import route
-from repro.models.paged_kv import PAGE_SIZE, PagedLayerCache, PagedSlotStage
+from repro.models.paged_kv import (
+    PAGE_SIZE,
+    GlobalPagedPool,
+    PagedLayerCache,
+    PagedSlotStage,
+)
 
 POLICIES = ("fiddler", "offload", "static_split")
 DISPATCH_MODES = ("grouped", "eager")
@@ -125,6 +133,9 @@ SWITCH_CAP = 16
 # on the bare global can construct two executors and strand one.
 _HOST_POOL: Optional[ThreadPoolExecutor] = None
 _HOST_POOL_LOCK = threading.Lock()
+# Static default worker count; the calibration probe (core/host_calibration)
+# replaces it with the measured scaling knee via set_host_pool_workers.
+_HOST_POOL_WORKERS = max(2, min(8, (os.cpu_count() or 2) - 1))
 
 
 def _shutdown_host_pool() -> None:
@@ -146,9 +157,26 @@ def _host_pool() -> ThreadPoolExecutor:
             pool = _HOST_POOL
             if pool is None:
                 pool = _HOST_POOL = ThreadPoolExecutor(
-                    max_workers=max(2, min(8, (os.cpu_count() or 2) - 1)),
+                    max_workers=_HOST_POOL_WORKERS,
                     thread_name_prefix="fiddler-slow")
     return pool
+
+
+def set_host_pool_workers(n: int) -> None:
+    """Resize the shared slow-tier worker pool (one-shot calibration —
+    core/host_calibration.py — calls this with the measured scaling knee).
+    An existing pool is torn down so the next submit rebuilds it at the
+    new width; in-flight work is never cancelled mid-layer because the
+    engine only calibrates at init, before submitting."""
+    global _HOST_POOL, _HOST_POOL_WORKERS
+    n = max(1, int(n))
+    with _HOST_POOL_LOCK:
+        if n == _HOST_POOL_WORKERS:
+            return
+        _HOST_POOL_WORKERS = n
+        if _HOST_POOL is not None:
+            _HOST_POOL.shutdown(wait=True)
+            _HOST_POOL = None
 
 
 def _faulty_worker(fn, ev, real_stall_s: float):
@@ -237,6 +265,18 @@ class Ledger:
     # requeued prefetch transfers, slot-level recoveries)
     degraded_steps: int = 0
     retries: int = 0
+    # expert-parallel serving (n_fast_devices > 1): seconds MoE layers
+    # spent exchanging dispatch/combine activations between fast devices,
+    # under the usual overlapped/exposed convention — the overlapped share
+    # hid under concurrent slow-tier work, the exposed share serialised
+    # into sim_time.  Single-device engines leave all three at zero.
+    alltoall_time: float = 0.0
+    alltoall_overlapped: float = 0.0
+    alltoall_exposed: float = 0.0
+    # per-fast-device busy seconds (compute + stream transfers charged to
+    # that device) — the utilization/balance view of an expert-parallel
+    # run.  Empty for single-device engines.
+    device_busy: List[float] = field(default_factory=list)
     # ring buffer of the most recent per-layer charges (0 disables, None
     # keeps everything — old unbounded behavior)
     layer_log_limit: Optional[int] = LAYER_LOG_LIMIT
@@ -409,10 +449,14 @@ class FiddlerEngine:
         async_prefetch: Optional[bool] = None,
         kv_layout: str = "paged",
         kv_block_size: int = PAGE_SIZE,
+        kv_global_pool: bool = False,
         prefix_cache: bool = True,
         faults: Optional[FaultInjector] = None,
         watchdog_s: float = 60.0,
         host_retries: int = 3,
+        mesh: Optional[Any] = None,
+        n_fast_devices: int = 1,
+        calibrate_host: bool = False,
     ):
         """``params=None`` → pure-simulation mode (routing drawn from the
         profile; only the ledger advances).  ``timing_cfg`` lets the real
@@ -463,7 +507,24 @@ class FiddlerEngine:
         ``watchdog_s`` bounds every host-future await in *wall-clock*
         seconds even with no injector attached (tightened to the
         injector's ``watchdog_s`` when one is); with ``faults=None`` no
-        fault ever fires and all numerics/accounting are unchanged."""
+        fault ever fires and all numerics/accounting are unchanged.
+
+        ``mesh`` / ``n_fast_devices`` make the fast tier expert-parallel
+        over D devices (docs/distributed_serving.md): the per-device
+        expert budget multiplies out to D× total residency, placement
+        generalises to devices × tiers (:class:`DevicePlacement`),
+        migrations target a named device over its own link
+        (``PrefetchQueue(n_links=D)``), and the ledger charges the
+        dispatch/combine all-to-all.  A ``jax.Mesh`` supplies D from its
+        ``model`` axis (and real-mode stacks pin to its devices);
+        ``n_fast_devices`` alone drives the pure-simulation path.  D=1 is
+        the bit-identity twin: every code path and charge is exactly
+        today's single-device engine.
+
+        ``calibrate_host=True`` runs the one-shot CPU-throughput probe
+        (core/host_calibration.py) at init: the measured GEMM rate
+        replaces the cost model's derived ``cpu_per_token`` and the host
+        worker pool is resized to the measured scaling knee."""
         assert policy in POLICIES, policy
         assert dispatch_mode in DISPATCH_MODES, dispatch_mode
         assert kv_layout in KV_LAYOUTS, kv_layout
@@ -479,10 +540,37 @@ class FiddlerEngine:
         self.dispatch_mode = dispatch_mode
         self.kv_layout = kv_layout
         self.kv_block_size = kv_block_size
+        # one global block pool with per-layer tables (models/paged_kv
+        # GlobalPagedPool) instead of worst-case-sized per-layer pools;
+        # requires uniform block geometry across layers
+        self.kv_global_pool = bool(kv_global_pool) and kv_layout == "paged"
         self.prefix_cache = bool(prefix_cache) and kv_layout == "paged"
         self.async_prefetch = (overlap if async_prefetch is None
                                else async_prefetch)
-        self._prefetch = PrefetchQueue()
+
+        # --- expert-parallel device mesh (distributed/, launch/mesh.py) ------
+        self.mesh = mesh
+        D = max(1, int(n_fast_devices))
+        if mesh is not None and n_fast_devices == 1:
+            D = int(dict(zip(mesh.axis_names, mesh.devices.shape))
+                    .get("model", 1))
+        self.n_fast_devices = D
+        self._fast_devices: Optional[List[Any]] = None
+        if D > 1:
+            devs = (list(mesh.devices.reshape(-1)) if mesh is not None
+                    else list(jax.devices()))
+            if len(devs) >= D:
+                self._fast_devices = devs[:D]
+        self._prefetch = PrefetchQueue(n_links=D)
+
+        # --- one-shot host calibration (core/host_calibration.py) ------------
+        self.host_calibration = None
+        if calibrate_host:
+            from repro.core.host_calibration import calibrate_host_pool
+            cal = calibrate_host_pool(tcfg)
+            self.host_calibration = cal
+            self.lat = cal.apply(self.lat, tcfg)
+            set_host_pool_workers(cal.workers)
 
         # --- fault injection + defenses (core/faults.py) ---------------------
         self.faults = faults
@@ -500,10 +588,16 @@ class FiddlerEngine:
         E, L = cfg.moe.n_experts, cfg.n_layers
         self.profile = profile or synthetic_profile(L, E, seed=seed)
 
-        budget = (expert_budget if expert_budget is not None
-                  else fast_tier_expert_budget(tcfg, hw))
-        budget = min(budget, L * E)
+        # ``expert_budget`` is per fast device (the HBM of one chip); the
+        # engine's total residency is budget × D
+        per_device = (expert_budget if expert_budget is not None
+                      else fast_tier_expert_budget(tcfg, hw))
+        budget = min(per_device * D, L * E)
         self.expert_budget = budget
+        self.expert_budget_per_device = per_device
+        if D > 1:
+            assert policy != "static_split", (
+                "static_split is the single-device llama.cpp baseline")
         if placement is not None:
             # explicit placement (tests / replaying a rebalanced state);
             # budget still bounds later rebalancing, so the placement must
@@ -514,7 +608,9 @@ class FiddlerEngine:
                 f"but the fast-tier budget is {budget}")
             assert policy != "static_split", (
                 "static_split derives its placement from the budget")
-            self.placement = placement
+            self.placement = (to_device_placement(placement, D,
+                                                  profile=self.profile)
+                              if D > 1 else placement)
             self.n_fast_layers = L
         elif policy == "static_split":
             n_fast_layers = min(L, budget // E)
@@ -522,6 +618,9 @@ class FiddlerEngine:
             self.n_fast_layers = n_fast_layers
         else:
             self.placement = place_by_popularity(self.profile, budget)
+            if D > 1:
+                self.placement = to_device_placement(
+                    self.placement, D, profile=self.profile)
             self.n_fast_layers = L
         self.ledger = Ledger()
         self.host_precision = host_precision
@@ -594,10 +693,21 @@ class FiddlerEngine:
         return HostExpert(*(np.asarray(m) for m in w),
                           precision=self.host_precision)
 
-    def _make_stack(self, li: int, ids: List[int]) -> _FastStack:
+    def _device_target(self, device: int):
+        """The jax device backing fast-tier device ``device``, when the
+        process actually has one per modelled device (a mesh / forced
+        host-device tests); otherwise None → the default device carries
+        every modelled device's weights (accounting still splits them)."""
+        if self._fast_devices is None:
+            return None
+        return self._fast_devices[device % len(self._fast_devices)]
+
+    def _make_stack(self, li: int, ids: List[int],
+                    device: int = 0) -> _FastStack:
         """Build layer ``li``'s stacked device pool for experts ``ids``
         (rows derived from the original fp32 params; slots padded to a
-        power of two)."""
+        power of two), pinned to fast device ``device`` when the process
+        has one per modelled device."""
         cfg = self.cfg
         d, f = cfg.d_model, cfg.d_ff
         cap = _bucket(max(len(ids), 1))
@@ -607,16 +717,39 @@ class FiddlerEngine:
         for s, e in enumerate(ids):
             g, u, dn = self._expert_weights(li, e)
             wg[s], wu[s], wd[s] = np.asarray(g), np.asarray(u), np.asarray(dn)
-        return _FastStack(ids, jax.device_put(wg), jax.device_put(wu),
-                          jax.device_put(wd))
+        tgt = self._device_target(device)
+        put = (jax.device_put if tgt is None
+               else (lambda a: jax.device_put(a, tgt)))
+        return _FastStack(ids, put(wg), put(wu), put(wd))
+
+    @property
+    def fast_stack(self) -> List[_FastStack]:
+        """Device-0 view of the per-layer stacks (the whole fast tier for
+        single-device engines — kept as the historical attribute name)."""
+        return [devs[0] for devs in self.fast_stacks]
+
+    def _resident_stack(self, li: int, e: int) -> Optional[_FastStack]:
+        """The per-device stack holding resident expert ``e`` of layer
+        ``li`` (None if not resident on any fast device)."""
+        for st in self.fast_stacks[li]:
+            if e in st.slot:
+                return st
+        return None
 
     def _fast_weights(self, li: int, e: int) -> Tuple[jnp.ndarray, ...]:
         """Device weights of a fast-tier-executable expert: a row of the
         resident stack, or the LRU pool of previously-streamed experts."""
-        st = self.fast_stack[li]
-        if e in st.slot:
+        st = self._resident_stack(li, e)
+        if st is not None:
             return st.weights(e)
         return self._lru_pool[(li, e)]
+
+    def _device_of_expert(self, li: int, e: int) -> int:
+        """Fast device assigned to a resident (layer, expert) by the
+        placement; device 0 for plain single-device placements."""
+        if isinstance(self.placement, DevicePlacement):
+            return max(0, int(self.placement.device[li, e]))
+        return 0
 
     def _split_params(self, params) -> None:
         blocks = params["blocks"][0]
@@ -624,16 +757,20 @@ class FiddlerEngine:
         self.layer_params = [
             jax.tree.map(lambda a, i=i: a[i], blocks) for i in range(L)]
         self.top_params = {k: v for k, v in params.items() if k != "blocks"}
-        self.fast_stack: List[_FastStack] = []
+        D = self.n_fast_devices
+        self.fast_stacks: List[List[_FastStack]] = []
         self.slow_pool: List[Dict[int, HostExpert]] = []
         for li in range(L):
-            ids, slow = [], {}
+            ids: List[List[int]] = [[] for _ in range(D)]
+            slow: Dict[int, HostExpert] = {}
             for e in range(self.cfg.moe.n_experts):
                 if self.placement.on_fast[li, e]:
-                    ids.append(e)   # device-resident
+                    ids[self._device_of_expert(li, e)].append(e)
                 else:
                     slow[e] = self._make_slow_expert(li, e)
-            self.fast_stack.append(self._make_stack(li, ids))
+            self.fast_stacks.append(
+                [self._make_stack(li, ids[dv], device=dv)
+                 for dv in range(D)])
             self.slow_pool.append(slow)
 
     # -- decision per policy ---------------------------------------------------
@@ -731,13 +868,98 @@ class FiddlerEngine:
         self._fault_step_dirty = True
         return LayerPlan(dec, est_fast, 0.0, est_stream)
 
+    def _device_moe_times(self, li: int, plan: LayerPlan,
+                          counts: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray, float]:
+        """Expert-parallel decomposition of one layer's fast-tier work:
+        per-device compute seconds, per-device stream-link seconds, and
+        the expected number of expert assignments whose tokens cross the
+        fabric.  Tokens are data-parallel over the D fast devices while a
+        resident expert lives on exactly one of them, so (D-1)/D of each
+        fast assignment's tokens arrive through the all-to-all."""
+        D = self.n_fast_devices
+        gl = self.lat.gpu_lat(counts)
+        fast_t = np.zeros(D)
+        stream_t = np.zeros(D)
+        remote = 0.0
+        dev_row = (np.asarray(self.placement.device[li])
+                   if isinstance(self.placement, DevicePlacement) else None)
+        tl = self.lat.transfer_lat()
+        rr = 0  # round-robin for experts without a placed device
+        for e in np.nonzero(counts)[0]:
+            dec = Decision(plan.decisions[e])
+            if dec == Decision.FAST_RESIDENT:
+                if dev_row is not None and dev_row[e] >= 0:
+                    dv = int(dev_row[e])
+                else:  # LRU-cached streamed expert: no home device
+                    dv = rr % D
+                    rr += 1
+            elif dec == Decision.FAST_STREAM:
+                dv = rr % D
+                rr += 1
+                stream_t[dv] += tl
+            else:
+                continue
+            fast_t[dv] += float(gl[e])
+            remote += float(counts[e]) * (D - 1) / D
+        return fast_t, stream_t, remote
+
+    def _device_nonexpert_time(self, n_tokens: int, kv_len, tier: str,
+                               kv_unique: Optional[float]) -> float:
+        """Data-parallel non-expert time: each fast device runs attention
+        over its contiguous share of the live slots (the backend maps
+        slots to devices block-contiguously), and the layer waits for the
+        slowest share."""
+        D = self.n_fast_devices
+        if np.ndim(kv_len):
+            kv = np.asarray(kv_len)
+            total = float(kv.sum()) or 1.0
+            t = 0.0
+            for c in np.array_split(kv, D):
+                if c.size == 0:
+                    continue
+                ku = (kv_unique * float(c.sum()) / total
+                      if kv_unique is not None else None)
+                t = max(t, nonexpert_layer_time(self.tcfg, self.hw, c.size,
+                                                c, tier, kv_unique=ku))
+            return t
+        nt = -(-int(n_tokens) // D)
+        ku = kv_unique / D if kv_unique is not None else None
+        return nonexpert_layer_time(self.tcfg, self.hw, nt, kv_len, tier,
+                                    kv_unique=ku)
+
     def _charge(self, li: int, plan: LayerPlan, n_tokens: int,
-                kv_len: int, kv_unique: Optional[float] = None) -> None:
+                kv_len: int, kv_unique: Optional[float] = None,
+                counts: Optional[np.ndarray] = None) -> None:
         tier = ("fast" if (self.policy != "static_split"
                            or li < self.n_fast_layers) else "slow")
-        t_nonexp = nonexpert_layer_time(self.tcfg, self.hw, n_tokens,
-                                        kv_len, tier, kv_unique=kv_unique)
-        t_moe = plan.est_overlapped if self.overlap else plan.est_total
+        D = self.n_fast_devices
+        a2a = a2a_exposed = 0.0
+        fast_t = stream_t = None
+        if D > 1 and counts is not None:
+            # expert-parallel layer time: every device runs its own
+            # residents concurrently; the all-to-all rides the fast-tier
+            # critical path, so only the share that sticks out past the
+            # concurrent slow-tier work is exposed
+            t_nonexp = self._device_nonexpert_time(n_tokens, kv_len, tier,
+                                                   kv_unique)
+            fast_t, stream_t, remote = self._device_moe_times(
+                li, plan, counts)
+            t_fast = float(fast_t.max())
+            t_stream = float(stream_t.max())
+            a2a = alltoall_time(self.tcfg, remote, self.hw, D)
+            if self.overlap:
+                base = max(t_fast + t_stream, plan.est_slow_time)
+                t_moe = max(t_fast + t_stream + a2a, plan.est_slow_time)
+            else:
+                base = t_fast + t_stream + plan.est_slow_time
+                t_moe = base + a2a
+            a2a_exposed = t_moe - base
+        else:
+            t_nonexp = nonexpert_layer_time(self.tcfg, self.hw, n_tokens,
+                                            kv_len, tier,
+                                            kv_unique=kv_unique)
+            t_moe = plan.est_overlapped if self.overlap else plan.est_total
         if len(self._prefetch):
             # an in-flight promotion whose expert executes at this layer
             # must land first: the remainder of its transfer serialises
@@ -749,6 +971,16 @@ class FiddlerEngine:
                 self.ledger.sim_time += exposed
                 self.ledger.migration_exposed += exposed
         self.ledger.sim_time += t_nonexp + t_moe
+        if D > 1 and fast_t is not None:
+            led = self.ledger
+            led.alltoall_time += a2a
+            led.alltoall_exposed += a2a_exposed
+            led.alltoall_overlapped += a2a - a2a_exposed
+            if not led.device_busy:
+                led.device_busy = [0.0] * D
+            for dv in range(D):
+                led.device_busy[dv] += (
+                    t_nonexp + float(fast_t[dv] + stream_t[dv]))
         if len(self._prefetch):
             # the rest of the backlog rides the link while this layer's
             # compute keeps the clock busy (minus FAST_STREAM link use)
@@ -804,25 +1036,37 @@ class FiddlerEngine:
         compounded by cycles)."""
         if self.model is not None:
             for li, e in plan.demotes:
-                self.fast_stack[li].demote(e)
+                st = self._resident_stack(li, e)
+                assert st is not None, (li, e)
+                st.demote(e)
                 self.slow_pool[li][e] = self._make_slow_expert(li, e)
-            # the actual slow→fast transfer, batched: ONE device_put of
-            # the whole plan's weight pytree — a single link transaction
-            # instead of one per expert (fewer transactions is also less
-            # fault surface for the link circuit breaker to cover)
-            moved = jax.device_put(
-                [self._expert_weights(li, e) for li, e in plan.promotes])
-            for (li, e), w in zip(plan.promotes, moved):
-                self.slow_pool[li].pop(e)
-                # the stack grows in place (one row write), doubling its
-                # device capacity first when the padded slots are
-                # exhausted
-                st = self.fast_stack[li]
-                if not st.promote(e, w):
-                    st = st.grown(_bucket(len(st.ids) + 1))
-                    self.fast_stack[li] = st
-                    promoted = st.promote(e, w)
-                    assert promoted, (li, e)
+            # the actual slow→fast transfer, batched per target device:
+            # ONE device_put of each device's share of the plan's weight
+            # pytree — one link transaction per link in use, never one
+            # per expert (fewer transactions is also less fault surface
+            # for the link circuit breaker to cover).  Single-device
+            # plans keep the historical single batched put.
+            by_dev: Dict[int, List[Tuple[int, int]]] = {}
+            for i, (li, e) in enumerate(plan.promotes):
+                by_dev.setdefault(plan.device_of(i), []).append((li, e))
+            for dv in sorted(by_dev):
+                group = by_dev[dv]
+                batch = [self._expert_weights(li, e) for li, e in group]
+                tgt = self._device_target(dv)
+                moved = (jax.device_put(batch) if tgt is None
+                         else jax.device_put(batch, tgt))
+                for (li, e), w in zip(group, moved):
+                    self.slow_pool[li].pop(e)
+                    # the stack grows in place (one row write), doubling
+                    # its device capacity first when the padded slots are
+                    # exhausted
+                    stacks = self.fast_stacks[li]
+                    st = stacks[dv % len(stacks)]
+                    if not st.promote(e, w):
+                        st = st.grown(_bucket(len(st.ids) + 1))
+                        stacks[dv % len(stacks)] = st
+                        promoted = st.promote(e, w)
+                        assert promoted, (li, e)
         self.placement = apply_plan(self.placement, plan)
         n = plan.n_swaps
         cost = n * self.lat.transfer_lat()
@@ -836,9 +1080,11 @@ class FiddlerEngine:
             # first (PR 4 follow-on — prefetch *ordering*)
             probs = (self.rebalancer.profile.probabilities()
                      if self.rebalancer is not None else None)
-            for li, e in plan.promotes:
+            for i, (li, e) in enumerate(plan.promotes):
                 w = float(probs[li, e]) if probs is not None else 0.0
-                self._prefetch.push(li, e, self.lat.transfer_lat(), weight=w)
+                # each promotion rides the host link of its target device
+                self._prefetch.push(li, e, self.lat.transfer_lat(),
+                                    weight=w, link=plan.device_of(i))
         else:
             self.ledger.sim_time += cost
             self.ledger.migration_exposed += cost
@@ -1088,15 +1334,18 @@ class FiddlerEngine:
             span = order[bounds[gi]: bounds[gi + 1]]
             segs[int(e)] = (span // k, span % k)
 
-        st = self.fast_stack[li]
-        resident, extra, slow = [], [], []
+        sts = self.fast_stacks[li]
+        resident: List[List[int]] = [[] for _ in sts]
+        extra, slow = [], []
         extra_w: Dict[int, Tuple[jnp.ndarray, ...]] = {}
         for e in uniq:
             e = int(e)
             dec = Decision(plan.decisions[e])
             if dec == Decision.FAST_RESIDENT:
-                if e in st.slot:
-                    resident.append(e)
+                for di, st in enumerate(sts):
+                    if e in st.slot:
+                        resident[di].append(e)
+                        break
                 else:  # LRU-cached previously-streamed expert
                     extra.append(e)
                     extra_w[e] = self._lru_pool[(li, e)]
@@ -1160,11 +1409,16 @@ class FiddlerEngine:
             for n in sorted(large):
                 _launch(large[n], fn, uniform=True)
 
-        def _gather_fn(xs, cnt, group, gp):
-            slots = np.array([st.slot[e] for e in group]
-                             + [0] * (gp - len(group)), np.int32)
-            return grouped_gather_mlp_op(xs, jnp.asarray(slots),
-                                         st.wg, st.wu, st.wd, cnt)
+        def _gather_for(st):
+            # one grouped launch per device stack: each modelled fast
+            # device runs exactly its own resident experts (expert
+            # parallelism); D=1 reduces to the historical single launch
+            def _gather_fn(xs, cnt, group, gp):
+                slots = np.array([st.slot[e] for e in group]
+                                 + [0] * (gp - len(group)), np.int32)
+                return grouped_gather_mlp_op(xs, jnp.asarray(slots),
+                                             st.wg, st.wu, st.wd, cnt)
+            return _gather_fn
 
         def _stacked_fn(xs, cnt, group, gp):
             trips = [extra_w[e] for e in group]
@@ -1174,7 +1428,8 @@ class FiddlerEngine:
                 jnp.stack([t[1] for t in trips]),
                 jnp.stack([t[2] for t in trips]), cnt)
 
-        _dispatch(resident, _gather_fn)
+        for st, group in zip(sts, resident):
+            _dispatch(group, _gather_for(st))
         _dispatch(extra, _stacked_fn)
         if slow and not self.overlap:
             for e in slow:
@@ -1260,9 +1515,23 @@ class FiddlerEngine:
 
     # -- slot-based serving path (continuous batching) ---------------------------
     def make_decode_caches(self, n_slots: int, max_seq: int) -> List[Any]:
-        """Per-layer multi-slot KV caches for continuous batching."""
-        caches = [self._init_layer_cache(li, n_slots, max_seq)
-                  for li in range(self.cfg.n_layers)]
+        """Per-layer multi-slot KV caches for continuous batching.  With
+        ``kv_global_pool`` (and uniform block geometry) every layer's
+        table draws from ONE shared block pool + device store, so KV
+        capacity is a fungible model-wide budget instead of worst-case
+        per layer."""
+        if (self.kv_global_pool
+                and GlobalPagedPool.shareable(self.cfg, max_seq,
+                                              self.kv_block_size)):
+            shared = GlobalPagedPool.for_model(
+                self.cfg, n_slots, max_seq, jnp.float32, self.kv_block_size)
+            caches: List[Any] = [
+                PagedLayerCache(self.cfg, li, n_slots, max_seq, jnp.float32,
+                                block_size=self.kv_block_size, shared=shared)
+                for li in range(self.cfg.n_layers)]
+        else:
+            caches = [self._init_layer_cache(li, n_slots, max_seq)
+                      for li in range(self.cfg.n_layers)]
         if self.prefix_cache:
             for c in caches:
                 c.meta.enable_prefix_cache()
@@ -1494,7 +1763,7 @@ class FiddlerEngine:
                     else np.nonzero(np.asarray(row_mask, bool))[0])
             kv_unique = cache.meta.unique_tokens(live)
         self._charge(li, plan, n_tokens=n_real, kv_len=kv_len,
-                     kv_unique=kv_unique)
+                     kv_unique=kv_unique, counts=counts)
         x = x + moe_out.reshape(B, S, d)
         return x, cache
 
@@ -1511,7 +1780,8 @@ class FiddlerEngine:
         for li in range(self.cfg.n_layers):
             counts = self._sample_counts(li, n_tokens)
             plan = self._decide(li, counts)
-            self._charge(li, plan, n_tokens=n_tokens, kv_len=n_tokens)
+            self._charge(li, plan, n_tokens=n_tokens, kv_len=n_tokens,
+                         counts=counts)
         self.ledger.ttft = self.ledger.sim_time - t0
         return self.ledger.ttft
 
@@ -1528,7 +1798,7 @@ class FiddlerEngine:
                     counts = self._sample_counts(li, per_pass)
                     plan = self._decide(li, counts)
                     self._charge(li, plan, n_tokens=per_pass,
-                                 kv_len=kv_lens)
+                                 kv_len=kv_lens, counts=counts)
             self.ledger.tokens_out += 1
         return self.ledger.sim_time - t0
 
@@ -1576,7 +1846,8 @@ class FiddlerEngine:
         for li in range(self.cfg.n_layers):
             counts = self._sample_counts(li, n_tokens)
             plan = self._decide(li, counts)
-            self._charge(li, plan, n_tokens=n_tokens, kv_len=kv_len)
+            self._charge(li, plan, n_tokens=n_tokens, kv_len=kv_len,
+                         counts=counts)
         self._absorb_prefill(self.ledger.sim_time - t0)
         return self.ledger.sim_time - t0
 
@@ -1599,7 +1870,7 @@ class FiddlerEngine:
             counts = self._sample_counts(li, n)
             plan = self._decide(li, counts)
             self._charge(li, plan, n_tokens=n, kv_len=kv_lens,
-                         kv_unique=kv_unique)
+                         kv_unique=kv_unique, counts=counts)
         self.ledger.tokens_out += n
         return self.ledger.sim_time - t0
 

@@ -28,6 +28,57 @@ class Placement:
         return int(self.on_fast.sum())
 
 
+@dataclass(frozen=True)
+class DevicePlacement(Placement):
+    """Placement generalised from two tiers to *devices × tiers*:
+    ``device[l, e]`` names the fast-tier device (0..D-1) holding a
+    resident expert, -1 for slow-tier experts.  A plain :class:`Placement`
+    is the D=1 special case (every resident expert on device 0)."""
+
+    device: np.ndarray  # (n_layers, n_experts) int16, -1 = slow tier
+
+    def __post_init__(self):
+        assert self.device.shape == self.on_fast.shape, (
+            self.device.shape, self.on_fast.shape)
+        assert bool(np.all((self.device >= 0) == self.on_fast)), \
+            "device must be >= 0 exactly on resident experts"
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.device.max()) + 1 if self.on_fast.any() else 1
+
+    def device_counts(self, n_devices: int | None = None) -> np.ndarray:
+        """Resident experts per device (the per-device budget check)."""
+        D = n_devices if n_devices is not None else self.n_devices
+        return np.bincount(self.device[self.device >= 0].ravel(),
+                           minlength=D)
+
+
+def to_device_placement(p: Placement, n_devices: int = 1,
+                        profile: ExpertProfile | None = None
+                        ) -> DevicePlacement:
+    """Assign a two-tier placement's resident experts to fast devices,
+    round-robin in descending popularity order (uniform order without a
+    profile) — the most popular experts spread across devices, so the
+    expert-parallel all-to-all load stays balanced."""
+    if isinstance(p, DevicePlacement):
+        return p
+    L, E = p.on_fast.shape
+    flat_on = p.on_fast.reshape(-1)
+    if profile is not None:
+        order = np.argsort(-profile.probabilities().reshape(-1),
+                           kind="stable")
+    else:
+        order = np.arange(L * E)
+    device = np.full(L * E, -1, np.int16)
+    k = 0
+    for idx in order:
+        if flat_on[idx]:
+            device[idx] = k % n_devices
+            k += 1
+    return DevicePlacement(p.on_fast, device.reshape(L, E))
+
+
 def non_expert_bytes(cfg: ModelConfig, bytes_per_param: int = 2) -> int:
     """Attention + norms + embeddings — always fast-tier (paper §3.1)."""
     moe = cfg.moe
@@ -69,6 +120,17 @@ def place_by_popularity(profile: ExpertProfile, budget: int) -> Placement:
     on = np.zeros(L * E, bool)
     on[order[: min(budget, L * E)]] = True
     return Placement(on.reshape(L, E))
+
+
+def place_by_popularity_devices(profile: ExpertProfile,
+                                budget_per_device: int,
+                                n_devices: int) -> DevicePlacement:
+    """Devices × tiers greedy placement: the ``budget_per_device × D``
+    most popular (layer, expert) pairs go fast-tier, assigned to devices
+    round-robin in popularity order — each device ends up with exactly
+    its budget (±1) and a balanced share of the hot experts."""
+    base = place_by_popularity(profile, budget_per_device * n_devices)
+    return to_device_placement(base, n_devices, profile=profile)
 
 
 def place_random(n_layers: int, n_experts: int, budget: int,

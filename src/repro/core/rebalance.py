@@ -41,7 +41,11 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.placement import Placement, place_by_popularity
+from repro.core.placement import (
+    DevicePlacement,
+    Placement,
+    place_by_popularity,
+)
 from repro.core.popularity import OnlineProfile
 
 
@@ -52,13 +56,19 @@ class MigrationPlan:
     residency.  ``est_gain`` is the expected fast-tier hit-rate gain
     (mean over layers) under the live profile; ``transfer_bytes`` /
     ``est_transfer_s`` are the promotion cost the ledger must be charged
-    (demotions are free)."""
+    (demotions are free).  ``devices[i]`` names the fast device promotion
+    ``i`` streams to (empty = everything to device 0, the single-device
+    plan shape)."""
 
     promotes: Tuple[Tuple[int, int], ...]   # (layer, expert) slow → fast
     demotes: Tuple[Tuple[int, int], ...]    # (layer, expert) fast → slow
     est_gain: float
     transfer_bytes: int
     est_transfer_s: float
+    devices: Tuple[int, ...] = ()           # target fast device per promote
+
+    def device_of(self, i: int) -> int:
+        return self.devices[i] if self.devices else 0
 
     @property
     def n_swaps(self) -> int:
@@ -146,10 +156,16 @@ class Rebalancer:
         if not promotes:
             return None
         n = len(promotes)
+        # devices × tiers: each promotion streams to the device its paired
+        # demotion vacates, so per-device budgets are invariant under the
+        # swap (two-tier placements put everything on device 0)
+        devices: Tuple[int, ...] = ()
+        if isinstance(placement, DevicePlacement):
+            devices = tuple(int(placement.device[de]) for de in demotes)
         return MigrationPlan(
             promotes=tuple(promotes), demotes=tuple(demotes),
             est_gain=gain, transfer_bytes=n * self.expert_bytes,
-            est_transfer_s=n * self.transfer_lat)
+            est_transfer_s=n * self.transfer_lat, devices=devices)
 
 
 @dataclass
@@ -165,6 +181,7 @@ class _Pending:
     remaining: float
     weight: float = 0.0
     total: float = 0.0
+    link: int = 0          # host↔device link (fast device) transmitting it
 
     def __post_init__(self):
         if self.total <= 0.0:
@@ -190,73 +207,97 @@ class PrefetchQueue:
     descending, so the promotion most likely to be routed next lands
     first and is least likely to be forced into exposed serial time.
     Equal weights (and the default ``weight=0``) preserve FIFO.
+
+    **Per-link accounting** (``n_links > 1``): every fast device has its
+    own host↔device DMA link, so a mesh engine runs one serial queue per
+    link and drains them *concurrently* — one layer's idle window hides
+    up to ``n_links × idle`` link-seconds.  ``push(..., link=d)`` routes
+    a promotion onto its target device's link; forcing a transfer only
+    serialises the entries ahead of it on the *same* link.  The default
+    ``n_links=1`` is byte-for-byte the single-device queue.
     """
 
-    def __init__(self) -> None:
-        self._q: List[_Pending] = []
+    def __init__(self, n_links: int = 1) -> None:
+        assert n_links >= 1, n_links
+        self.n_links = n_links
+        self._links: List[List[_Pending]] = [[] for _ in range(n_links)]
         # transfers completed since the last pop_completed() — the
         # engine's post-transfer verification hook (docs/resilience.md)
         self.completed: List[_Pending] = []
 
+    @property
+    def _q(self) -> List[_Pending]:
+        """Flattened in-flight view (link-major), for introspection."""
+        return [p for q in self._links for p in q]
+
     def __len__(self) -> int:
-        return len(self._q)
+        return sum(len(q) for q in self._links)
 
     @property
     def backlog(self) -> float:
         """Link-seconds of transfer still in flight."""
-        return sum(p.remaining for p in self._q)
+        return sum(p.remaining for q in self._links for p in q)
 
     def push(self, layer: int, expert: int, seconds: float,
-             weight: float = 0.0) -> None:
+             weight: float = 0.0, link: int = 0) -> None:
+        link = int(link) % self.n_links
         item = _Pending(int(layer), int(expert), float(seconds),
-                        float(weight))
+                        float(weight), link=link)
         # stable descending insert: after every entry with weight >= ours,
         # so equal weights (including the default 0) keep arrival order.
         # A part-sent head that gets displaced is simply paused — the
         # remaining link-seconds are conserved, so the ledger accounting
         # is unchanged.
-        i = len(self._q)
-        while i > 0 and self._q[i - 1].weight < item.weight:
+        q = self._links[link]
+        i = len(q)
+        while i > 0 and q[i - 1].weight < item.weight:
             i -= 1
-        self._q.insert(i, item)
+        q.insert(i, item)
 
     def force(self, layer: int, used) -> float:
         """Complete every pending transfer targeting ``layer`` whose
         expert is in ``used`` (it executes *now*, so the rest of its
-        transfer serialises).  FIFO ordering: everything queued ahead of
-        a forced transfer must finish first — the link is serial.
-        Returns the exposed seconds."""
-        last = -1
-        for i, p in enumerate(self._q):
-            if p.layer == layer and p.expert in used:
-                last = i
-        if last < 0:
-            return 0.0
-        exposed = sum(p.remaining for p in self._q[: last + 1])
-        self.completed.extend(self._q[: last + 1])
-        del self._q[: last + 1]
+        transfer serialises).  FIFO ordering per link: everything queued
+        ahead of a forced transfer on its own link must finish first —
+        each link is serial.  Returns the exposed link-seconds (summed
+        over links, so ``overlapped + exposed == pushed`` stays exact)."""
+        exposed = 0.0
+        for q in self._links:
+            last = -1
+            for i, p in enumerate(q):
+                if p.layer == layer and p.expert in used:
+                    last = i
+            if last < 0:
+                continue
+            exposed += sum(p.remaining for p in q[: last + 1])
+            self.completed.extend(q[: last + 1])
+            del q[: last + 1]
         return exposed
 
     def drain(self, idle: float) -> float:
-        """Consume up to ``idle`` link-seconds FIFO; returns the
-        overlapped seconds actually hidden."""
+        """Consume up to ``idle`` link-seconds on *each* link (the links
+        transmit concurrently under the same idle window); returns the
+        overlapped link-seconds actually hidden."""
         overlapped = 0.0
-        while self._q and idle > 0.0:
-            p = self._q[0]
-            d = min(p.remaining, idle)
-            p.remaining -= d
-            idle -= d
-            overlapped += d
-            if p.remaining <= 1e-15:
-                self.completed.append(self._q.pop(0))
+        for q in self._links:
+            budget = idle
+            while q and budget > 0.0:
+                p = q[0]
+                d = min(p.remaining, budget)
+                p.remaining -= d
+                budget -= d
+                overlapped += d
+                if p.remaining <= 1e-15:
+                    self.completed.append(q.pop(0))
         return overlapped
 
     def flush(self) -> float:
         """Complete everything now (serialising); returns exposed
-        seconds."""
+        link-seconds."""
         exposed = self.backlog
-        self.completed.extend(self._q)
-        self._q.clear()
+        for q in self._links:
+            self.completed.extend(q)
+            q.clear()
         return exposed
 
     def pop_completed(self) -> List[_Pending]:
@@ -269,7 +310,8 @@ class PrefetchQueue:
 
 def apply_plan(placement: Placement, plan: MigrationPlan) -> Placement:
     """The placement after ``plan``'s swaps (pure; engines charge the
-    transfer cost separately)."""
+    transfer cost separately).  Device placements keep their device map:
+    each promotion lands on ``plan.device_of(i)``."""
     on = placement.on_fast.copy()
     for le in plan.demotes:
         assert on[le], f"demote of non-resident expert {le}"
@@ -277,4 +319,11 @@ def apply_plan(placement: Placement, plan: MigrationPlan) -> Placement:
     for le in plan.promotes:
         assert not on[le], f"promote of already-resident expert {le}"
         on[le] = True
+    if isinstance(placement, DevicePlacement):
+        dev = placement.device.copy()
+        for le in plan.demotes:
+            dev[le] = -1
+        for i, le in enumerate(plan.promotes):
+            dev[le] = plan.device_of(i)
+        return DevicePlacement(on, dev)
     return Placement(on)

@@ -1,0 +1,160 @@
+"""Expert-parallel fused MoE dispatch under ``shard_map`` (mesh serving).
+
+The serving engine's per-device grouped launches (core/orchestrator.py
+``_execute_grouped``) model expert parallelism one device stack at a
+time — correct and bit-stable, but each launch is a separate dispatch.
+This module is the fused form the mesh runs when every fast device is a
+real jax device: stacked expert weights sharded over the ``model`` axis
+(``E/D`` experts per device), tokens sharded over the same axis, and one
+``shard_map`` body that
+
+1. buckets each local token-assignment into a capacity-``C`` send buffer
+   addressed ``(dest device, local expert, slot)``,
+2. exchanges buffers with ``lax.all_to_all`` (the dispatch hop),
+3. runs ONE grouped gated-MLP einsum over the device's local expert
+   shard — zero-padded rows produce exactly-zero outputs, so padding
+   never contaminates the combine,
+4. reverses the all-to-all (the combine hop) and scatters each
+   assignment's output back to its token, scaled by the router gate.
+
+Rows beyond an expert's capacity are dropped (the classic capacity
+discipline); callers that need exactness pass ``capacity`` ≥ the true
+max bucket size — ``expert_parallel_moe`` defaults to computing that
+bound from the concrete assignments.
+
+The cost model charges the two hops via
+``core.cost_model.alltoall_time``; this module is the executable
+counterpart, validated by tests/test_mesh_serving.py against the dense
+reference on forced host devices.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def expert_shard_spec(axis: str = "model") -> P:
+    """PartitionSpec of a stacked expert weight triple ``(E, d, f)`` /
+    ``(E, f, d)``: experts sharded over the mesh's model axis."""
+    return P(axis, None, None)
+
+
+def mesh_model_size(mesh, axis: str = "model") -> int:
+    return int(dict(zip(mesh.axis_names, mesh.devices.shape)).get(axis, 1))
+
+
+def check_expert_divisibility(n_experts: int, mesh, axis: str = "model"
+                              ) -> int:
+    """Experts per device, asserting the shard is exact — a ragged expert
+    shard would silently skew the all-to-all load."""
+    D = mesh_model_size(mesh, axis)
+    assert n_experts % D == 0, (
+        f"{n_experts} experts do not shard evenly over {axis}={D}")
+    return n_experts // D
+
+
+def shard_expert_stack(mesh, wg: jnp.ndarray, wu: jnp.ndarray,
+                       wd: jnp.ndarray, axis: str = "model"
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Place a stacked expert triple on the mesh, experts sharded over
+    ``axis`` (round-trips through ``expert_shard_spec``)."""
+    check_expert_divisibility(wg.shape[0], mesh, axis)
+    sh = NamedSharding(mesh, expert_shard_spec(axis))
+    return (jax.device_put(wg, sh), jax.device_put(wu, sh),
+            jax.device_put(wd, sh))
+
+
+def pad_tokens(x: np.ndarray, idx: np.ndarray, gates: np.ndarray, d: int
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pad the token dim to a multiple of ``d`` with zero-gated rows
+    routed to expert 0 (their outputs are scaled by gate 0, so padding
+    never changes the combine).  Returns the padded triple + original T."""
+    T = x.shape[0]
+    pad = (-T) % d
+    if pad == 0:
+        return x, idx, gates, T
+    x = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
+    idx = np.concatenate([idx, np.zeros((pad,) + idx.shape[1:], idx.dtype)])
+    gates = np.concatenate(
+        [gates, np.zeros((pad,) + gates.shape[1:], gates.dtype)])
+    return x, idx, gates, T
+
+
+def expert_parallel_moe(mesh, x, idx, gates, wg, wu, wd, *,
+                        axis: str = "model",
+                        capacity: Optional[int] = None,
+                        act=jax.nn.silu) -> jnp.ndarray:
+    """Fused expert-parallel MoE layer: ``x`` (T, d) tokens, ``idx`` /
+    ``gates`` (T, k) router output, ``wg``/``wu`` (E, d, f) and ``wd``
+    (E, f, d) stacked over ALL experts.  Returns (T, d) ==
+    ``sum_k gates[t, k] · MLP_{idx[t, k]}(x[t])``.
+
+    T must divide by the mesh's ``axis`` size (see :func:`pad_tokens`);
+    experts must too (:func:`check_expert_divisibility`).
+    """
+    D = mesh_model_size(mesh, axis)
+    E = int(wg.shape[0])
+    e_loc = check_expert_divisibility(E, mesh, axis)
+    T, k = idx.shape
+    assert T % D == 0, f"{T} tokens do not shard evenly over {axis}={D}"
+    if capacity is None:
+        # exact per-(source, expert) worst case from the concrete routing
+        counts = np.bincount(np.asarray(idx).reshape(-1), minlength=E)
+        capacity = max(int(counts.max()), 1)
+    C = int(capacity)
+    dmodel = int(x.shape[1])
+
+    def body(xs, idxs, gs, wg_l, wu_l, wd_l):
+        tl = xs.shape[0]
+        flat_e = idxs.reshape(-1)                       # (tl·k,)
+        dest = flat_e // e_loc                          # target device
+        loc = flat_e % e_loc                            # local expert there
+        # slot within each (dest, loc) bucket: running count via one-hot
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        slot = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=1) - 1
+        rows = jnp.repeat(jnp.arange(tl), k)
+        buf = jnp.zeros((D, e_loc, C, dmodel), xs.dtype)
+        # over-capacity writes fall out of bounds and are dropped
+        buf = buf.at[dest, loc, slot].set(xs[rows], mode="drop")
+        recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=True)
+        hs = recv.transpose(1, 0, 2, 3).reshape(e_loc, D * C, dmodel)
+        a = jnp.einsum("ecd,edf->ecf", hs, wg_l)
+        u = jnp.einsum("ecd,edf->ecf", hs, wu_l)
+        ys = jnp.einsum("ecf,efd->ecd", act(a) * u, wd_l)
+        ys = ys.reshape(e_loc, D, C, dmodel).transpose(1, 0, 2, 3)
+        back = jax.lax.all_to_all(ys, axis, 0, 0, tiled=True)
+        ye = back[dest, loc, jnp.clip(slot, 0, C - 1)]
+        keep = (slot < C)[:, None]
+        ye = jnp.where(keep, ye, 0.0)
+        out = jnp.zeros_like(xs)
+        return out.at[rows].add(gs.reshape(-1)[:, None] * ye)
+
+    tok = P(axis, None)
+    wspec = expert_shard_spec(axis)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(tok, tok, tok, wspec, wspec, wspec),
+                   out_specs=tok, check_rep=False)
+    return fn(jnp.asarray(x), jnp.asarray(idx, jnp.int32),
+              jnp.asarray(gates), jnp.asarray(wg), jnp.asarray(wu),
+              jnp.asarray(wd))
+
+
+def dense_reference_moe(x, idx, gates, wg, wu, wd, act=jax.nn.silu
+                        ) -> jnp.ndarray:
+    """Unsharded reference for the fused path (tests): the same combine,
+    one expert at a time."""
+    x = jnp.asarray(x)
+    idx_np = np.asarray(idx)
+    gates = jnp.asarray(gates)
+    out = jnp.zeros_like(x)
+    for e in np.unique(idx_np.reshape(-1)):
+        rows, kpos = np.nonzero(idx_np == e)
+        xe = x[rows]
+        ye = (act(xe @ wg[e]) * (xe @ wu[e])) @ wd[e]
+        out = out.at[rows].add(gates[rows, kpos][:, None] * ye)
+    return out

@@ -249,3 +249,29 @@ def cache_pspecs(cfg: ModelConfig, cache_shape, global_batch: int,
 def to_named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# Serving fast-tier rules (expert-parallel stacked pools)
+# ---------------------------------------------------------------------------
+
+
+def fast_stack_pspecs(n_resident: int, model_axis: str = "model",
+                      model_size: int = 1) -> Dict[str, P]:
+    """PartitionSpecs for one layer's stacked fast-tier expert pool
+    (core/orchestrator.py ``_FastStack``: ``wg``/``wu`` (cap, d, f) and
+    ``wd`` (cap, f, d)): the stacked-expert axis shards over the mesh's
+    ``model`` axis — expert parallelism — when the resident count
+    divides, replicating otherwise (the same divisibility discipline as
+    ``_validate_spec``)."""
+    M = model_axis if model_size > 1 and n_resident > 0 \
+        and n_resident % model_size == 0 else None
+    return {"wg": P(M, None, None), "wu": P(M, None, None),
+            "wd": P(M, None, None)}
+
+
+def serving_mesh_axes(mesh) -> Dict[str, int]:
+    """Axis-name → size for a serving mesh (None → the 1×1 default)."""
+    if mesh is None:
+        return {"data": 1, "model": 1}
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -42,3 +42,46 @@ def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str]:
     model_axis = "model"
     data_axes = tuple(n for n in names if n != model_axis)
     return data_axes, model_axis
+
+
+def parse_mesh_spec(spec: str) -> Tuple[int, int]:
+    """Parse a serving ``--mesh`` string into ``(data, model)`` sizes.
+
+    Accepted forms: ``"data=2,model=4"`` (any order), ``"2x4"`` /
+    ``"2,4"`` (positional data,model), or a bare int (``"4"`` = model
+    size, data=1).  ``model`` is the expert-parallel fast-device count;
+    ``data`` replicates serving over independent data-parallel replicas.
+    """
+    s = spec.strip().lower()
+    if not s:
+        return 1, 1
+    sizes = {"data": 1, "model": 1}
+    if "=" in s:
+        for part in s.replace("x", ",").split(","):
+            name, _, val = part.partition("=")
+            name = name.strip()
+            assert name in sizes, f"unknown mesh axis {name!r} in {spec!r}"
+            sizes[name] = int(val)
+        return sizes["data"], sizes["model"]
+    nums = [int(p) for p in s.replace("x", ",").split(",") if p.strip()]
+    if len(nums) == 1:
+        return 1, nums[0]
+    assert len(nums) == 2, f"mesh spec {spec!r} needs 1 or 2 sizes"
+    return nums[0], nums[1]
+
+
+def make_serving_mesh(spec: str = "1,1"):
+    """(data, model) serving mesh from a ``--mesh`` spec string, over the
+    process's local devices.  Returns None for the 1×1 spec — the
+    single-device engine needs no mesh object and must stay byte-for-byte
+    the historical path (the bit-identity twin).  When the process has
+    fewer devices than the spec asks for (the common simulation case),
+    no mesh is built either: the engine's ``n_fast_devices`` ledger
+    models the extra devices instead."""
+    data, model = parse_mesh_spec(spec)
+    assert data >= 1 and model >= 1, (data, model)
+    if data * model == 1:
+        return None
+    if len(jax.devices()) < data * model:
+        return None
+    return _make_mesh((data, model), ("data", "model"))

@@ -71,6 +71,8 @@ class ServeConfig:
     prefix_pool: int = 0
     prefix_len: int = 96
     max_seq: int = 256
+    mesh: str = "1,1"                # "data,model" serving mesh spec
+    calibrate_host: bool = False
 
     def validate(self) -> "ServeConfig":
         if self.beam_width > 1 and self.beam_width > self.slots \
@@ -82,6 +84,12 @@ class ServeConfig:
                 "model", "static_split"):
             raise SystemExit(
                 "--rebalance-interval needs an expert-level orchestrator "
+                "policy (fiddler or offload)")
+        from repro.launch.mesh import parse_mesh_spec
+        if parse_mesh_spec(self.mesh)[1] > 1 and self.policy in (
+                "model", "static_split"):
+            raise SystemExit(
+                "--mesh with model>1 needs an expert-level orchestrator "
                 "policy (fiddler or offload)")
         return self
 
@@ -163,6 +171,18 @@ class ServeConfig:
                         metavar="L",
                         help="shared preamble length in tokens "
                              "(with --prefix-pool)")
+        ap.add_argument("--mesh", default=cls.mesh, metavar="DATA,MODEL",
+                        help="serving mesh: data-parallel replicas × "
+                             "expert-parallel fast devices, e.g. '1,4' or "
+                             "'data=1,model=4' (launch/mesh.py "
+                             "parse_mesh_spec; default 1,1 = the "
+                             "single-device engine)")
+        ap.add_argument("--calibrate-host",
+                        action="store_true", default=cls.calibrate_host,
+                        help="one-shot CPU-throughput probe at engine "
+                             "init: sizes the host worker pool and the "
+                             "cost model's CPU GEMM rate from measurement "
+                             "(core/host_calibration.py)")
         return ap
 
     @classmethod
@@ -184,6 +204,10 @@ def build_engine(cfg: ServeConfig):
           "env2": HardwareSpec.paper_env2(),
           "tpuhost": HardwareSpec()}[cfg.hw]
 
+    from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
+    _, n_model = parse_mesh_spec(cfg.mesh)
+    mesh = make_serving_mesh(cfg.mesh)
+
     fe = None
     if cfg.policy != "model":
         fe = FiddlerEngine(
@@ -193,7 +217,9 @@ def build_engine(cfg: ServeConfig):
             rebalance_interval=cfg.rebalance_interval,
             rebalance_k=cfg.rebalance_k,
             kv_layout=cfg.kv_layout,
-            prefix_cache=cfg.prefix_cache)
+            prefix_cache=cfg.prefix_cache,
+            mesh=mesh, n_fast_devices=n_model,
+            calibrate_host=cfg.calibrate_host)
     if cfg.scheduler == "continuous":
         backend = (ModelBackend(model, params, max_seq=cfg.max_seq)
                    if fe is None

@@ -21,6 +21,14 @@ Block 0 is a reserved *null* block: never allocated, always empty
 (``pos == -1`` everywhere), the target of every unmapped table entry —
 so gathering a table row always yields a well-formed dense view.
 
+Per-layer pools can be **collapsed into one global pool**: a shared
+:class:`BlockPool` (free list / refcounts / fill) plus a
+:class:`GlobalPagedPool` device store back every layer's
+:class:`BlockMeta` *table*, so KV capacity is one fungible budget
+co-optimized across layers (and, on a mesh, sized per device).  A
+``BlockMeta`` constructed without an explicit pool keeps its private
+worst-case pool — the historical behavior, bit-identical.
+
 Bit-identity contract: :meth:`PagedLayerCache.view` reproduces the dense
 ring buffer exactly — logical offset ``p % window`` lives at block
 ``off // block_size``, lane ``off % block_size``, freshly mapped blocks
@@ -151,15 +159,110 @@ class KVPoolExhausted(RuntimeError):
     instead of crashing the run."""
 
 
+class BlockPool:
+    """Shared block bookkeeping: refcounts, fill counts, the free list and
+    the cached/reserved sets — everything about blocks that is *not* a
+    per-slot table.
+
+    One pool can back many :class:`BlockMeta` tables (the global-pool
+    layout: per-layer tables drawing from one free list, so KV capacity
+    is co-optimized across layers instead of worst-case-sized per layer).
+    A :class:`BlockMeta` constructed without an explicit pool makes a
+    private one — byte-for-byte the historical per-layer behavior."""
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 1, n_blocks
+        self.n_blocks = int(n_blocks)   # includes the reserved null block 0
+        self.ref = np.zeros(self.n_blocks, np.int32)
+        self.fill = np.zeros(self.n_blocks, np.int32)  # written lanes/block
+        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
+        self._cached: set = set()
+        self._reserved: set = set()
+        # cached block -> the meta whose PrefixIndex registered it (the
+        # eviction path must deregister from the right per-layer index)
+        self._owner: Dict[int, "BlockMeta"] = {}
+        self.metas: List["BlockMeta"] = []
+
+    def adopt(self, meta: "BlockMeta") -> None:
+        self.metas.append(meta)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def grow(self, need: int) -> int:
+        """Append ``need`` fresh blocks to the pool (cache resize)."""
+        if need <= 0:
+            return 0
+        start = self.n_blocks
+        self.n_blocks += need
+        self.ref = np.concatenate([self.ref, np.zeros(need, np.int32)])
+        self.fill = np.concatenate([self.fill, np.zeros(need, np.int32)])
+        self._free.extend(range(start, self.n_blocks))
+        return need
+
+    def _lru_cached_block(self) -> int:
+        """Global reclaim victim: the least-recently-matched cached block
+        across every adopting meta's prefix index.  (Stamps are per-index
+        clocks — comparing them across layers is a heuristic, but any
+        cached block is semantically safe to evict.)"""
+        def stamp(b: int) -> int:
+            owner = self._owner[b]
+            return owner.index._stamp.get(b, 0) if owner.index else 0
+        return min(self._cached, key=stamp)
+
+    def evict_one_cached(self) -> None:
+        b = self._lru_cached_block()
+        self._owner[b].index.deregister(b)
+        self._owner.pop(b, None)
+        self._cached.discard(b)
+        self.fill[b] = 0
+        self._free.append(b)
+
+    def check(self) -> None:
+        """Pool-wide refcount/free-list consistency over every adopting
+        table (the :meth:`BlockMeta.check` invariants, aggregated)."""
+        occ = np.zeros(self.n_blocks, np.int64)
+        in_use = 0
+        for m in self.metas:
+            occ += np.bincount(m.table.ravel(), minlength=self.n_blocks)
+            in_use += m.blocks_in_use()
+        assert (self.ref[1:] == occ[1:]).all(), "refcount != table occurrences"
+        free = set(self._free)
+        assert len(free) == len(self._free), "free-list duplicates"
+        assert not (free & self._cached), "cached block on the free list"
+        assert not (free & self._reserved), "reserved block on the free list"
+        assert not (self._cached & self._reserved), "cached block reserved"
+        for b in range(1, self.n_blocks):
+            assert (self.ref[b] == 0) == (
+                b in free or b in self._cached or b in self._reserved), b
+        for b in self._cached:
+            owner = self._owner[b]
+            assert owner.index is not None and b in owner.index.by_block, b
+            assert self.fill[b] == owner.block_size, (b, int(self.fill[b]))
+        for m in self.metas:
+            if m.index is not None:
+                for b, h in m.index.by_block.items():
+                    assert m.index.entries.get(h, (None,))[0] == b, (b, h)
+        assert (in_use + self.n_free + len(self._cached)
+                + len(self._reserved) == self.n_blocks - 1)
+
+
 class BlockMeta:
     """Host-side block table + refcounts for one layer('s ring window).
 
     All bookkeeping is numpy/python — no device data — so the same class
     backs the real paged cache (:class:`PagedLayerCache`) and the
     pure-simulation unique-block accounting.
+
+    ``pool`` attaches the table to a shared :class:`BlockPool` (the
+    global-pool layout); by default each meta owns a private pool sized
+    for its worst case, which is exactly the historical per-layer
+    behavior.
     """
 
-    def __init__(self, n_slots: int, window: int, block_size: int = PAGE_SIZE):
+    def __init__(self, n_slots: int, window: int, block_size: int = PAGE_SIZE,
+                 pool: Optional[BlockPool] = None):
         assert n_slots >= 1 and window >= 1, (n_slots, window)
         bs = max(1, min(int(block_size), int(window)))
         self.block_size = bs
@@ -168,21 +271,43 @@ class BlockMeta:
         # worst case every slot owns a private copy of each of its blocks,
         # so ``n_slots * blocks_per_slot`` (+ the null block) always
         # suffices — COW never needs more than one owner per table entry.
-        self.n_blocks = 1 + n_slots * self.blocks_per_slot
+        if pool is None:
+            pool = BlockPool(1 + n_slots * self.blocks_per_slot)
+        self.pool = pool
+        pool.adopt(self)
+        # slots this meta's private worst-case share of the pool covers
+        # (resize grows the pool only beyond this high-water mark)
+        self._slots_capacity = n_slots
         self.table = np.zeros((n_slots, self.blocks_per_slot), np.int32)
-        self.ref = np.zeros(self.n_blocks, np.int32)
-        self.fill = np.zeros(self.n_blocks, np.int32)  # written lanes per block
-        self._free: List[int] = list(range(self.n_blocks - 1, 0, -1))
         # cross-request prefix cache (None = disabled, the default): the
-        # index maps content-hash chains to resident blocks; ``_cached``
-        # holds ref==0 blocks retained for reuse (reclaimed LRU under
-        # pool pressure instead of being freed eagerly)
+        # index maps content-hash chains to resident blocks; cached blocks
+        # (ref==0, retained for reuse) live on the pool
         self.index: Optional[PrefixIndex] = None
-        self._cached: set = set()
-        # blocks reserved out of the pool (fault injection: transient
-        # KV-pressure spikes — see core/faults.FaultInjector); ref stays
-        # 0 and they never appear in the table
-        self._reserved: set = set()
+
+    # -- pool delegation ----------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return self.pool.n_blocks
+
+    @property
+    def ref(self) -> np.ndarray:
+        return self.pool.ref
+
+    @property
+    def fill(self) -> np.ndarray:
+        return self.pool.fill
+
+    @property
+    def _free(self) -> List[int]:
+        return self.pool._free
+
+    @property
+    def _cached(self) -> set:
+        return self.pool._cached
+
+    @property
+    def _reserved(self) -> set:
+        return self.pool._reserved
 
     # -- introspection ------------------------------------------------------
     @property
@@ -191,17 +316,17 @@ class BlockMeta:
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return self.pool.n_free
 
     @property
     def n_cached(self) -> int:
         """Unreferenced blocks retained by the prefix cache."""
-        return len(self._cached)
+        return len(self.pool._cached)
 
     @property
     def n_reserved(self) -> int:
         """Blocks reserved out of the pool (injected KV pressure)."""
-        return len(self._reserved)
+        return len(self.pool._reserved)
 
     def enable_prefix_cache(self) -> PrefixIndex:
         if self.index is None:
@@ -238,8 +363,9 @@ class BlockMeta:
     def _alloc(self) -> int:
         if not self._free and self._cached:
             # pool pressure: reclaim the least-recently-matched cached
-            # prefix block (eviction-aware prefix cache, LRU by last match)
-            self._evict_cached(self.index.lru_block(self._cached))
+            # prefix block (eviction-aware prefix cache, LRU by last match;
+            # under a shared pool the victim may belong to another layer)
+            self.pool.evict_one_cached()
         if not self._free:
             raise KVPoolExhausted("KV block pool exhausted")
         b = self._free.pop()
@@ -257,7 +383,7 @@ class BlockMeta:
         taken: List[int] = []
         for _ in range(max(0, int(n))):
             if not self._free and self._cached:
-                self._evict_cached(self.index.lru_block(self._cached))
+                self.pool.evict_one_cached()
             if not self._free:
                 break
             b = self._free.pop()
@@ -278,7 +404,8 @@ class BlockMeta:
         b = int(b)
         assert b in self._cached and self.ref[b] == 0, b
         self._cached.discard(b)
-        self.index.deregister(b)
+        owner = self.pool._owner.pop(b, self)
+        owner.index.deregister(b)
         self.fill[b] = 0
         self._free.append(b)
 
@@ -290,6 +417,7 @@ class BlockMeta:
         if self.ref[b] == 0:
             if self.index is not None and int(b) in self.index.by_block:
                 self._cached.add(int(b))  # resident for prefix reuse
+                self.pool._owner[int(b)] = self
             else:
                 self.fill[b] = 0
                 self._free.append(b)
@@ -375,6 +503,7 @@ class BlockMeta:
             assert self.fill[b] == self.block_size, (b, int(self.fill[b]))
             if self.ref[b] == 0:
                 self._cached.discard(b)
+                self.pool._owner.pop(b, None)
             self.ref[b] += 1
             self.table[slot, j] = b
             self.index._touch(b)
@@ -407,15 +536,11 @@ class BlockMeta:
         self.table = np.concatenate(
             [self.table,
              np.zeros((n_slots - old, self.blocks_per_slot), np.int32)])
-        need = n_slots * self.blocks_per_slot + 1 - self.n_blocks
-        if need <= 0:
-            return 0
-        start = self.n_blocks
-        self.n_blocks += need
-        self.ref = np.concatenate([self.ref, np.zeros(need, np.int32)])
-        self.fill = np.concatenate([self.fill, np.zeros(need, np.int32)])
-        self._free.extend(range(start, self.n_blocks))
-        return need
+        # grow the pool only past this meta's worst-case high-water mark
+        # (under a shared pool every meta contributes its own share)
+        need = (n_slots - self._slots_capacity) * self.blocks_per_slot
+        self._slots_capacity = max(self._slots_capacity, n_slots)
+        return self.pool.grow(need)
 
     # -- writes -------------------------------------------------------------
     def write_span(self, slot: int, start: int, end: int) -> List[WritePlan]:
@@ -447,26 +572,86 @@ class BlockMeta:
     def check(self) -> None:
         """Refcount/free-list consistency: every block's refcount equals
         its table occurrences, unreferenced blocks are exactly the free
-        ones plus the retained prefix-cache residents, and nothing
-        leaks."""
-        occ = np.bincount(self.table.ravel(), minlength=self.n_blocks)
-        assert (self.ref[1:] == occ[1:]).all(), "refcount != table occurrences"
-        free = set(self._free)
-        assert len(free) == len(self._free), "free-list duplicates"
-        assert not (free & self._cached), "cached block on the free list"
-        assert not (free & self._reserved), "reserved block on the free list"
-        assert not (self._cached & self._reserved), "cached block reserved"
-        for b in range(1, self.n_blocks):
-            assert (self.ref[b] == 0) == (
-                b in free or b in self._cached or b in self._reserved), b
-        for b in self._cached:
-            assert self.index is not None and b in self.index.by_block, b
-            assert self.fill[b] == self.block_size, (b, int(self.fill[b]))
-        if self.index is not None:
-            for b, h in self.index.by_block.items():
-                assert self.index.entries.get(h, (None,))[0] == b, (b, h)
-        assert (self.blocks_in_use() + self.n_free + self.n_cached
-                + self.n_reserved == self.n_blocks - 1)
+        ones plus the retained prefix-cache residents, and nothing leaks.
+        Under a shared pool the invariants hold over *all* adopting
+        tables together (see :meth:`BlockPool.check`)."""
+        self.pool.check()
+
+
+class _LayerStore:
+    """Private device arrays of one :class:`PagedLayerCache` (the
+    historical per-layer layout)."""
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                 dtype):
+        self.k = jnp.zeros((n_blocks, block_size, cfg.n_kv_heads,
+                            cfg.head_dim), dtype)
+        self.v = jnp.zeros_like(self.k)
+        self.pos = jnp.full((n_blocks, block_size), -1, jnp.int32)
+
+    def grow(self, need: int) -> None:
+        self.k = jnp.concatenate(
+            [self.k, jnp.zeros((need,) + self.k.shape[1:], self.k.dtype)])
+        self.v = jnp.concatenate(
+            [self.v, jnp.zeros((need,) + self.v.shape[1:], self.v.dtype)])
+        self.pos = jnp.concatenate(
+            [self.pos, jnp.full((need,) + self.pos.shape[1:], -1,
+                                self.pos.dtype)])
+
+
+class GlobalPagedPool:
+    """One global block store shared by every layer of a model: a single
+    :class:`BlockPool` free list plus single k/v/pos device arrays, with
+    per-layer :class:`BlockMeta` *tables* drawing from it.
+
+    Collapsing the per-layer pools means KV capacity is one fungible
+    budget: a layer holding long prefix-cache chains borrows blocks that
+    idle layers are not using, and per-device capacity can be
+    co-optimized against the per-device expert budget (the mesh engine
+    sizes one pool per fast device).  Requires every layer to share the
+    same effective block geometry (``min(block_size, window)`` equal
+    across layers) — callers check :meth:`shareable` and fall back to
+    private per-layer pools otherwise."""
+
+    def __init__(self, cfg: ModelConfig, n_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.block_size = int(block_size)
+        self.pool = BlockPool(n_blocks)
+        self.k = jnp.zeros((n_blocks, block_size, cfg.n_kv_heads,
+                            cfg.head_dim), dtype)
+        self.v = jnp.zeros_like(self.k)
+        self.pos = jnp.full((n_blocks, block_size), -1, jnp.int32)
+
+    def grow(self, need: int) -> None:
+        self.k = jnp.concatenate(
+            [self.k, jnp.zeros((need,) + self.k.shape[1:], self.k.dtype)])
+        self.v = jnp.concatenate(
+            [self.v, jnp.zeros((need,) + self.v.shape[1:], self.v.dtype)])
+        self.pos = jnp.concatenate(
+            [self.pos, jnp.full((need,) + self.pos.shape[1:], -1,
+                                self.pos.dtype)])
+
+    @staticmethod
+    def shareable(cfg: ModelConfig, max_seq: int,
+                  block_size: int = PAGE_SIZE) -> bool:
+        sizes = {max(1, min(int(block_size),
+                            layer_window(cfg, li, max_seq)))
+                 for li in range(cfg.n_layers)}
+        return len(sizes) == 1
+
+    @staticmethod
+    def for_model(cfg: ModelConfig, n_slots: int, max_seq: int,
+                  dtype=jnp.float32, block_size: int = PAGE_SIZE
+                  ) -> "GlobalPagedPool":
+        """A pool sized for the worst case of every layer together (one
+        null block total instead of one per layer)."""
+        assert GlobalPagedPool.shareable(cfg, max_seq, block_size)
+        bs = max(1, min(int(block_size), layer_window(cfg, 0, max_seq)))
+        total = 1 + sum(
+            n_slots * -(-layer_window(cfg, li, max_seq) // bs)
+            for li in range(cfg.n_layers))
+        return GlobalPagedPool(cfg, total, bs, dtype)
 
 
 class PagedLayerCache:
@@ -475,20 +660,53 @@ class PagedLayerCache:
     Pool arrays are functionally updated jnp arrays; the table/refcounts
     are host state, so this object lives in the orchestrator's python
     serving loop (never inside jit) — the jitted monolithic ``Model``
-    keeps the dense layout."""
+    keeps the dense layout.
+
+    ``shared`` attaches the layer to a :class:`GlobalPagedPool` (one
+    free list + one set of device arrays for the whole model); the
+    default is a private per-layer store."""
 
     layout = "paged"
 
     def __init__(self, cfg: ModelConfig, layer_idx: int, n_slots: int,
                  max_seq: int, dtype=jnp.float32,
-                 block_size: int = PAGE_SIZE):
+                 block_size: int = PAGE_SIZE,
+                 shared: Optional[GlobalPagedPool] = None):
         w = layer_window(cfg, layer_idx, max_seq)
-        self.meta = BlockMeta(n_slots, w, block_size)
-        bs = self.meta.block_size
-        nb = self.meta.n_blocks
-        self.k = jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype)
-        self.v = jnp.zeros((nb, bs, cfg.n_kv_heads, cfg.head_dim), dtype)
-        self.pos = jnp.full((nb, bs), -1, jnp.int32)
+        if shared is not None:
+            assert shared.block_size == max(1, min(int(block_size), w)), \
+                "layer block geometry incompatible with the shared pool"
+            self.meta = BlockMeta(n_slots, w, shared.block_size,
+                                  pool=shared.pool)
+            self._store = shared
+        else:
+            self.meta = BlockMeta(n_slots, w, block_size)
+            self._store = _LayerStore(cfg, self.meta.n_blocks,
+                                      self.meta.block_size, dtype)
+
+    @property
+    def k(self) -> jnp.ndarray:
+        return self._store.k
+
+    @k.setter
+    def k(self, val) -> None:
+        self._store.k = val
+
+    @property
+    def v(self) -> jnp.ndarray:
+        return self._store.v
+
+    @v.setter
+    def v(self, val) -> None:
+        self._store.v = val
+
+    @property
+    def pos(self) -> jnp.ndarray:
+        return self._store.pos
+
+    @pos.setter
+    def pos(self, val) -> None:
+        self._store.pos = val
 
     @property
     def window(self) -> int:
@@ -617,13 +835,7 @@ class PagedLayerCache:
     def resize(self, n_slots: int) -> None:
         need = self.meta.resize(n_slots)
         if need:
-            self.k = jnp.concatenate(
-                [self.k, jnp.zeros((need,) + self.k.shape[1:], self.k.dtype)])
-            self.v = jnp.concatenate(
-                [self.v, jnp.zeros((need,) + self.v.shape[1:], self.v.dtype)])
-            self.pos = jnp.concatenate(
-                [self.pos, jnp.full((need,) + self.pos.shape[1:], -1,
-                                    self.pos.dtype)])
+            self._store.grow(need)
 
 
 class PagedSlotStage:

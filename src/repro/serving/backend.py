@@ -477,14 +477,30 @@ class SimulatedBackend(ServingBackend):
     (``simulate_decode_multi(kv_unique=...)``).  Unforked workloads have
     ``unique == sum(kv_len)`` exactly, so non-beam sweeps
     (BENCH_serve_load.json) are unchanged; beam groups charge their
-    shared prompt prefix once — the honest paper-scale beam story."""
+    shared prompt prefix once — the honest paper-scale beam story.
+
+    **N-device ledger** (``FiddlerEngine(n_fast_devices=D)``, D > 1):
+    each fast device owns its *own* block pool — the cache carries D
+    :class:`BlockMeta` shards and slots map to devices in contiguous
+    stripes of ``chunk`` slots (``device = (slot // chunk) % D``, stable
+    under ``resize_cache`` growth), so gangs/slots schedule against
+    per-device capacity and the leak audit is per device.  KV never
+    aliases across pools: a cross-device ``fork_slot`` (gang spilled over
+    a device boundary — the scheduler's device-aligned admission makes
+    this the rare fallback) rebuilds a dense private copy instead of a
+    COW table alias.  D == 1 keeps the single-meta cache byte-for-byte —
+    the bit-identity twin."""
 
     FAKE_TOKEN = 5  # != EOS_ID(2), != PAD_ID(0)
+    # minimum contiguous slots per device stripe: covers typical beam
+    # widths so gangs admit device-local even when the pool boots small
+    KV_STRIPE = 4
 
     def __init__(self, engine, *, max_seq: int = 256):
         self.engine = engine
         self.max_seq = max_seq
         self._vocab = engine.cfg.vocab_size
+        self.n_kv_devices = max(1, int(getattr(engine, "n_fast_devices", 1)))
 
     @property
     def ledger(self):
@@ -530,18 +546,83 @@ class SimulatedBackend(ServingBackend):
 
     # slot API — caches carry slot count + block-table metadata; only the
     # ledger (and the table bookkeeping that feeds its KV charging) matters
+    @staticmethod
+    def _dev_slots(n_slots: int, chunk: int, D: int, d: int) -> int:
+        """How many of ``n_slots`` striped global slots land on device
+        ``d`` (device = (slot // chunk) % D)."""
+        cycles, rem = divmod(n_slots, chunk * D)
+        return cycles * chunk + min(max(rem - d * chunk, 0), chunk)
+
     def make_cache(self, n_slots: int) -> Any:
         from repro.models.paged_kv import BlockMeta
-        meta = BlockMeta(n_slots, self.max_seq)
-        if getattr(self.engine, "prefix_cache", False):
-            meta.enable_prefix_cache()
+        D = self.n_kv_devices
+        prefix = getattr(self.engine, "prefix_cache", False)
         # ``matched``: per-slot prompt tokens spliced from the prefix
         # index at admission (write_slot then skips re-writing them)
-        return {"n_slots": n_slots, "meta": meta, "matched": {}}
+        if D == 1:
+            meta = BlockMeta(n_slots, self.max_seq)
+            if prefix:
+                meta.enable_prefix_cache()
+            return {"n_slots": n_slots, "meta": meta, "matched": {}}
+        chunk = max(self.KV_STRIPE, -(-n_slots // D))
+        metas = [BlockMeta(max(self._dev_slots(n_slots, chunk, D, d), 1),
+                           self.max_seq) for d in range(D)]
+        if prefix:
+            for m in metas:
+                m.enable_prefix_cache()
+        return {"n_slots": n_slots, "chunk": chunk, "metas": metas,
+                "matched": {}}
+
+    def _metas(self, cache: Any) -> list:
+        return cache["metas"] if "metas" in cache else [cache["meta"]]
+
+    def _locate(self, cache: Any, slot: int) -> Tuple[Any, int]:
+        """(owning device pool, device-local slot) of a global slot."""
+        if "metas" not in cache:
+            return cache["meta"], int(slot)
+        D, chunk = len(cache["metas"]), cache["chunk"]
+        slot = int(slot)
+        d = (slot // chunk) % D
+        local = (slot // (chunk * D)) * chunk + slot % chunk
+        return cache["metas"][d], local
+
+    def device_of_slot(self, cache: Any, slot: int) -> int:
+        """Which fast device's pool holds ``slot``'s KV (the scheduler's
+        gang-colocation hint)."""
+        if "metas" not in cache:
+            return 0
+        return (int(slot) // cache["chunk"]) % len(cache["metas"])
+
+    def _locals_by_device(self, cache: Any,
+                          slots: Optional[Sequence[int]]) -> dict:
+        """device → local slot list for ``slots`` (None = every slot)."""
+        if slots is None:
+            slots = range(cache["n_slots"])
+        by_dev: dict = {}
+        for s in slots:
+            d = self.device_of_slot(cache, int(s))
+            _, local = self._locate(cache, int(s))
+            by_dev.setdefault(d, []).append(local)
+        return by_dev
+
+    def _unique_tokens(self, cache: Any,
+                       slots: Optional[Sequence[int]]) -> int:
+        """Unique written KV entries over ``slots``: shards can never
+        alias across device pools, so the total is the per-pool sum."""
+        if "metas" not in cache:
+            return cache["meta"].unique_tokens(slots)
+        return sum(cache["metas"][d].unique_tokens(loc)
+                   for d, loc in self._locals_by_device(cache, slots).items())
 
     def resize_cache(self, cache: Any, *, n_slots: int) -> Any:
-        cache["meta"].resize(n_slots)
-        return {"n_slots": n_slots, "meta": cache["meta"],
+        if "metas" not in cache:
+            cache["meta"].resize(n_slots)
+            return {"n_slots": n_slots, "meta": cache["meta"],
+                    "matched": cache.get("matched", {})}
+        chunk, metas = cache["chunk"], cache["metas"]
+        for d, m in enumerate(metas):
+            m.resize(max(self._dev_slots(n_slots, chunk, len(metas), d), 1))
+        return {"n_slots": n_slots, "chunk": chunk, "metas": metas,
                 "matched": cache.get("matched", {})}
 
     def prefill_chunk(self, slot_cache, chunk, pos_offset,
@@ -551,17 +632,17 @@ class SimulatedBackend(ServingBackend):
         return self._logits(), {"staged": pos_offset + n}
 
     def write_slot(self, cache, slot_cache, slot):
-        meta = cache["meta"]
+        meta, local = self._locate(cache, slot)
         start = int(cache.get("matched", {}).pop(slot, 0))
         if start == 0:
-            meta.release_slot(slot)
+            meta.release_slot(local)
         # a prefix-matched slot keeps its spliced head blocks and only
         # appends the freshly-prefilled tail
-        meta.write_span(slot, start, int(slot_cache["staged"]))
+        meta.write_span(local, start, int(slot_cache["staged"]))
         return cache
 
     def match_prefix(self, cache, slot, tokens):
-        meta = cache["meta"]
+        meta, local = self._locate(cache, slot)
         if meta.index is None:
             return 0
         led = self.engine.ledger
@@ -572,52 +653,95 @@ class SimulatedBackend(ServingBackend):
         n = min(len(blocks), (len(tokens) - 1) // bs)
         if n <= 0:
             return 0
-        meta.map_prefix(slot, blocks[:n])
+        meta.map_prefix(local, blocks[:n])
         cache.setdefault("matched", {})[slot] = n * bs
         led.prefix_hits += 1
         led.prefix_tokens += n * bs
         return n * bs
 
     def register_prefix(self, cache, slot, tokens):
-        meta = cache["meta"]
+        meta, local = self._locate(cache, slot)
         if meta.index is not None:
-            meta.register_prefix(slot, [int(t) for t in tokens])
+            meta.register_prefix(local, [int(t) for t in tokens])
 
     def decode_slots(self, cache, tokens, pos, active):
         active = np.asarray(active, bool)
         live = np.nonzero(active)[0]
-        meta = cache["meta"]
         f = self.engine.faults
         if f is not None:
-            f.kv_pressure_tick([meta])
+            f.kv_pressure_tick(self._metas(cache))
         for i in live:
+            meta, local = self._locate(cache, int(i))
             p = int(pos[i])
-            meta.write_span(int(i), p, p + 1)
+            meta.write_span(local, p, p + 1)
         kv_lens = np.asarray(pos)[active].astype(np.int64) + 1
         self.engine.simulate_decode_multi(
-            kv_lens, kv_unique=meta.unique_tokens(live))
+            kv_lens, kv_unique=self._unique_tokens(cache, live))
         return self._logits(len(active)), cache
 
     def fork_slot(self, cache, *, src, dst):
-        cache["meta"].fork_slot(src, dst)
+        ms, ls = self._locate(cache, src)
+        md, ld = self._locate(cache, dst)
+        if ms is md:
+            ms.fork_slot(ls, ld)
+        else:
+            # gang spilled across a device boundary: pools cannot share
+            # blocks, so the sibling rebuilds a dense private copy of the
+            # lead's written entries instead of a COW alias
+            md.release_slot(ld)
+            md.write_span(ld, 0, ms.dense_tokens([ls]))
         return cache
 
     def reorder_slots(self, cache, *, slots, src_of):
-        cache["meta"].reorder_slots(list(slots), list(src_of))
+        if "metas" not in cache:
+            cache["meta"].reorder_slots(list(slots), list(src_of))
+            return cache
+        per: dict = {}
+        for s, r in zip(slots, src_of):
+            ms, ls = self._locate(cache, s)
+            mr, lr = self._locate(cache, r)
+            assert ms is mr, (
+                f"beam reshuffle crosses device pools (slot {s} ← {r}); "
+                "gangs must stay device-local")
+            _, dst, src = per.setdefault(id(ms), (ms, [], []))
+            dst.append(ls)
+            src.append(lr)
+        for m, dst, src in per.values():
+            m.reorder_slots(dst, src)
         return cache
 
     def release_slot(self, cache, *, slot):
-        cache["meta"].release_slot(slot)
+        meta, local = self._locate(cache, slot)
+        meta.release_slot(local)
         cache.get("matched", {}).pop(slot, None)
         return cache
 
+    def kv_check(self, cache) -> list:
+        """Per-device leak audit: refcount/free-list consistency on every
+        pool plus each pool's still-referenced block count — all zeros
+        after a clean drain.  What the mesh-scaling gate asserts."""
+        out = []
+        for m in self._metas(cache):
+            m.check()
+            out.append(int(m.blocks_in_use()))
+        return out
+
     def block_stats(self, cache, slots=None):
-        m = cache["meta"]
-        return {"unique_blocks": m.blocks_in_use(slots),
-                "dense_blocks": m.dense_blocks(slots),
-                "unique_tokens": m.unique_tokens(slots),
-                "dense_tokens": m.dense_tokens(slots),
-                "cached_blocks": m.n_cached}
+        def _one(m, sl):
+            return {"unique_blocks": m.blocks_in_use(sl),
+                    "dense_blocks": m.dense_blocks(sl),
+                    "unique_tokens": m.unique_tokens(sl),
+                    "dense_tokens": m.dense_tokens(sl),
+                    "cached_blocks": m.n_cached}
+        if "metas" not in cache:
+            return _one(cache["meta"], slots)
+        by_dev = self._locals_by_device(cache, slots)
+        per = [_one(m, by_dev.get(d, []))
+               for d, m in enumerate(cache["metas"])]
+        agg = {k: sum(p[k] for p in per) for k in per[0]}
+        agg["n_devices"] = len(per)
+        agg["per_device"] = per
+        return agg
 
     # group API (static scheduler over the simulation)
     def prefill_group(self, prompts):

@@ -333,6 +333,26 @@ class ContinuousEngine:
             grp.done = list(resume.get("done") or [False] * len(slots))
             req.beam_resume = None
 
+    def _gang_window(self, free: List[int], width: int) -> List[int]:
+        """Pick ``width`` free slots for a gang.  Backends that shard KV
+        over fast devices expose ``device_of_slot``; then the gang
+        prefers a single device's window (best-fit: the fullest device
+        that still holds the gang), because cross-device beam forks
+        cannot share prompt blocks.  Spills across devices only when no
+        one device fits; without the hint this is exactly the historical
+        ``free[:width]``."""
+        dev_of = getattr(self.backend, "device_of_slot", None)
+        if dev_of is None:
+            return free[:width]
+        by_dev: Dict[int, List[int]] = {}
+        for i in free:
+            by_dev.setdefault(dev_of(self.cache, i), []).append(i)
+        fitting = [d for d in by_dev if len(by_dev[d]) >= width]
+        if not fitting:
+            return free[:width]
+        best = min(fitting, key=lambda d: (len(by_dev[d]), d))
+        return by_dev[best][:width]
+
     def _admit(self) -> None:
         now = self.clock()
         free = [i for i in range(self.slot_limit)
@@ -354,8 +374,9 @@ class ContinuousEngine:
                 if len(free) < req.beam_width:
                     continue  # gang admission: all W slots or none
                 chosen.add(id(req))
-                self._admit_gang(req, free[: req.beam_width], now)
-                free = free[req.beam_width:]
+                claimed = self._gang_window(free, req.beam_width)
+                self._admit_gang(req, claimed, now)
+                free = [i for i in free if i not in claimed]
                 continue
             chosen.add(id(req))
             i = free.pop(0)

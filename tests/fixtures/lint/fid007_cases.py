@@ -1,0 +1,65 @@
+"""FID007 fixture: mesh-dispatch hygiene.
+
+Migration root for this module: ``Engine.apply_migrations``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+
+
+def top_level_body(xs, ws):
+    probe = np.asarray(xs)  # EXPECT: FID007
+    return jnp.einsum("td,df->tf", xs + probe.shape[0], ws)
+
+
+def run_moe(mesh, x, w, idx):
+    def body(xs, ws):
+        hot = float(xs.sum())  # EXPECT: FID007
+        xs.block_until_ready()  # EXPECT: FID007
+        return jnp.einsum("td,df->tf", xs * hot, ws)
+
+    fn = shard_map(body, mesh=mesh, in_specs=None, out_specs=None)
+    fn2 = shard_map(top_level_body, mesh=mesh, in_specs=None, out_specs=None)
+    return fn(x, w) + fn2(x, w)
+
+
+def run_moe_clean(mesh, x, w):
+    # false-positive candidate: a fully traced body stays silent, and
+    # host-side numpy prep OUTSIDE the body is FID001's concern, not ours
+    cap = int(np.asarray(x).shape[0])
+
+    def body(xs, ws):
+        a = jnp.einsum("td,df->tf", xs, ws)
+        return jax.nn.silu(a[:cap])
+
+    return shard_map(body, mesh=mesh, in_specs=None, out_specs=None)(x, w)
+
+
+class Engine:
+    def __init__(self, devices):
+        self.devices = devices
+
+    def weights_of(self, e):
+        return np.zeros((4, 4)), np.zeros((4, 4))
+
+    def apply_migrations(self, plan):
+        for e, dev in plan:
+            moved = jax.device_put(self.weights_of(e), dev)  # EXPECT: FID007
+            self.devices[dev] = moved
+
+    def apply_migrations_batched(self, plan):
+        # false-positive candidates: one put per device, payload built as
+        # a list (literal or a name bound to a comprehension)
+        by_dev = {}
+        for e, dev in plan:
+            by_dev.setdefault(dev, []).append(e)
+        for dev, group in by_dev.items():
+            batch = [self.weights_of(e) for e in group]
+            self.devices[dev] = jax.device_put(batch, dev)  # ok: batched
+            self.devices[dev] += jax.device_put([1, 2], dev)  # ok: literal
+
+    def unrelated_loop_put(self, items, dev):
+        # not reachable from a migration root: out of FID007 (b)'s scope
+        for it in items:
+            jax.device_put(it, dev)

@@ -83,6 +83,17 @@ def test_fid006_fixture():
     assert got == expected_findings(fx)
 
 
+def test_fid007_fixture():
+    fx = FIXTURES / "fid007_cases.py"
+    # both migration entry points are roots so the batched variant's
+    # exemptions (list literal / comprehension-bound name) are exercised,
+    # while unrelated_loop_put stays outside the rule's scope
+    got = run_rule("FID007", fx,
+                   migration_roots=["Engine.apply_migrations",
+                                    "Engine.apply_migrations_batched"])
+    assert got == expected_findings(fx)
+
+
 # ---------------------------------------------------------------------------
 # suppression semantics
 # ---------------------------------------------------------------------------
@@ -155,7 +166,7 @@ def test_committed_baseline_entries_have_reasons():
     for entry in data["findings"]:
         assert entry["reason"].strip(), entry
         assert entry["rule"] in {"FID001", "FID002", "FID003", "FID004",
-                                 "FID005", "FID006"}
+                                 "FID005", "FID006", "FID007"}
 
 
 # ---------------------------------------------------------------------------
@@ -178,7 +189,7 @@ def test_repo_config_loads_hot_roots():
     cfg = load_config(REPO)
     assert any(r.endswith("ContinuousEngine.step") for r in cfg.hot_roots)
     assert cfg.select == ["FID001", "FID002", "FID003", "FID004", "FID005",
-                          "FID006"]
+                          "FID006", "FID007"]
 
 
 def test_cli_smoke():

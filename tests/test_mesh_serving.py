@@ -1,0 +1,341 @@
+"""Expert-parallel serving over a device mesh (distributed/sharding.py,
+launch/mesh.py, distributed/expert_parallel.py, the engine's
+``n_fast_devices`` ledger, and the N-device SimulatedBackend KV pools).
+
+Multi-device cases need forced host devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — the CI
+mesh-smoke lane) and skip on the default single-device run; everything
+else — spec parsing, placement, per-device accounting, the 1×1-mesh
+bit-identity twin — runs everywhere.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import reduced_model
+from repro.configs import get_config
+from repro.core import FiddlerEngine
+from repro.core.cost_model import alltoall_time, expert_flops_per_token
+from repro.core.host_calibration import HostCalibration, calibrate_host_pool
+from repro.core.placement import (
+    DevicePlacement,
+    place_by_popularity,
+    to_device_placement,
+)
+from repro.core.popularity import synthetic_profile
+from repro.core.rebalance import MigrationPlan, PrefetchQueue, apply_plan
+from repro.distributed.expert_parallel import (
+    check_expert_divisibility,
+    dense_reference_moe,
+    expert_parallel_moe,
+    expert_shard_spec,
+    mesh_model_size,
+    shard_expert_stack,
+)
+from repro.distributed.sharding import fast_stack_pspecs, serving_mesh_axes
+from repro.launch.mesh import make_serving_mesh, parse_mesh_spec
+from repro.serving.backend import FiddlerBackend, SimulatedBackend
+from repro.serving.continuous import ContinuousEngine
+from repro.serving.engine import Request
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+class _FakeMesh:
+    """Axis bookkeeping stand-in: divisibility edge cases need mesh
+    *shape*, not devices."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.devices = np.zeros(tuple(axes.values()))
+
+
+# ---------------------------------------------------------------------------
+# mesh spec parsing / construction
+# ---------------------------------------------------------------------------
+
+
+def test_parse_mesh_spec_forms():
+    assert parse_mesh_spec("data=2,model=4") == (2, 4)
+    assert parse_mesh_spec("model=4,data=2") == (2, 4)
+    assert parse_mesh_spec("2x4") == (2, 4)
+    assert parse_mesh_spec("2,4") == (2, 4)
+    assert parse_mesh_spec("4") == (1, 4)
+    assert parse_mesh_spec("") == (1, 1)
+    with pytest.raises(AssertionError):
+        parse_mesh_spec("expert=2")
+
+
+def test_make_serving_mesh_1x1_is_none():
+    # the bit-identity twin: no mesh object, the historical engine path
+    assert make_serving_mesh("1,1") is None
+
+
+def test_make_serving_mesh_insufficient_devices_is_none():
+    big = 4 * jax.device_count()
+    assert make_serving_mesh(f"1,{big}") is None
+
+
+@multi_device
+def test_make_serving_mesh_builds_axes():
+    mesh = make_serving_mesh("1,2")
+    assert mesh is not None
+    assert serving_mesh_axes(mesh) == {"data": 1, "model": 2}
+
+
+# ---------------------------------------------------------------------------
+# param specs / divisibility
+# ---------------------------------------------------------------------------
+
+
+def test_fast_stack_pspecs_shards_when_divisible():
+    specs = fast_stack_pspecs(8, model_size=4)
+    assert all(s[0] == "model" for s in specs.values())
+    for bad in (fast_stack_pspecs(7, model_size=4),     # 7 % 4 != 0
+                fast_stack_pspecs(8, model_size=1),     # no model axis
+                fast_stack_pspecs(0, model_size=4)):    # empty stack
+        assert all(s[0] is None for s in bad.values())
+    assert serving_mesh_axes(None) == {"data": 1, "model": 1}
+
+
+def test_expert_divisibility_edge_cases():
+    m2 = _FakeMesh(data=1, model=2)
+    assert mesh_model_size(m2) == 2
+    assert check_expert_divisibility(8, m2) == 4
+    with pytest.raises(AssertionError):
+        check_expert_divisibility(7, m2)
+    # a mesh without a model axis is a single expert shard
+    assert check_expert_divisibility(7, _FakeMesh(data=4)) == 7
+
+
+@multi_device
+def test_fast_stack_pspec_roundtrip():
+    """Sharding a stacked expert triple over the model axis and gathering
+    it back must be lossless (the param-spec round-trip)."""
+    mesh = make_serving_mesh("1,2")
+    rng = np.random.default_rng(0)
+    wg, wu = rng.standard_normal((2, 4, 8, 16)).astype(np.float32)
+    wd = rng.standard_normal((4, 16, 8)).astype(np.float32)
+    assert expert_shard_spec() == fast_stack_pspecs(4, model_size=2)["wg"]
+    for src, out in zip((wg, wu, wd), shard_expert_stack(mesh, wg, wu, wd)):
+        np.testing.assert_array_equal(np.asarray(out), src)
+
+
+@multi_device
+def test_expert_parallel_moe_matches_dense_reference():
+    mesh = make_serving_mesh("1,2")
+    rng = np.random.default_rng(1)
+    T, d, f, E, k = 8, 8, 16, 4, 2
+    x = rng.standard_normal((T, d)).astype(np.float32)
+    wg = rng.standard_normal((E, d, f)).astype(np.float32) * 0.1
+    wu = rng.standard_normal((E, d, f)).astype(np.float32) * 0.1
+    wd = rng.standard_normal((E, f, d)).astype(np.float32) * 0.1
+    idx = rng.integers(0, E, size=(T, k)).astype(np.int32)
+    gates = rng.random((T, k)).astype(np.float32)
+    got = expert_parallel_moe(mesh, x, idx, gates, wg, wu, wd)
+    want = dense_reference_moe(x, idx, gates, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# devices × tiers placement
+# ---------------------------------------------------------------------------
+
+
+def test_to_device_placement_balances_round_robin():
+    prof = synthetic_profile(4, 8, seed=0)
+    p = place_by_popularity(prof, budget=16)
+    dp = to_device_placement(p, 4, profile=prof)
+    assert isinstance(dp, DevicePlacement) and dp.n_devices == 4
+    np.testing.assert_array_equal(dp.on_fast, p.on_fast)
+    counts = dp.device_counts()
+    assert counts.sum() == 16 and counts.max() - counts.min() <= 1
+    # slow experts carry no device
+    assert (dp.device[~p.on_fast] == -1).all()
+
+
+def test_apply_plan_preserves_device_targets():
+    prof = synthetic_profile(2, 4, seed=1)
+    dp = to_device_placement(place_by_popularity(prof, budget=4), 2,
+                             profile=prof)
+    fast = [tuple(x) for x in np.argwhere(dp.on_fast)]
+    slow = [tuple(x) for x in np.argwhere(~dp.on_fast)]
+    plan = MigrationPlan(promotes=(slow[0],), demotes=(fast[0],),
+                         est_gain=0.1, transfer_bytes=100,
+                         est_transfer_s=0.0, devices=(1,))
+    out = apply_plan(dp, plan)
+    assert isinstance(out, DevicePlacement)
+    assert out.device[slow[0]] == 1 and out.device[fast[0]] == -1
+
+
+def test_prefetch_queue_multilink_conservation():
+    q = PrefetchQueue(n_links=2)
+    q.push(0, 1, 0.4, link=0)
+    q.push(0, 2, 0.6, link=1)
+    hidden = q.drain(0.5)          # each link gets the full idle window
+    exposed = q.flush()
+    assert hidden == pytest.approx(0.4 + 0.5)   # link0 fully, link1 partly
+    assert hidden + exposed == pytest.approx(1.0)
+
+
+def test_alltoall_time_charges_only_multi_device():
+    cfg = get_config("mixtral-8x7b")
+    hw = FiddlerEngine(cfg, policy="fiddler").hw
+    assert alltoall_time(cfg, 100, hw, 1) == 0.0
+    t2, t4 = (alltoall_time(cfg, 100, hw, D) for D in (2, 4))
+    assert t2 > 0 and t4 > 0 and t4 < t2   # more links, faster exchange
+
+
+# ---------------------------------------------------------------------------
+# host-pool calibration
+# ---------------------------------------------------------------------------
+
+
+def test_host_calibration_probe_and_apply():
+    cfg = get_config("mixtral-8x7b")
+    cal = calibrate_host_pool(cfg, max_workers=2, reps=2)
+    assert cal.gemm_flops > 0 and cal.pool_flops > 0 and cal.workers >= 2
+    lat = FiddlerEngine(cfg, policy="fiddler").lat
+    lat2 = HostCalibration(1e9, 2, 2e9).apply(lat, cfg)
+    assert lat2.cpu_per_token == pytest.approx(
+        expert_flops_per_token(cfg) / 2e9)
+
+
+def test_engine_calibrate_host_rescales_cpu_term():
+    cfg = get_config("mixtral-8x7b")
+    base = FiddlerEngine(cfg, policy="fiddler")
+    eng = FiddlerEngine(cfg, policy="fiddler", calibrate_host=True)
+    assert eng.host_calibration is not None
+    assert eng.lat.cpu_per_token != base.lat.cpu_per_token
+    assert eng.lat.cpu_per_token == pytest.approx(
+        expert_flops_per_token(cfg) / eng.host_calibration.pool_flops)
+
+
+# ---------------------------------------------------------------------------
+# N-device simulation: ledger + per-device KV pools
+# ---------------------------------------------------------------------------
+
+
+def _sim_run(n_devices: int, *, n_requests: int = 8, rate: float = 50.0):
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler", seed=0,
+                        n_fast_devices=n_devices, expert_budget=24)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=128),
+                               n_slots=8, max_seq=128, prefill_chunk=16)
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        prompt = [1] + rng.integers(3, 250, size=31).tolist()
+        serving.submit(Request(rid=f"r{i}", prompt=prompt,
+                               max_new_tokens=8, arrival=t))
+    done = serving.run(max_steps=50_000, on_exhausted="raise")
+    assert len(done) == n_requests
+    return eng, serving
+
+
+def test_multi_device_ledger_charges_alltoall():
+    eng1, _ = _sim_run(1)
+    eng4, s4 = _sim_run(4)
+    led1, led4 = eng1.ledger, eng4.ledger
+    assert led1.alltoall_time == 0.0 and led1.device_busy == []
+    assert led4.alltoall_time > 0.0        # the exchange is never free
+    assert led4.alltoall_overlapped + led4.alltoall_exposed == pytest.approx(
+        led4.alltoall_time)
+    assert len(led4.device_busy) == 4 and all(
+        b > 0 for b in led4.device_busy)   # every device did expert work
+    # 4× the per-device budget: same tokens, less slow-tier time
+    assert led4.sim_time < led1.sim_time
+
+
+def test_simulated_backend_per_device_pools():
+    eng, serving = _sim_run(4)
+    be, cache = serving.backend, serving.cache
+    assert len(cache["metas"]) == 4
+    devs = [be.device_of_slot(cache, s) for s in range(cache["n_slots"])]
+    assert set(devs) <= set(range(4))
+    # contiguous stripes: a gang window within one stripe is device-local
+    chunk = cache["chunk"]
+    for s in range(cache["n_slots"] - 1):
+        if (s + 1) % chunk:
+            assert devs[s] == devs[s + 1]
+    # drained run: per-device leak audit all zeros
+    assert be.kv_check(cache) == [0, 0, 0, 0]
+    st = be.block_stats(cache)
+    assert st["n_devices"] == 4 and len(st["per_device"]) == 4
+    assert st["unique_blocks"] == sum(
+        p["unique_blocks"] for p in st["per_device"])
+
+
+def test_gang_admission_stays_device_local():
+    cfg = get_config("mixtral-8x7b")
+    eng = FiddlerEngine(cfg, policy="fiddler", seed=0, n_fast_devices=2,
+                        expert_budget=24)
+    serving = ContinuousEngine(SimulatedBackend(eng, max_seq=128),
+                               n_slots=8, max_seq=128)
+    be = serving.backend
+    serving.submit(Request(rid="b0", prompt=[1, 5, 9], max_new_tokens=6,
+                           beam_width=3))
+    done = serving.run(max_steps=5_000, on_exhausted="raise")
+    assert len(done) == 1 and done[0].beam_tokens is not None
+    assert be.kv_check(serving.cache) == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# 1×1 mesh == single-device engine, fp32 bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mixtral():
+    return reduced_model("mixtral-8x7b")
+
+
+def _twin_engines(mixtral, **kw):
+    cfg, _, params = mixtral
+    kw.setdefault("policy", "fiddler")
+    kw.setdefault("host_precision", "fp32")
+    kw.setdefault("expert_budget", cfg.n_layers * cfg.moe.n_experts // 2)
+    plain = FiddlerEngine(cfg, params, **kw)
+    # the serve.py --mesh 1,1 path: no mesh object, one fast device, the
+    # global paged-KV block pool backing the decode caches
+    meshed = FiddlerEngine(cfg, params, mesh=make_serving_mesh("1,1"),
+                           n_fast_devices=1, kv_global_pool=True, **kw)
+    return cfg, plain, meshed
+
+
+def test_1x1_mesh_bit_identical_prefill_decode(mixtral):
+    cfg, plain, meshed = _twin_engines(mixtral)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (2, 10), 3,
+                                cfg.vocab_size)
+    outs = {}
+    for name, eng in (("plain", plain), ("mesh", meshed)):
+        rows = []
+        logits, caches = eng.prefill(tokens, max_seq=32)
+        rows.append(np.asarray(logits))
+        for step in range(2):
+            logits, caches = eng.decode_step(
+                caches, tokens[:, :1], pos=tokens.shape[1] + step, max_seq=32)
+            rows.append(np.asarray(logits))
+        outs[name] = np.stack(rows)
+    np.testing.assert_array_equal(outs["plain"], outs["mesh"])
+
+
+def test_1x1_mesh_bit_identical_beam(mixtral):
+    cfg, plain, meshed = _twin_engines(mixtral)
+    results = {}
+    for name, eng in (("plain", plain), ("mesh", meshed)):
+        serving = ContinuousEngine(FiddlerBackend(eng, max_seq=32),
+                                   n_slots=4, max_seq=32)
+        serving.submit(Request(rid="b", prompt=[1, 7, 4, 5],
+                               max_new_tokens=5, beam_width=2))
+        done = serving.run(max_steps=2_000, on_exhausted="raise")
+        assert len(done) == 1
+        results[name] = done[0]
+    np.testing.assert_array_equal(results["plain"].beam_tokens,
+                                  results["mesh"].beam_tokens)
+    np.testing.assert_array_equal(results["plain"].beam_scores,
+                                  results["mesh"].beam_scores)
